@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: reference-path wall time on CPU (structural),
+plus derived kernel roofline occupancy estimates for the TPU target.
+
+interpret-mode Pallas timing is Python-loop bound and NOT a TPU proxy, so
+the derived column reports the analytic VMEM/MXU roofline instead:
+bytes touched per tile vs. FLOPs per tile at the kernel's block shape.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.analysis.roofline import HW
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(emit):
+    key = jax.random.PRNGKey(0)
+    # flash attention tile analysis (Bq=Bk=128, hd=128)
+    Bq = Bk = 128
+    hd = 128
+    tile_flops = 2 * Bq * Bk * hd * 2           # qk + pv
+    tile_bytes = (Bq * hd + 2 * Bk * hd) * 2 + Bq * Bk * 4
+    intensity = tile_flops / tile_bytes
+    emit("kernel/flash_attention/tile_intensity_flops_per_byte", intensity,
+         f"mxu_bound={intensity > HW['peak_flops']/HW['hbm_bw']:.0f}")
+
+    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, k, v)
+    emit("kernel/flash_attention/ref_512seq", us, "cpu-jnp reference")
+
+    # rwkv6 chunked scan
+    r = jax.random.normal(key, (1, 8, 512, 64))
+    w = -jnp.exp(jax.random.normal(key, (1, 8, 512, 64)))
+    u = jax.random.normal(key, (8, 64))
+    us = _time(jax.jit(lambda a, b, c, d, e: ref.rwkv6_scan_ref(a, b, c, d, e)[0]),
+               r, r, r, w, u)
+    emit("kernel/rwkv6_scan/ref_512seq", us, "cpu-jnp reference")
+    chunk_flops = 64 * 64 * 64 * 2 * 3
+    chunk_bytes = (4 * 64 * 64) * 4 + 64 * 64 * 4
+    emit("kernel/rwkv6_scan/chunk_intensity", chunk_flops / chunk_bytes, "")
+
+    # segment reduce (γ)
+    vals = jax.random.normal(key, (100000,))
+    segs = jax.random.randint(key, (100000,), 0, 512)
+    us = _time(jax.jit(lambda a, b: ref.segment_reduce_ref(a, b, 512)), vals, segs)
+    emit("kernel/segment_reduce/ref_100k_rows", us, "cpu-jnp reference")
+    onehot_flops = 2 * 256 * 512
+    onehot_bytes = 256 * 4 + 512 * 4
+    emit("kernel/segment_reduce/block_intensity", onehot_flops / onehot_bytes,
+         "one-hot-matmul MXU form")
+
+    # join probe
+    build = jnp.arange(10000, dtype=jnp.int32)
+    probe = jax.random.randint(key, (200000,), 0, 10000, dtype=jnp.int32)
+    us = _time(jax.jit(lambda a, b: ref.join_probe_ref(a, b)), probe, build)
+    emit("kernel/join_probe/ref_200k_probes", us, "cpu-jnp reference")

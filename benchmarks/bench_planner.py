@@ -1,0 +1,46 @@
+"""Planner validation: Cobra's analytic plan costs vs. compiled dry-run.
+
+For each dry-run cell, compare the planner's predicted compute/collective
+terms for the SAME plan the dry-run used (fsdp_tp) against the
+cost_analysis-derived terms, and report the plan Cobra would pick instead.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.configs import SHAPES
+from repro.core.planner import PlanChoice, TPUCostModel, MeshShape, plan
+from repro.models.arch import get_arch
+from .bench_roofline import load_cells
+
+
+def main(emit):
+    cells = [c for c in load_cells() if c.get("status") == "ok"
+             and c.get("roofline")]
+    for c in cells[:80]:
+        cfg = get_arch(c["arch"])
+        spec = SHAPES[c["shape"]]
+        mesh = MeshShape(2, 16, 16) if c["mesh"] == "2x16x16" else \
+            MeshShape(1, 16, 16)
+        cm = TPUCostModel(cfg, spec["seq_len"], spec["global_batch"],
+                          c["kind"], mesh)
+        used = PlanChoice("fsdp_tp",
+                          c["policy"]["remat"], c["policy"]["microbatch"],
+                          c["policy"]["seq_shard"],
+                          "ep_all_to_all" if cfg.moe else "none")
+        pred = cm.terms(used)
+        meas = c["roofline"]
+        tag = f"planner/{c['arch']}/{c['shape']}/{c['mesh']}"
+        for term in ("compute_s", "collective_s"):
+            p, m = pred[term], meas[term]
+            ratio = p / m if m > 0 else float("inf")
+            emit(f"{tag}/{term}_pred_over_meas", ratio,
+                 f"pred={p:.3e};meas={m:.3e}")
+        picked = plan(cfg, spec["seq_len"], spec["global_batch"], c["kind"],
+                      mesh=(mesh.pod, mesh.data, mesh.model))
+        ch = picked["choice"]
+        gain = pred["step_s"] / picked["cost_s"] if picked["cost_s"] > 0 else 1.0
+        emit(f"{tag}/cobra_plan",
+             f"{ch.strategy}/r={ch.remat}/mb={ch.microbatch}/{ch.moe_mode}",
+             f"pred_speedup_vs_default={gain:.2f}x")

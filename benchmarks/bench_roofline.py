@@ -1,0 +1,52 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (CSV + summary).
+
+Reads reports/dryrun/*.json produced by ``python -m repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir: str = "reports/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main(emit):
+    cells = load_cells()
+    if not cells:
+        emit("roofline/no_dryrun_artifacts", 0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    ok = skipped = err = 0
+    for c in cells:
+        tag = f"roofline/{c['arch']}/{c['shape']}/{c.get('mesh')}"
+        if c.get("status") == "skipped":
+            skipped += 1
+            emit(tag, -1, "skipped:" + c.get("reason", "")[:40])
+            continue
+        if c.get("status") != "ok":
+            err += 1
+            emit(tag, -2, "error")
+            continue
+        ok += 1
+        rf = c.get("roofline", {})
+        if rf:
+            emit(tag + "/compute_s", rf["compute_s"] * 1e6, "")
+            emit(tag + "/memory_s", rf["memory_s"] * 1e6, "")
+            emit(tag + "/collective_s", rf["collective_s"] * 1e6, "")
+            emit(tag + "/dominant", rf["dominant"],
+                 f"frac={rf['roofline_fraction']:.4f};"
+                 f"useful={rf['useful_flops_ratio']:.3f}")
+        mem = c.get("full_compile", {}).get("memory", {})
+        if mem.get("total_hbm_bytes"):
+            emit(tag + "/hbm_gb", mem["total_hbm_bytes"] / 1e9 / 1,
+                 f"fits_16gb={mem['total_hbm_bytes']/c['n_devices'] < 16e9}"
+                 if c.get("n_devices") else "")
+    emit("roofline/cells_ok", ok, f"skipped={skipped};errors={err}")

@@ -1,0 +1,76 @@
+"""Experiments 1–3 (Fig. 13): P0/P1/P2 crossover under varying network and
+cardinalities, plus Cobra's cost-based choice.
+
+The paper's alternative space for these experiments is {P0, P1, P2}
+(generated with N1 + a T5 variation); we therefore restrict the rule set to
+exclude T3 for the faithful row, and ALSO report the full-rule-set Cobra
+(beyond-paper: T3∘T4j projection-pushed join) separately.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import CostCatalog, Interpreter, optimize
+from repro.core.rules import default_rules
+from repro.programs import make_orders_customer_db, make_p0, make_p1, make_p2
+from repro.relational.database import ClientEnv, FAST_LOCAL, SLOW_REMOTE
+
+
+def run_program(prog, db, net, init=None):
+    env = ClientEnv(db, net)
+    Interpreter(env, "fast").run(prog, init)
+    return env.clock
+
+
+def paper_rules():
+    return [r for r in default_rules() if r.name != "T3"]
+
+
+def crossover_rows(env_name: str, sweep: str = "orders"):
+    net = SLOW_REMOTE if env_name == "slow_remote" else FAST_LOCAL
+    rows = []
+    if sweep == "orders":
+        # Experiment 1/2: customers fixed (scaled-down 73k → 7300 for CPU
+        # runtime; the crossover structure is cardinality-RATIO driven)
+        n_cust = 7300
+        order_counts = [100, 1000, 5000, 20000, 100000]
+        cases = [(n, n_cust) for n in order_counts]
+    else:
+        # Experiment 3: orders fixed at 10k (scaled 1k), vary customers
+        cases = [(1000, c) for c in [500, 2000, 8000, 32000]]
+
+    for n_orders, n_cust in cases:
+        db = make_orders_customer_db(n_orders, n_cust)
+        t0 = run_program(make_p0(), db, net) if n_orders <= 20000 else None
+        t1 = run_program(make_p1(), db, net)
+        t2 = run_program(make_p2(), db, net)
+        res = optimize(make_p0(), db, CostCatalog(net), rules=paper_rules())
+        t_cobra = run_program(res.program, db, net)
+        body = repr(res.program.body)
+        pick = "P2" if "prefetch" in body else ("P1" if "JOIN" in body else "P0")
+        res_full = optimize(make_p0(), db, CostCatalog(net))
+        t_full = run_program(res_full.program, db, net)
+        correct = t_cobra <= min(x for x in (t0, t1, t2) if x is not None) * 1.02
+        rows.append({
+            "env": env_name, "orders": n_orders, "customers": n_cust,
+            "P0_s": t0, "P1_s": t1, "P2_s": t2,
+            "cobra_pick": pick, "cobra_s": t_cobra,
+            "cobra_correct": correct,
+            "cobra_fullrules_s": t_full,
+        })
+    return rows
+
+
+def main(emit):
+    for env in ("slow_remote", "fast_local"):
+        for row in crossover_rows(env, "orders"):
+            tag = f"exp_crossover/{row['env']}/o{row['orders']}_c{row['customers']}"
+            emit(tag + "/pick", row["cobra_pick"],
+                 f"correct={row['cobra_correct']}")
+            for k in ("P0_s", "P1_s", "P2_s", "cobra_s", "cobra_fullrules_s"):
+                if row[k] is not None:
+                    emit(tag + "/" + k, row[k] * 1e6, "simulated")
+    for row in crossover_rows("slow_remote", "customers"):
+        tag = f"exp3/c{row['customers']}"
+        emit(tag + "/pick", row["cobra_pick"], f"correct={row['cobra_correct']}")

@@ -1,0 +1,21 @@
+"""Optimization-time table (Sec. VIII: '<1 s for all programs')."""
+
+from __future__ import annotations
+
+from repro.core import CostCatalog, optimize
+from repro.programs import (WILOS_PROGRAMS, make_m0, make_orders_customer_db,
+                            make_p0, make_sales_db, make_wilos_db)
+from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
+
+
+def main(emit):
+    cases = [("P0", make_p0, lambda: make_orders_customer_db(1000, 500),
+              SLOW_REMOTE),
+             ("M0", make_m0, lambda: make_sales_db(1000), SLOW_REMOTE)]
+    cases += [(f"W_{pid}", maker, lambda: make_wilos_db(1000), FAST_LOCAL)
+              for pid, maker in WILOS_PROGRAMS.items()]
+    for name, maker, dbf, net in cases:
+        res = optimize(maker(), dbf(), CostCatalog(net))
+        emit(f"exp_opt_time/{name}", res.opt_time_s * 1e6,
+             f"under_1s={res.opt_time_s < 1.0};"
+             f"memo_nodes={res.memo_stats.get('and_nodes')}")

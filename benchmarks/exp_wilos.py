@@ -1,0 +1,56 @@
+"""Experiment 4 (Fig. 14/15): the six Wilos patterns A–F.
+
+Bars per pattern: Original, Heuristic ([4]: maximal SQL push, no prefetch),
+Cobra(AF=1), Cobra(AF=50). Setup mirrors the paper: fast local network,
+many-to-one ratio 10:1, ~20% selectivity; relation size scaled 1M → 20k for
+CPU wall-time (times are simulated; ratios are scale-stable).
+"""
+
+from __future__ import annotations
+
+from repro.core import CostCatalog, Interpreter, optimize
+from repro.programs import WILOS_PROGRAMS, make_wilos_db
+from repro.relational.database import ClientEnv, FAST_LOCAL
+
+N_BIG = 4000
+
+
+def run_program(prog, db, init=None):
+    env = ClientEnv(db, FAST_LOCAL)
+    Interpreter(env, "fast").run(prog, init)
+    return env.clock
+
+
+def wilos_rows():
+    rows = []
+    for pid, maker in WILOS_PROGRAMS.items():
+        init = {"worklist": [1, 3, 5, 7, 9, 11]} if pid == "E" else None
+        prog = maker()
+
+        def fresh():
+            return make_wilos_db(N_BIG, ratio=10)
+
+        t_orig = run_program(prog, fresh(), init)
+        res_h = optimize(prog, fresh(), CostCatalog(FAST_LOCAL),
+                         choice="heuristic")
+        t_heur = run_program(res_h.program, fresh(), init)
+        out = {"pattern": pid, "original_s": t_orig, "heuristic_s": t_heur}
+        for af in (1.0, 50.0):
+            res_c = optimize(prog, fresh(), CostCatalog(FAST_LOCAL, af=af))
+            t_c = run_program(res_c.program, fresh(), init)
+            out[f"cobra_af{int(af)}_s"] = t_c
+        out["cobra_never_worse"] = (
+            out["cobra_af50_s"] <= min(t_orig, t_heur) * 1.05
+            or out["cobra_af1_s"] <= min(t_orig, t_heur) * 1.05)
+        rows.append(out)
+    return rows
+
+
+def main(emit):
+    for row in wilos_rows():
+        tag = f"exp_wilos/{row['pattern']}"
+        base = row["original_s"]
+        for k in ("original_s", "heuristic_s", "cobra_af1_s", "cobra_af50_s"):
+            frac = row[k] / base if base else 0.0
+            emit(f"{tag}/{k}", row[k] * 1e6, f"frac_of_original={frac:.3f}")
+        emit(f"{tag}/never_worse", int(row["cobra_never_worse"]), "bool")

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  exp_crossover  Fig. 13 a/b/c  (P0/P1/P2 crossover + Cobra's choice)
+  exp_wilos      Fig. 14/15     (Wilos patterns A–F, 4 bars each)
+  exp_opt_time   Sec. VIII      (optimization time < 1 s)
+  bench_kernels  kernel tile/roofline analysis + CPU reference timings
+  bench_roofline §Roofline table from dry-run artifacts
+  bench_planner  planner-vs-XLA validation (beyond-paper)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+import sys
+import time
+
+
+def emit(name, value, derived=""):
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def main() -> None:
+    from . import (bench_kernels, bench_planner, bench_roofline,
+                   exp_crossover, exp_opt_time, exp_wilos)
+    mods = {"exp_crossover": exp_crossover, "exp_wilos": exp_wilos,
+            "exp_opt_time": exp_opt_time, "bench_kernels": bench_kernels,
+            "bench_roofline": bench_roofline, "bench_planner": bench_planner}
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(emit)
+            emit(f"{name}/__total_s", (time.time() - t0) * 1e6, "harness")
+        except Exception as e:  # keep the harness going
+            emit(f"{name}/__error", 0, repr(e)[:120])
+
+
+if __name__ == '__main__':
+    main()

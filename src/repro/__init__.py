@@ -1,0 +1,12 @@
+"""COBRA on TPU: cost-based rewriting of database applications (Emani &
+Sudarshan, 2018) as a production JAX framework.
+
+  repro.core        — the paper: regions, F-IR, Region DAG, rules, search
+  repro.core.planner — the technique applied to distributed execution
+  repro.relational  — columnar JAX tables + simulated DB environment
+  repro.models      — the 10 assigned architectures
+  repro.kernels     — Pallas TPU kernels (+ jnp oracles)
+  repro.launch      — meshes, sharding, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

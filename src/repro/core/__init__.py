@@ -1,0 +1,29 @@
+"""Cobra core: regions, F-IR, Region AND-OR DAG, rules, cost model, search.
+
+The paper's primary contribution — cost-based rewriting of database
+applications via a Volcano/Cascades memo over program regions.
+"""
+
+from .regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
+                      CondRegion, IBin, ICacheLookup, ICall, IConst,
+                      IEmptyList, IEmptyMap, IField, ILoadAll, INav,
+                      Interpreter, IQuery, IQueryValues, IScalarQuery, IVar,
+                      LoopRegion, MapPut, NoOp, Prefetch, Program, Region,
+                      SeqRegion, UpdateRow, register_function, seq)
+from .fir import (FIRConversionError, eval_fir, fir_to_region, loop_to_fir)
+from .dag import AndNode, Memo, Rule, expand
+from .rules import RuleContext, build_memo, default_rules
+from .cost import CostCatalog, CostModel
+from .search import OptimizationResult, Plan, optimize
+
+__all__ = [
+    "Assign", "BasicBlock", "CacheByColumn", "CollectionAdd", "CondRegion",
+    "IBin", "ICacheLookup", "ICall", "IConst", "IEmptyList", "IEmptyMap",
+    "IField", "ILoadAll", "INav", "Interpreter", "IQuery", "IQueryValues",
+    "IScalarQuery", "IVar", "LoopRegion", "MapPut", "NoOp", "Prefetch",
+    "Program", "Region", "SeqRegion", "UpdateRow", "register_function", "seq",
+    "FIRConversionError", "eval_fir", "fir_to_region", "loop_to_fir",
+    "AndNode", "Memo", "Rule", "expand", "RuleContext", "build_memo",
+    "default_rules", "CostCatalog", "CostModel", "OptimizationResult", "Plan",
+    "optimize",
+]

@@ -1,0 +1,194 @@
+"""Cobra's cost model (Sec. VI, Fig. 12).
+
+    C_Q        = C_NRT + C_Q^F + max(N_Q · S_row(Q) / BW,  C_Q^L − C_Q^F)
+    C_prefetch = C_Q / AF_Q
+    C_seq      = Σ children
+    C_cond     = p·C_true + (1−p)·C_false + C_p
+    C_fold     = N_Q · C_f + C_Db(Q)
+    C_loop     = K · C_body          (non-fold loops; K estimated)
+    C_block    = Σ C_Z per statement
+    other F-IR operators: C_Y each
+
+All database-dependent terms (N_Q, S_row, C_Q^F, C_Q^L) come from
+``DatabaseServer.estimate`` — statistics only, never true execution (the
+paper consulted the DB optimizer the same way). ORM point lookups are
+costed with the Hibernate id-cache modeled: first access per distinct key
+is a round trip, the rest are local hits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from ..relational.algebra import Cmp, Col, Param, Query, Scan, Select
+from ..relational.database import DatabaseServer, NetworkProfile
+from .fir import (FAcc, FBin, FCacheLookupAllE, FCacheLookupE, FCall, FCondE,
+                  FConst, FExpr, FField, FFoldE, FInsert, FMapPutE,
+                  FPointLookup, FProjectE, FQueryE, FRow, FSelLookupE, FSeqE,
+                  FTupleE, FVarRef, fir_children)
+
+__all__ = ["CostCatalog", "CostModel"]
+
+
+@dataclasses.dataclass
+class CostCatalog:
+    """The tunable cost-catalog file of Sec. VIII."""
+
+    network: NetworkProfile
+    c_z: float = 30e-9          # per imperative statement (paper: 30 ns)
+    c_y: float = 30e-9          # per F-IR operator evaluation
+    af: float = 1.0             # amortization factor AF_Q
+    loop_iters_default: float = 1000.0
+    cond_prob_default: float = 0.5
+
+
+class CostModel:
+    def __init__(self, db: DatabaseServer, catalog: CostCatalog):
+        self.db = db
+        self.cat = catalog
+
+    # ------------------------------------------------------------- queries
+    def query_cost(self, q: Query) -> float:
+        est = self.db.estimate(q)
+        transfer = est.result_bytes / self.cat.network.bandwidth_bytes_per_s
+        return (self.cat.network.c_nrt + est.first_row_s
+                + max(transfer, est.last_row_s - est.first_row_s))
+
+    def query_rows(self, q: Query) -> float:
+        return self.db.estimate(q).n_rows
+
+    def prefetch_cost(self, q: Query) -> float:
+        return self.query_cost(q) / max(self.cat.af, 1e-9)
+
+    def point_query_cost(self, table: str) -> float:
+        """One indexed point lookup round trip."""
+        m = self.db.model
+        st = self.db.stats(table)
+        transfer = st.row_bytes / self.cat.network.bandwidth_bytes_per_s
+        server = m.startup_s + m.index_lookup_s
+        return self.cat.network.c_nrt + server + transfer
+
+    def ndv(self, table: str, col: str) -> float:
+        return float(self.db.stats(table).ndv(col))
+
+    # ---------------------------------------------------------------- fold
+    def fold_source(self, fold: FFoldE) -> Tuple[float, float]:
+        """(C_Db(Q), N_Q) for the fold's source."""
+        src = fold.source
+        if isinstance(src, FQueryE):
+            return self.query_cost(src.query), self.query_rows(src.query)
+        if isinstance(src, FSelLookupE):
+            q = Select(Cmp("==", Col(src.key_col), Param("k")), Scan(src.table))
+            return self.query_cost(q), self.db.estimate(q).n_rows
+        if isinstance(src, FCacheLookupAllE):
+            total = self.db.stats(src.table).nrows
+            rows = total / max(self.ndv(src.table, src.key_col), 1.0)
+            return self.cat.c_y, rows
+        raise TypeError(f"fold source {src!r}")
+
+    def slot_row_cost(self, expr: FExpr, n_rows: float) -> float:
+        """Per-row cost C_f of one tuple slot's update expression.
+
+        Dependent aggregations were inlined at construction, so each slot is
+        self-contained."""
+        c = self.cat
+        if isinstance(expr, FCondE):
+            # ?(pred, g): pred evaluated every row; g on p fraction
+            p = c.cond_prob_default
+            return (self._ops_cost(expr.pred, n_rows)
+                    + p * self.slot_row_cost(expr.then, n_rows) + c.c_y)
+        return self._ops_cost(expr, n_rows)
+
+    def _ops_cost(self, e: FExpr, n_rows: float) -> float:
+        c = self.cat
+        if isinstance(e, FPointLookup):
+            # ORM id-cache: distinct keys pay a round trip once; rest are hits
+            ndv = min(n_rows, self.ndv(e.table, e.key_col))
+            per_row = (ndv * self.point_query_cost(e.table)
+                       + (n_rows - ndv) * c.c_z) / max(n_rows, 1.0)
+            return per_row + self._ops_cost(e.keyexpr, n_rows)
+        if isinstance(e, FCacheLookupE):
+            return c.c_y + self._ops_cost(e.keyexpr, n_rows)
+        if isinstance(e, FFoldE):
+            # nested fold: per-OUTER-row cost of running the inner loop
+            src = e.source
+            if isinstance(src, FQueryE):
+                inner_q_cost = self.query_cost_correlated(src.query)
+                inner_rows = self.query_rows_correlated(src.query)
+            elif isinstance(src, FSelLookupE):
+                q = Select(Cmp("==", Col(src.key_col), Param("k")), Scan(src.table))
+                inner_q_cost = self.query_cost(q)
+                inner_rows = self.db.estimate(q).n_rows
+            elif isinstance(src, FCacheLookupAllE):
+                inner_q_cost = c.c_y
+                total = self.db.stats(src.table).nrows
+                inner_rows = total / max(self.ndv(src.table, src.key_col), 1.0)
+            else:
+                inner_q_cost = c.c_y
+                inner_rows = self.cat.loop_iters_default
+            assert isinstance(e.func, FTupleE)
+            per_inner = sum(self.slot_row_cost(i, inner_rows) for i in e.func.items)
+            return inner_q_cost + inner_rows * (per_inner + c.c_z)
+        if isinstance(e, FQueryE):
+            return self.query_cost(e.query)
+        base = c.c_y
+        for k in fir_children(e):
+            base += self._ops_cost(k, n_rows)
+        return base
+
+    # correlated query (σ with Param): selectivity from stats
+    def query_cost_correlated(self, q: Query) -> float:
+        return self.query_cost(q)
+
+    def query_rows_correlated(self, q: Query) -> float:
+        return self.db.estimate(q).n_rows
+
+    # --------------------------------------------------------- region costs
+    def block_cost(self, stmt) -> float:
+        """Imperative statement cost: C_Z + any embedded query costs."""
+        from .regions import (Assign, CacheByColumn, CollectionAdd, ILoadAll,
+                              INav, IQuery, MapPut, Prefetch, UpdateRow)
+        c = self.cat.c_z
+        if isinstance(stmt, Prefetch):
+            return self.prefetch_cost(stmt.query)
+        if isinstance(stmt, CacheByColumn):
+            return c  # hash-index build charged per-row at runtime; est. small
+        if isinstance(stmt, UpdateRow):
+            return self.cat.network.c_nrt + self.db.model.index_lookup_s
+        expr = getattr(stmt, "expr", None)
+        if expr is not None:
+            c += self._iexpr_cost(expr)
+        for attr in ("keyexpr", "valexpr"):
+            e2 = getattr(stmt, attr, None)
+            if e2 is not None:
+                c += self._iexpr_cost(e2)
+        return c
+
+    def _iexpr_cost(self, e) -> float:
+        from .regions import IBin, ICacheLookup, ICall, IField, ILoadAll, INav, IQuery
+        if isinstance(e, IQuery):
+            return self.query_cost(e.query)
+        if isinstance(e, ILoadAll):
+            return self.query_cost(Scan(e.table))
+        if isinstance(e, INav):
+            return self.point_query_cost(e.target)
+        if isinstance(e, ICacheLookup):
+            return self.cat.c_y
+        out = 0.0
+        for attr in ("left", "right", "base", "keyexpr"):
+            k = getattr(e, attr, None)
+            if k is not None and hasattr(k, "key"):
+                out += self._iexpr_cost(k) if not isinstance(k, str) else 0.0
+        for k in getattr(e, "args", ()):
+            out += self._iexpr_cost(k)
+        return out
+
+    def loop_iters(self, source) -> float:
+        """K for non-fold loops."""
+        from .regions import ILoadAll, IQuery, IVar
+        if isinstance(source, IQuery):
+            return self.query_rows(source.query)
+        if isinstance(source, ILoadAll):
+            return float(self.db.stats(source.table).nrows)
+        return self.cat.loop_iters_default

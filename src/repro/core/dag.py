@@ -1,0 +1,176 @@
+"""The Region AND-OR DAG ("Region DAG", Sec. IV-B) — a Volcano/Cascades memo.
+
+OR-nodes are *groups*: equivalence classes of regions/expressions — every
+member computes the same state transition. AND-nodes are operators (`seq`,
+`loop`, `cond`, `block`, and the F-IR operators) over child groups.
+
+Volcano essentials implemented here:
+
+  * **hash-consing** of AND-nodes: (op, child-group-ids, payload) → unique id,
+    so re-derived expressions are detected as duplicates and cyclic rule sets
+    (e.g. T2 ↔ N2) terminate;
+  * **group union**: when a rule derives, inside group A, an expression whose
+    root AND-node already belongs to group B, groups A and B are merged
+    (union-find), exactly like Volcano's node merging;
+  * **saturating expansion**: rules fire once per (AND-node, rule) pair until
+    no rule produces anything new.
+
+Payloads hold leaf content (a `Stmt`, an F-IR expr fragment, a `Query`) and
+operator attributes (loop var/source, cond predicate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["AndNode", "Memo", "Rule", "GroupId", "AndId"]
+
+GroupId = int
+AndId = int
+
+
+@dataclasses.dataclass(frozen=True)
+class AndNode:
+    """(operator, ordered child groups, payload). Payload must be hashable."""
+
+    op: str
+    children: Tuple[GroupId, ...]
+    payload: object = None
+
+    def key(self, canon: Callable[[GroupId], GroupId]) -> Tuple:
+        payload_key = self.payload.key() if hasattr(self.payload, "key") else self.payload
+        return (self.op, tuple(canon(c) for c in self.children), payload_key)
+
+
+class Memo:
+    def __init__(self):
+        self._groups: Dict[GroupId, Set[AndId]] = {}
+        self._ands: Dict[AndId, AndNode] = {}
+        self._owner: Dict[AndId, GroupId] = {}
+        self._and_index: Dict[Tuple, AndId] = {}
+        self._parent: Dict[GroupId, GroupId] = {}  # union-find
+        self._next_group = itertools.count()
+        self._next_and = itertools.count()
+        self.merges = 0
+        self.duplicates = 0
+
+    # -------------------------------------------------------------- groups
+    def find(self, g: GroupId) -> GroupId:
+        while self._parent.get(g, g) != g:
+            self._parent[g] = self._parent.get(self._parent[g], self._parent[g])
+            g = self._parent[g]
+        return g
+
+    def new_group(self) -> GroupId:
+        g = next(self._next_group)
+        self._groups[g] = set()
+        self._parent[g] = g
+        return g
+
+    def members(self, g: GroupId) -> Tuple[AndId, ...]:
+        return tuple(sorted(self._groups[self.find(g)]))
+
+    def groups(self) -> List[GroupId]:
+        return sorted({self.find(g) for g in self._groups})
+
+    def node(self, a: AndId) -> AndNode:
+        return self._ands[a]
+
+    def owner(self, a: AndId) -> GroupId:
+        return self.find(self._owner[a])
+
+    def canonical_children(self, a: AndId) -> Tuple[GroupId, ...]:
+        return tuple(self.find(c) for c in self._ands[a].children)
+
+    # --------------------------------------------------------------- insert
+    def insert(self, node: AndNode, group: Optional[GroupId] = None) -> Tuple[GroupId, AndId]:
+        """Insert an AND-node as an alternative of `group` (or a new group).
+
+        Duplicate detection: if an identical node exists, reuse it; if it lives
+        in a different group than requested, the groups are MERGED (they have
+        been proven to compute the same transition)."""
+        key = node.key(self.find)
+        existing = self._and_index.get(key)
+        if existing is not None:
+            self.duplicates += 1
+            owner = self.owner(existing)
+            if group is not None and self.find(group) != owner:
+                self._union(owner, self.find(group))
+            return self.owner(existing), existing
+        a = next(self._next_and)
+        node = AndNode(node.op, tuple(self.find(c) for c in node.children), node.payload)
+        self._ands[a] = node
+        g = self.find(group) if group is not None else self.new_group()
+        self._groups[g].add(a)
+        self._owner[a] = g
+        self._and_index[key] = a
+        return g, a
+
+    def _union(self, a: GroupId, b: GroupId) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return
+        self.merges += 1
+        # merge smaller into larger
+        if len(self._groups[ra]) < len(self._groups[rb]):
+            ra, rb = rb, ra
+        self._groups[ra] |= self._groups[rb]
+        for m in self._groups[rb]:
+            self._owner[m] = ra
+        self._groups[rb] = set()
+        self._parent[rb] = ra
+        # child references are canonicalized lazily via find()
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        return {
+            "groups": len(self.groups()),
+            "and_nodes": len(self._ands),
+            "duplicates_detected": self.duplicates,
+            "group_merges": self.merges,
+        }
+
+
+@dataclasses.dataclass
+class Rule:
+    """A transformation rule: matches an AND-node, adds alternatives.
+
+    `apply(memo, and_id, ctx) -> list of (AndNode trees)` — implementations
+    insert directly via memo.insert(..., group=owner) and return how many
+    alternatives they added (for fixpoint detection)."""
+
+    name: str
+    op: str  # root operator this rule matches ("fold", "loop", ...)
+    fn: Callable  # (memo, and_id, ctx) -> int (number of new alternatives)
+
+    def apply(self, memo: Memo, and_id: AndId, ctx) -> int:
+        return self.fn(memo, and_id, ctx)
+
+
+def expand(memo: Memo, rules: Sequence[Rule], ctx, max_rounds: int = 64) -> Dict[str, int]:
+    """Saturate: apply every rule to every matching AND-node until fixpoint.
+
+    Each (and_id, rule) fires at most once — with hash-consing this guarantees
+    termination even for cyclic rule sets (Sec. III-A)."""
+    fired: Set[Tuple[AndId, str]] = set()
+    rounds = 0
+    total_new = 0
+    while rounds < max_rounds:
+        rounds += 1
+        new = 0
+        for a in list(memo._ands):
+            node = memo._ands[a]
+            for r in rules:
+                if r.op != node.op and r.op != "*":
+                    continue
+                tag = (a, r.name)
+                if tag in fired:
+                    continue
+                fired.add(tag)
+                new += r.apply(memo, a, ctx)
+        total_new += new
+        if new == 0:
+            break
+    return {"rounds": rounds, "alternatives_added": total_new, **memo.stats()}

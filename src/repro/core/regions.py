@@ -1,0 +1,727 @@
+"""Imperative program IR with single-entry/single-exit regions (Sec. III-B, IV).
+
+A program is a tree of regions:
+
+    BasicBlock   — one statement (the paper treats each statement as a block)
+    SeqRegion    — ordered children
+    LoopRegion   — cursor loop ``for (t : <source>) { body }``
+    CondRegion   — if/else
+
+Regions are *state transitions* ``R : X0 → X1`` (Sec. IV-A); the state is the
+environment of program variables. Two interpreters execute regions against a
+``ClientEnv`` (simulated client/server database, Sec. VIII):
+
+  * ``Interpreter(mode="exact")`` — row-at-a-time semantics, the ground truth.
+  * ``Interpreter(mode="fast")``  — vectorized execution of recognized cursor-
+    loop bodies (columnar jnp compute) charging identical simulated time.
+    Property-tested equivalent to ``exact`` (tests/test_properties.py).
+
+Statement/expression vocabulary covers the paper's workloads: ORM loadAll /
+relationship navigation (the N+1 pattern), executeQuery, prefetch +
+cacheByColumn/lookup (footnote 3), collection/map accumulation, scalar
+aggregation, and DB updates (left intact by F-IR, Sec. V-A).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..relational.algebra import Param, Query, Scan, Select
+from ..relational.database import ClientEnv
+from ..relational.table import Table
+
+__all__ = [
+    # expressions
+    "IExpr", "IConst", "IVar", "IField", "IBin", "ICall", "IQuery", "ILoadAll",
+    "INav", "ICacheLookup", "IEmptyList", "IEmptyMap", "ILen", "IScalarQuery",
+    "IQueryValues",
+    # statements
+    "Stmt", "Assign", "CollectionAdd", "MapPut", "Prefetch", "CacheByColumn",
+    "UpdateRow", "NoOp",
+    # regions
+    "Region", "BasicBlock", "SeqRegion", "LoopRegion", "CondRegion", "Program",
+    "Interpreter", "register_function", "get_function",
+]
+
+# --------------------------------------------------------------------------
+# Registered pure functions (like myFunc in Fig. 3) — must be jnp-vectorizable
+# --------------------------------------------------------------------------
+
+_FUNCTIONS: Dict[str, Callable] = {
+    "myFunc": lambda *args: sum(a * (i + 1) for i, a in enumerate(args)),
+    "combine": lambda a, b: a * 31 + b,
+    "scale": lambda a: a * 3,
+}
+
+
+def register_function(name: str, fn: Callable) -> None:
+    _FUNCTIONS[name] = fn
+    # the SQL-translation rules (T3/T4) push calls into relational computed
+    # columns, so every program function is also a relational scalar func
+    from ..relational.algebra import register_scalar_func
+    register_scalar_func(name, fn)
+
+
+def _register_builtins() -> None:
+    for _n, _f in list(_FUNCTIONS.items()):
+        register_function(_n, _f)
+
+
+def get_function(name: str) -> Callable:
+    return _FUNCTIONS[name]
+
+
+# --------------------------------------------------------------------------
+# Expressions
+# --------------------------------------------------------------------------
+
+class IExpr:
+    def key(self) -> Tuple:
+        raise NotImplementedError
+
+    def __hash__(self):
+        return hash(self.key())
+
+    def __eq__(self, other):
+        return isinstance(other, IExpr) and self.key() == other.key()
+
+    def free_vars(self) -> Tuple[str, ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IConst(IExpr):
+    value: object
+
+    def key(self):
+        return ("iconst", self.value)
+
+    def __repr__(self):
+        return repr(self.value)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IVar(IExpr):
+    name: str
+
+    def key(self):
+        return ("ivar", self.name)
+
+    def free_vars(self):
+        return (self.name,)
+
+    def __repr__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IField(IExpr):
+    """Row-field access ``t.col`` where ``t`` holds a row (dict)."""
+
+    base: IExpr
+    field: str
+
+    def key(self):
+        return ("ifield", self.base.key(), self.field)
+
+    def free_vars(self):
+        return self.base.free_vars()
+
+    def __repr__(self):
+        return f"{self.base!r}.{self.field}"
+
+
+_BIN_OPS: Dict[str, Callable] = {
+    "+": lambda a, b: a + b, "-": lambda a, b: a - b, "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "==": lambda a, b: a == b, "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b, "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b, ">=": lambda a, b: a >= b,
+    "and": lambda a, b: jnp.logical_and(a, b) if isinstance(a, jnp.ndarray) else (a and b),
+    "or": lambda a, b: jnp.logical_or(a, b) if isinstance(a, jnp.ndarray) else (a or b),
+    "min": lambda a, b: jnp.minimum(a, b) if isinstance(a, jnp.ndarray) else min(a, b),
+    "max": lambda a, b: jnp.maximum(a, b) if isinstance(a, jnp.ndarray) else max(a, b),
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IBin(IExpr):
+    op: str
+    left: IExpr
+    right: IExpr
+
+    def key(self):
+        return ("ibin", self.op, self.left.key(), self.right.key())
+
+    def free_vars(self):
+        return self.left.free_vars() + self.right.free_vars()
+
+    def __repr__(self):
+        return f"({self.left!r} {self.op} {self.right!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ICall(IExpr):
+    func: str
+    args: Tuple[IExpr, ...]
+
+    def key(self):
+        return ("icall", self.func, tuple(a.key() for a in self.args))
+
+    def free_vars(self):
+        out: Tuple[str, ...] = ()
+        for a in self.args:
+            out += a.free_vars()
+        return out
+
+    def __repr__(self):
+        return f"{self.func}({', '.join(map(repr, self.args))})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IQuery(IExpr):
+    """``executeQuery(q)`` — q may contain Param(:p) bound from imperative exprs."""
+
+    query: Query
+    bindings: Tuple[Tuple[str, IExpr], ...] = ()
+
+    def key(self):
+        return ("iquery", self.query.key(), tuple((n, e.key()) for n, e in self.bindings))
+
+    def free_vars(self):
+        out: Tuple[str, ...] = ()
+        for _, e in self.bindings:
+            out += e.free_vars()
+        return out
+
+    def __repr__(self):
+        return f"executeQuery({self.query.sql()!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ILoadAll(IExpr):
+    """ORM ``loadAll(Entity.class)`` — a full-table fetch."""
+
+    table: str
+
+    def key(self):
+        return ("iloadall", self.table)
+
+    def __repr__(self):
+        return f"loadAll({self.table})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class INav(IExpr):
+    """ORM relationship navigation ``o.customer`` → lazy point query.
+
+    ``base.fk_field`` is the foreign key; resolves one row of ``target``
+    (keyed by ``target_key``) through the ORM id-cache.
+    """
+
+    base: IExpr
+    fk_field: str
+    target: str
+    target_key: str
+
+    def key(self):
+        return ("inav", self.base.key(), self.fk_field, self.target, self.target_key)
+
+    def free_vars(self):
+        return self.base.free_vars()
+
+    def __repr__(self):
+        return f"{self.base!r}->{self.target}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ICacheLookup(IExpr):
+    """``Utils.lookupCache`` over a prefetched, column-keyed cache."""
+
+    table: str
+    col: str
+    keyexpr: IExpr
+    all_matches: bool = False  # True → list of rows, False → single row
+
+    def key(self):
+        return ("icachelookup", self.table, self.col, self.keyexpr.key(), self.all_matches)
+
+    def free_vars(self):
+        return self.keyexpr.free_vars()
+
+    def __repr__(self):
+        return f"lookupCache({self.table}.{self.col}, {self.keyexpr!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IScalarQuery(IExpr):
+    """Execute a query and return one scalar (first row of `col`; 0 if empty)."""
+
+    query: Query
+    col: str
+    bindings: Tuple[Tuple[str, "IExpr"], ...] = ()
+
+    def key(self):
+        return ("iscalarquery", self.query.key(), self.col,
+                tuple((n, e.key()) for n, e in self.bindings))
+
+    def free_vars(self):
+        out: Tuple[str, ...] = ()
+        for _, e in self.bindings:
+            out += e.free_vars()
+        return out
+
+    def __repr__(self):
+        return f"scalarQuery({self.query.sql()!r}, {self.col})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IQueryValues(IExpr):
+    """Execute a query and return `col` as a Python list (collection value)."""
+
+    query: Query
+    col: str
+
+    def key(self):
+        return ("iqueryvalues", self.query.key(), self.col)
+
+    def __repr__(self):
+        return f"queryValues({self.query.sql()!r}, {self.col})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IEmptyList(IExpr):
+    def key(self):
+        return ("iemptylist",)
+
+    def __repr__(self):
+        return "{}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IEmptyMap(IExpr):
+    def key(self):
+        return ("iemptymap",)
+
+    def __repr__(self):
+        return "Map()"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ILen(IExpr):
+    base: IExpr
+
+    def key(self):
+        return ("ilen", self.base.key())
+
+    def free_vars(self):
+        return self.base.free_vars()
+
+    def __repr__(self):
+        return f"len({self.base!r})"
+
+
+# --------------------------------------------------------------------------
+# Statements
+# --------------------------------------------------------------------------
+
+class Stmt:
+    def key(self) -> Tuple:
+        raise NotImplementedError
+
+    def __hash__(self):
+        return hash(self.key())
+
+    def __eq__(self, other):
+        return isinstance(other, Stmt) and self.key() == other.key()
+
+    def defs(self) -> Tuple[str, ...]:
+        return ()
+
+    def uses(self) -> Tuple[str, ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Assign(Stmt):
+    target: str
+    expr: IExpr
+
+    def key(self):
+        return ("assign", self.target, self.expr.key())
+
+    def defs(self):
+        return (self.target,)
+
+    def uses(self):
+        return self.expr.free_vars()
+
+    def __repr__(self):
+        return f"{self.target} = {self.expr!r}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CollectionAdd(Stmt):
+    target: str
+    expr: IExpr
+
+    def key(self):
+        return ("colladd", self.target, self.expr.key())
+
+    def defs(self):
+        return (self.target,)
+
+    def uses(self):
+        return (self.target,) + self.expr.free_vars()
+
+    def __repr__(self):
+        return f"{self.target}.add({self.expr!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MapPut(Stmt):
+    target: str
+    keyexpr: IExpr
+    valexpr: IExpr
+
+    def key(self):
+        return ("mapput", self.target, self.keyexpr.key(), self.valexpr.key())
+
+    def defs(self):
+        return (self.target,)
+
+    def uses(self):
+        return (self.target,) + self.keyexpr.free_vars() + self.valexpr.free_vars()
+
+    def __repr__(self):
+        return f"{self.target}.put({self.keyexpr!r}, {self.valexpr!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Prefetch(Stmt):
+    """``prefetch(R, A)``: fetch a query result and cache it keyed by column A."""
+
+    query: Query
+    col: str
+    cache_name: Optional[str] = None  # defaults to root table name
+
+    def key(self):
+        return ("prefetch", self.query.key(), self.col)
+
+    def __repr__(self):
+        return f"prefetch({self.query.sql()!r}, by={self.col})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CacheByColumn(Stmt):
+    """``Utils.cacheByColumn(collection_var, col)`` on an already-fetched table."""
+
+    var: str
+    col: str
+
+    def key(self):
+        return ("cachebycolumn", self.var, self.col)
+
+    def uses(self):
+        return (self.var,)
+
+    def __repr__(self):
+        return f"cacheByColumn({self.var}, {self.col!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class UpdateRow(Stmt):
+    """DB update — F-IR leaves updates intact (Sec. V limitations)."""
+
+    table: str
+    set_col: str
+    val: IExpr
+    key_col: str
+    keyexpr: IExpr
+
+    def key(self):
+        return ("update", self.table, self.set_col, self.val.key(),
+                self.key_col, self.keyexpr.key())
+
+    def uses(self):
+        return self.val.free_vars() + self.keyexpr.free_vars()
+
+    def __repr__(self):
+        return (f"UPDATE {self.table} SET {self.set_col}={self.val!r} "
+                f"WHERE {self.key_col}={self.keyexpr!r}")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NoOp(Stmt):
+    note: str = ""
+
+    def key(self):
+        return ("noop", self.note)
+
+    def __repr__(self):
+        return f"noop({self.note})"
+
+
+# --------------------------------------------------------------------------
+# Regions
+# --------------------------------------------------------------------------
+
+_region_counter = itertools.count()
+
+
+class Region:
+    label: str
+
+    def key(self) -> Tuple:
+        raise NotImplementedError
+
+    def __hash__(self):
+        return hash(self.key())
+
+    def __eq__(self, other):
+        return isinstance(other, Region) and self.key() == other.key()
+
+    def children(self) -> Tuple["Region", ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BasicBlock(Region):
+    stmt: Stmt
+    label: str = ""
+
+    def key(self):
+        return ("B", self.stmt.key())
+
+    def __repr__(self):
+        return f"B[{self.stmt!r}]"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SeqRegion(Region):
+    parts: Tuple[Region, ...]
+    label: str = ""
+
+    def key(self):
+        return ("S", tuple(p.key() for p in self.parts))
+
+    def children(self):
+        return self.parts
+
+    def __repr__(self):
+        return "S[" + "; ".join(map(repr, self.parts)) + "]"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LoopRegion(Region):
+    """Cursor loop ``for (var : source) body``. Source: IQuery/ILoadAll/IVar."""
+
+    var: str
+    source: IExpr
+    body: Region
+    label: str = ""
+
+    def key(self):
+        return ("L", self.var, self.source.key(), self.body.key())
+
+    def children(self):
+        return (self.body,)
+
+    def __repr__(self):
+        return f"L[for {self.var} : {self.source!r} {{ {self.body!r} }}]"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CondRegion(Region):
+    pred: IExpr
+    then_r: Region
+    else_r: Optional[Region] = None
+    label: str = ""
+
+    def key(self):
+        return ("C", self.pred.key(), self.then_r.key(),
+                self.else_r.key() if self.else_r else None)
+
+    def children(self):
+        return (self.then_r,) + ((self.else_r,) if self.else_r else ())
+
+    def __repr__(self):
+        e = f" else {{ {self.else_r!r} }}" if self.else_r else ""
+        return f"C[if {self.pred!r} {{ {self.then_r!r} }}{e}]"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Program:
+    """Outermost region + the variables whose final values are the output state."""
+
+    name: str
+    body: Region
+    outputs: Tuple[str, ...]
+    inputs: Tuple[Tuple[str, object], ...] = ()
+
+    def key(self):
+        return ("P", self.name, self.body.key(), self.outputs)
+
+
+def seq(*parts: Union[Region, Stmt]) -> SeqRegion:
+    rs = tuple(BasicBlock(p) if isinstance(p, Stmt) else p for p in parts)
+    return SeqRegion(rs)
+
+
+# --------------------------------------------------------------------------
+# Interpreter
+# --------------------------------------------------------------------------
+
+class _Row(dict):
+    """A row value; dict with attribute-ish access by field name."""
+
+
+class Interpreter:
+    """Executes regions against a ClientEnv; accumulates simulated time there."""
+
+    def __init__(self, env: ClientEnv, mode: str = "exact"):
+        assert mode in ("exact", "fast")
+        self.env = env
+        self.mode = mode
+
+    # ------------------------------------------------------------ public API
+    def run(self, program: Program, init_state: Optional[Mapping[str, object]] = None
+            ) -> Dict[str, object]:
+        state: Dict[str, object] = dict(program.inputs)
+        if init_state:
+            state.update(init_state)
+        self.exec_region(program.body, state)
+        return {v: state.get(v) for v in program.outputs}
+
+    # ---------------------------------------------------------------- exprs
+    def eval(self, e: IExpr, state: Dict[str, object]):
+        env = self.env
+        if isinstance(e, IConst):
+            return e.value
+        if isinstance(e, IVar):
+            return state[e.name]
+        if isinstance(e, IField):
+            row = self.eval(e.base, state)
+            return row[e.field]
+        if isinstance(e, IBin):
+            return _BIN_OPS[e.op](self.eval(e.left, state), self.eval(e.right, state))
+        if isinstance(e, ICall):
+            return _FUNCTIONS[e.func](*[self.eval(a, state) for a in e.args])
+        if isinstance(e, IQuery):
+            params = {n: self.eval(x, state) for n, x in e.bindings}
+            return env.execute_query(e.query, params or None)
+        if isinstance(e, ILoadAll):
+            return env.execute_query(Scan(e.table))
+        if isinstance(e, INav):
+            row = self.eval(e.base, state)
+            return env.point_lookup(e.target, e.target_key, row[e.fk_field])
+        if isinstance(e, ICacheLookup):
+            k = self.eval(e.keyexpr, state)
+            if e.all_matches:
+                return env.lookup_cache_all(e.table, e.col, k)
+            return env.lookup_cache(e.table, e.col, k)
+        if isinstance(e, IScalarQuery):
+            params = {n: self.eval(x, state) for n, x in e.bindings}
+            t = env.execute_query(e.query, params or None)
+            if t.nrows == 0:
+                return 0
+            return t.column(e.col)[0].item()
+        if isinstance(e, IQueryValues):
+            t = env.execute_query(e.query)
+            return np.asarray(t.column(e.col)).tolist()
+        if isinstance(e, IEmptyList):
+            return []
+        if isinstance(e, IEmptyMap):
+            return {}
+        if isinstance(e, ILen):
+            v = self.eval(e.base, state)
+            return v.nrows if isinstance(v, Table) else len(v)
+        raise TypeError(f"cannot eval {e!r}")
+
+    # ----------------------------------------------------------- statements
+    def exec_stmt(self, s: Stmt, state: Dict[str, object]) -> None:
+        env = self.env
+        if isinstance(s, Assign):
+            env.charge_statement()
+            state[s.target] = self.eval(s.expr, state)
+        elif isinstance(s, CollectionAdd):
+            env.charge_statement()
+            state.setdefault(s.target, [])
+            state[s.target].append(self.eval(s.expr, state))
+        elif isinstance(s, MapPut):
+            env.charge_statement()
+            state.setdefault(s.target, {})
+            state[s.target][self.eval(s.keyexpr, state)] = self.eval(s.valexpr, state)
+        elif isinstance(s, Prefetch):
+            t = env.execute_query(s.query)
+            env.cache_by_column(
+                t if s.cache_name is None else
+                Table(s.cache_name, t.schema, t.columns), s.col)
+            state[f"__prefetch_{t.name}_{s.col}"] = t
+        elif isinstance(s, CacheByColumn):
+            v = state[s.var]
+            assert isinstance(v, Table), "cacheByColumn expects a query result"
+            env.cache_by_column(v, s.col)
+        elif isinstance(s, UpdateRow):
+            # one round trip per update statement; value computed client-side
+            val = self.eval(s.val, state)
+            key = self.eval(s.keyexpr, state)
+            m = env.db.model
+            env._charge_query(1, 16, m.startup_s + m.index_lookup_s,
+                              m.startup_s + m.index_lookup_s)
+            t = env.db.table(s.table)
+            arr = np.asarray(t.column(s.key_col))
+            idx = np.flatnonzero(arr == key)
+            if len(idx):
+                col = np.asarray(t.column(s.set_col)).copy()
+                col[idx] = val
+                env.db.add_table(t.with_column(t.schema.field(s.set_col), col))
+        elif isinstance(s, NoOp):
+            env.charge_statement()
+        else:
+            raise TypeError(f"cannot exec {s!r}")
+
+    # -------------------------------------------------------------- regions
+    def exec_region(self, r: Region, state: Dict[str, object]) -> None:
+        if isinstance(r, BasicBlock):
+            self.exec_stmt(r.stmt, state)
+        elif isinstance(r, SeqRegion):
+            for p in r.parts:
+                self.exec_region(p, state)
+        elif isinstance(r, CondRegion):
+            self.env.charge_statement()
+            if bool(self.eval(r.pred, state)):
+                self.exec_region(r.then_r, state)
+            elif r.else_r is not None:
+                self.exec_region(r.else_r, state)
+        elif isinstance(r, LoopRegion):
+            src = self.eval(r.source, state)
+            if self.mode == "fast":
+                from .vectorize import try_exec_loop_fast
+                if try_exec_loop_fast(self, r, src, state):
+                    return
+            self._exec_loop_exact(r, src, state)
+        else:
+            raise TypeError(f"cannot exec region {r!r}")
+
+    def _exec_loop_exact(self, r: LoopRegion, src, state: Dict[str, object]) -> None:
+        rows: Sequence
+        if isinstance(src, Table):
+            rows = src.to_rows()
+        elif isinstance(src, list):
+            rows = src
+        else:
+            raise TypeError(f"cannot iterate {type(src)}")
+        for row in rows:
+            self.env.charge_statement()  # loop header/advance
+            state[r.var] = _Row(row) if isinstance(row, dict) else row
+            self.exec_region(r.body, state)
+        state.pop(r.var, None)
+
+
+_register_builtins()

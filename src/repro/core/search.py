@@ -1,0 +1,404 @@
+"""Volcano/Cascades search over the Region DAG + code generation.
+
+Cost of an OR-node = min over members; cost of an AND-node = operator cost +
+children (Sec. III-A). Two Cobra-specific extensions:
+
+  * **shared resources** — a fold (its source query + loop shell) chosen by
+    several ``slot-project`` alternatives, and a prefetched cache used by
+    several loops, are counted ONCE per plan. Plans carry a resource set;
+    combination points (seq, assemble) merge resource sets by key. This is
+    the DAG-costing idea Cobra inherits from the PyroJ/MQO optimizer [14].
+  * **top-K plan lists per group** — local minima are not globally optimal
+    under sharing, so each group exposes its K best plans and combination
+    points enumerate the cross product (bounded); exact at our program sizes.
+
+``optimize`` = build memo → saturate rules → search → generate the program.
+``heuristic_choice`` reproduces the [4]-style comparator: push as much into
+SQL as possible, never prefetch (Fig. 15's "Heuristic" bars).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..relational.algebra import Query, Scan
+from .cost import CostCatalog, CostModel
+from .dag import AndNode, Memo, expand
+from .fir import (FExpr, FFoldE, FPrefetchE, FSeqE, fir_to_region, fold_to_loop)
+from .regions import (Assign, BasicBlock, CondRegion, IBin, IQuery,
+                      IQueryValues, IScalarQuery, IVar, LoopRegion, Program,
+                      Region, SeqRegion)
+from .rules import RuleContext, _get_parts, build_memo, default_rules
+
+__all__ = ["optimize", "OptimizationResult", "Plan", "best_plans", "plan_cost"]
+
+_TOPK = 4
+_MAX_COMBOS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    and_id: int
+    op: str
+    payload: object
+    children: Tuple["Plan", ...]
+    base: float                          # own cost excluding shared resources
+    resources: Tuple[Tuple[object, float], ...]  # (key, cost), deduped by key
+
+    @property
+    def total(self) -> float:
+        return self.base + sum(c for _, c in self.resources)
+
+
+def _merge_resources(*resource_sets) -> Tuple[Tuple[object, float], ...]:
+    seen: Dict[object, float] = {}
+    for rs in resource_sets:
+        for k, c in rs:
+            seen.setdefault(k, c)
+    return tuple(sorted(seen.items(), key=lambda kv: repr(kv[0])))
+
+
+def _combine(children_lists: Sequence[List[Plan]]) -> List[Tuple[Plan, ...]]:
+    combos = 1
+    for cl in children_lists:
+        combos *= max(1, len(cl))
+    if combos > _MAX_COMBOS:
+        # greedy: take each child's best only
+        return [tuple(cl[0] for cl in children_lists)]
+    return list(itertools.product(*children_lists))
+
+
+class Searcher:
+    def __init__(self, memo: Memo, cm: CostModel, ctx: RuleContext,
+                 choice: str = "cost"):
+        self.memo = memo
+        self.cm = cm
+        self.ctx = ctx
+        self.choice = choice  # "cost" | "heuristic"
+        self._cache: Dict[int, List[Plan]] = {}
+        self._in_progress: set = set()
+
+    # ------------------------------------------------------------- search
+    def group_plans(self, g: int) -> List[Plan]:
+        g = self.memo.find(g)
+        if g in self._cache:
+            return self._cache[g]
+        if g in self._in_progress:
+            return []  # cycle through merged groups: prune
+        self._in_progress.add(g)
+        plans: List[Plan] = []
+        for a in self.memo.members(g):
+            plans.extend(self.and_plans(a))
+        self._in_progress.discard(g)
+        plans = self._rank(plans)[:_TOPK]
+        self._cache[g] = plans
+        return plans
+
+    def _rank(self, plans: List[Plan]) -> List[Plan]:
+        if self.choice == "heuristic":
+            return sorted(plans, key=lambda p: (-_sql_push_score(p), p.total))
+        return sorted(plans, key=lambda p: p.total)
+
+    def and_plans(self, a: int) -> List[Plan]:
+        node = self.memo.node(a)
+        kids = [self.group_plans(c) for c in self.memo.canonical_children(a)]
+        if any(len(k) == 0 for k in kids):
+            return []
+        out: List[Plan] = []
+        for combo in _combine(kids):
+            base, res = self._compose(node, combo)
+            out.append(Plan(a, node.op, node.payload, combo, base, res))
+        return out
+
+    # ------------------------------------------------------------ costing
+    def _compose(self, node: AndNode, children: Tuple[Plan, ...]
+                 ) -> Tuple[float, Tuple[Tuple[object, float], ...]]:
+        """Full cost composition for one AND-node given chosen child plans.
+
+        Resource kinds: ("fold", ·) = per-execution loop shell (source query
+        + header), multiplied when nested under an imperative loop;
+        ("prefetch", ·) = one-time hoistable cache fill — NEVER multiplied
+        (the [13] heuristic hoists it to the earliest program point)."""
+        cm = self.cm
+        cat = cm.cat
+        if node.op == "block":
+            stmt = node.payload
+            from .regions import Prefetch
+            if isinstance(stmt, Prefetch):
+                key = ("prefetch", _query_table(stmt.query), stmt.col)
+                return 0.0, ((key, cm.prefetch_cost(stmt.query)),)
+            return cm.block_cost(stmt), ()
+        if node.op == "seq":
+            base = sum(p.base for p in children)
+            return base, _merge_resources(*[p.resources for p in children])
+        if node.op == "cond":
+            p = cat.cond_prob_default
+            if len(children) == 1:
+                base = cat.c_z + p * children[0].base
+            else:
+                base = cat.c_z + p * children[0].base + (1 - p) * children[1].base
+            return base, _merge_resources(*[c.resources for c in children])
+        if node.op == "loop":
+            var, source = node.payload
+            k = cm.loop_iters(source)
+            body = children[0]
+            per_exec = body.base + sum(c for key, c in body.resources
+                                       if key[0] == "fold")
+            prefetch_res = tuple((key, c) for key, c in body.resources
+                                 if key[0] != "fold")
+            base = k * (per_exec + cat.c_z) + cm._iexpr_cost(source)
+            return base, prefetch_res
+        if node.op == "assemble":
+            base = sum(p.base for p in children)
+            return base, _merge_resources(*[p.resources for p in children])
+        if node.op == "slot-project":
+            _, var, i, payload = node.payload
+            pre, fold = _get_parts(payload)
+            src_cost, n = cm.fold_source(fold)
+            slot = cm.slot_row_cost(fold.func.items[i], n)
+            res: List[Tuple[object, float]] = [
+                (("fold", fold.key()), src_cost + n * cat.c_z)]
+            for p in pre:
+                if isinstance(p, FPrefetchE):
+                    res.append(((("prefetch", _query_table(p.query), p.col)),
+                                cm.prefetch_cost(p.query)))
+            return n * slot, tuple(res)
+        if node.op == "slot-query":
+            _, var, q, op, col, binding = node.payload
+            return cm.query_cost(q) + cat.c_z, ()
+        if node.op == "slot-query-rows":
+            _, var, q, col = node.payload
+            return cm.query_cost(q) + cat.c_z, ()
+        raise TypeError(f"unknown op {node.op}")
+
+
+def _query_table(q: Query) -> str:
+    while True:
+        kids = q.children()
+        if isinstance(q, Scan):
+            return q.table
+        if not kids:
+            return q.sql()
+        q = kids[0]
+
+
+def _sql_push_score(p: Plan) -> int:
+    """Heuristic comparator [4]: more computation pushed into SQL = better;
+    prefetching is never chosen (it was proposed for other goals [13])."""
+    score = 0
+    if p.op == "slot-query-rows":
+        score += 100
+    if p.op == "slot-query":
+        score += 80
+    if p.op == "slot-project":
+        _, _, _, payload = p.payload
+        pre, fold = _get_parts(payload)
+        if pre:  # prefetch-based plan: heuristic refuses
+            score -= 1000
+        from .fir import FSelLookupE, fir_contains, FCacheLookupAllE, FCacheLookupE
+
+        def has(t):
+            return fir_contains(fold, lambda x: isinstance(x, t))
+
+        if has(FSelLookupE):
+            score += 40  # σ pushed to the database
+        if has(FCacheLookupAllE) or has(FCacheLookupE):
+            score -= 1000
+    if p.op == "assemble":
+        score += 1  # prefer F-IR over raw imperative loop
+    for c in p.children:
+        score += _sql_push_score(c)
+    return score
+
+
+# --------------------------------------------------------------------------
+# Code generation from a chosen plan
+# --------------------------------------------------------------------------
+
+def plan_to_region(plan: Plan, emitted_prefetch: Optional[set] = None) -> Region:
+    if emitted_prefetch is None:
+        emitted_prefetch = set()
+    if plan.op == "block":
+        return BasicBlock(plan.payload)
+    if plan.op == "seq":
+        return SeqRegion(tuple(plan_to_region(c, emitted_prefetch)
+                               for c in plan.children))
+    if plan.op == "cond":
+        pred = plan.payload
+        then = plan_to_region(plan.children[0], emitted_prefetch)
+        els = plan_to_region(plan.children[1], emitted_prefetch) \
+            if len(plan.children) > 1 else None
+        return CondRegion(pred, then, els)
+    if plan.op == "loop":
+        var, source = plan.payload
+        return LoopRegion(var, source, plan_to_region(plan.children[0],
+                                                      emitted_prefetch))
+    if plan.op == "assemble":
+        return _assemble_to_region(plan, emitted_prefetch)
+    raise TypeError(f"cannot codegen {plan.op}")
+
+
+def _assemble_to_region(plan: Plan, emitted_prefetch: set) -> Region:
+    from .regions import Prefetch
+
+    parts: List[Region] = []
+    # group slot-projects by their payload expression (one loop per fold)
+    fold_slots: Dict[object, Tuple[FExpr, List[int]]] = {}
+    queries: List[Tuple[str, object]] = []
+    for c in plan.children:
+        if c.op == "slot-project":
+            _, var, i, payload = c.payload
+            k = payload.key()
+            fold_slots.setdefault(k, (payload, []))[1].append(i)
+        elif c.op == "slot-query":
+            _, var, q, op, col, binding = c.payload
+            queries.append((var, ("agg", q, op, col, binding)))
+        elif c.op == "slot-query-rows":
+            _, var, q, col = c.payload
+            queries.append((var, ("rows", q, col)))
+        else:
+            raise TypeError(c.op)
+
+    # which vars end up covered by a loop (incl. dependency closure)?
+    covered: set = set()
+    loops: List[Region] = []
+    for payload, slots in fold_slots.values():
+        pre, fold = _get_parts(payload)
+        for p in pre:
+            if isinstance(p, FPrefetchE):
+                key = (_query_table(p.query), p.col)
+                if key not in emitted_prefetch:
+                    emitted_prefetch.add(key)
+                    parts.append(BasicBlock(Prefetch(p.query, p.col)))
+        region = fold_to_loop(fold, slots=slots)
+        loops.append(region)
+        covered.update(_loop_assigned_vars(region))
+
+    for var, spec in queries:
+        if var in covered:
+            continue  # dependency closure already computes it in a loop
+        if spec[0] == "agg":
+            _, q, op, col, binding = spec
+            bindings = ()
+            if binding is not None:
+                from .fir import _val_to_iexpr
+                bindings = (("k", _val_to_iexpr(binding, {}, [])),)
+            parts.append(BasicBlock(Assign(
+                var, IBin(op, IVar(var), IScalarQuery(q, col, bindings)))))
+        else:
+            _, q, col = spec
+            if col is None:
+                parts.append(BasicBlock(Assign(var, IQuery(q))))
+            else:
+                parts.append(BasicBlock(Assign(var, IQueryValues(q, col))))
+    parts.extend(loops)
+    return SeqRegion(tuple(parts)) if len(parts) != 1 else parts[0]
+
+
+def _loop_assigned_vars(r: Region) -> set:
+    out = set()
+
+    def walk(x: Region):
+        if isinstance(x, BasicBlock):
+            out.update(x.stmt.defs())
+        for c in x.children():
+            walk(c)
+
+    walk(r)
+    return {v for v in out if not v.startswith("__")}
+
+
+# --------------------------------------------------------------------------
+# Prefetch hoisting ("prefetch at the earliest program point", [13])
+# --------------------------------------------------------------------------
+
+def hoist_prefetches(region: Region) -> Region:
+    """Move whole-relation Prefetch statements to the program start, deduped.
+    Tables that the program updates are NOT hoisted (stale-cache safety,
+    Sec. VIII 'threats to validity')."""
+    from .regions import NoOp, Prefetch, UpdateRow
+
+    updated: set = set()
+
+    def find_updates(r: Region):
+        if isinstance(r, BasicBlock) and isinstance(r.stmt, UpdateRow):
+            updated.add(r.stmt.table)
+        for c in r.children():
+            find_updates(c)
+
+    find_updates(region)
+    hoisted: List = []
+    seen: set = set()
+
+    def strip(r: Region) -> Optional[Region]:
+        if isinstance(r, BasicBlock):
+            if isinstance(r.stmt, Prefetch):
+                tbl = _query_table(r.stmt.query)
+                if tbl not in updated:
+                    key = (tbl, r.stmt.col)
+                    if key not in seen:
+                        seen.add(key)
+                        hoisted.append(r)
+                    return None
+            return r
+        if isinstance(r, SeqRegion):
+            parts = tuple(p for p in (strip(x) for x in r.parts) if p is not None)
+            if not parts:
+                return None
+            return SeqRegion(parts) if len(parts) > 1 else parts[0]
+        if isinstance(r, LoopRegion):
+            body = strip(r.body)
+            if body is None:
+                body = BasicBlock(NoOp("hoisted"))
+            return LoopRegion(r.var, r.source, body, r.label)
+        if isinstance(r, CondRegion):
+            # prefetch under a condition is not unconditionally hoistable
+            return r
+        return r
+
+    core = strip(region)
+    if not hoisted:
+        return region
+    parts = tuple(hoisted) + ((core,) if core is not None else ())
+    return SeqRegion(parts) if len(parts) > 1 else parts[0]
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OptimizationResult:
+    program: Program
+    plan: Plan
+    est_cost: float
+    memo_stats: Dict[str, int]
+    opt_time_s: float
+    alternatives: int
+
+
+def optimize(program: Program, db, catalog: CostCatalog,
+             choice: str = "cost", rules: Optional[Sequence] = None
+             ) -> OptimizationResult:
+    """rules=None uses the full Fig. 11 rule set; pass a restricted list
+    (e.g. without T3) to reproduce the paper's Experiment-1/2/3 alternative
+    space {P0, P1, P2} exactly."""
+    t0 = time.perf_counter()
+    ctx = RuleContext(db=db)
+    memo, root = build_memo(program, ctx)
+    stats = expand(memo, list(rules) if rules is not None else default_rules(), ctx)
+    cm = CostModel(db, catalog)
+    searcher = Searcher(memo, cm, ctx, choice=choice)
+    plans = searcher.group_plans(root)
+    if not plans:
+        raise RuntimeError("no plan found")
+    best = plans[0]
+    region = hoist_prefetches(plan_to_region(best))
+    out = Program(f"{program.name}_{choice}", region, program.outputs,
+                  program.inputs)
+    dt = time.perf_counter() - t0
+    return OptimizationResult(out, best, best.total, stats, dt,
+                              stats.get("alternatives_added", 0))

@@ -1,0 +1,2 @@
+from .pipeline import PipelineConfig, Prefetcher, SyntheticLM
+__all__ = ["PipelineConfig", "Prefetcher", "SyntheticLM"]

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention — blocked online-softmax attention (causal/SWA/chunked/GQA)
+  rwkv6_scan      — chunked WKV linear-attention scan (data-dependent decay)
+  segment_reduce  — relational γ group-by aggregation via one-hot MXU matmul
+  join_probe      — direct-address equi-join probe (application-side join)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the jit'd
+dispatch layer. Kernels are validated in interpret mode on CPU
+(tests/test_kernels.py); on real TPUs pass interpret=False.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .join_probe import build_direct_table, join_probe
+from .rwkv6_scan import rwkv6_scan
+from .segment_reduce import segment_reduce
+
+__all__ = ["ops", "ref", "flash_attention", "rwkv6_scan", "segment_reduce",
+           "join_probe", "build_direct_table"]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers: kernel on TPU, reference elsewhere.
+
+``use_pallas(True)`` flips dispatch to the Pallas kernels (interpret mode on
+CPU — used by the kernel tests; on a real TPU pod the launcher enables it
+with interpret=False). Default is the pure-jnp reference path so CPU smoke
+tests and the dry-run lower plain XLA HLO.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .join_probe import build_direct_table, join_probe as _probe_pallas
+from .rwkv6_scan import rwkv6_scan as _rwkv_pallas
+from .segment_reduce import segment_reduce as _segred_pallas
+
+_STATE = {"use_pallas": False, "interpret": True}
+
+
+def use_pallas(on: bool = True, interpret: bool = True) -> None:
+    _STATE["use_pallas"] = on
+    _STATE["interpret"] = interpret
+
+
+def attention(q, k, v, causal=True, window=None, chunk=None, scale=None,
+              block_q: int = 128, block_k: int = 128):
+    """q (B,H,Tq,hd), k/v (B,KV,Tk,hd)."""
+    if _STATE["use_pallas"]:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             chunk=chunk, scale=scale, block_q=block_q,
+                             block_k=block_k, interpret=_STATE["interpret"])
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   chunk=chunk, scale=scale)
+
+
+def rwkv_scan(r, k, v, w_log, u, chunk: int = 64):
+    if _STATE["use_pallas"]:
+        return _rwkv_pallas(r, k, v, w_log, u, chunk=chunk,
+                            interpret=_STATE["interpret"])
+    return ref.rwkv6_scan_ref(r, k, v, w_log, u)
+
+
+def segment_reduce(values, segment_ids, num_segments: int, op: str = "sum"):
+    if _STATE["use_pallas"]:
+        return _segred_pallas(values, segment_ids, num_segments, op=op,
+                              interpret=_STATE["interpret"])
+    return ref.segment_reduce_ref(values, segment_ids, num_segments, op=op)
+
+
+def equi_probe(probe_keys, table_keys, key_space: Optional[int] = None):
+    """Index of each probe key's match in table_keys (-1 if absent)."""
+    if _STATE["use_pallas"] and key_space is not None and key_space <= (1 << 22):
+        table = build_direct_table(table_keys, key_space)
+        return _probe_pallas(probe_keys, table, interpret=_STATE["interpret"])
+    return ref.join_probe_ref(probe_keys, table_keys)

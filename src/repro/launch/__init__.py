@@ -1,0 +1,8 @@
+"""Launch layer: meshes, sharding policies, step builders, drivers.
+
+NOTE: dryrun is intentionally NOT imported here — it sets XLA device-count
+flags at import and must only run as __main__."""
+from .mesh import make_mesh, make_production_mesh, mesh_info
+from .sharding import MeshPolicy, STRATEGIES, batch_specs, make_policy, param_specs
+__all__ = ["make_mesh", "make_production_mesh", "mesh_info", "MeshPolicy",
+           "STRATEGIES", "batch_specs", "make_policy", "param_specs"]

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes; extract memory and roofline accounting.
+
+MUST be run before any other jax-touching import — the two lines above pin
+the device count before jax initializes. Never set that flag globally
+(smoke tests and benches must see 1 device).
+
+Two passes per cell:
+
+  A (compile proof)   — the FULL config on the production scan path
+      (lax.scan over layers, remat, microbatching). `.lower().compile()`
+      succeeding here is deliverable (e); `memory_analysis()` proves fit.
+      XLA's cost_analysis tallies while-bodies once, so pass A numbers are
+      NOT used for FLOP accounting.
+
+  B (exact accounting) — the same cell at two reduced depths (k1 < k2)
+      with layers UNROLLED: cost_analysis and the HLO collective sum are
+      then exact; per-layer cost = (f(k2) − f(k1)) / (k2 − k1), and the full
+      depth is linear extrapolation (layer stacks are homogeneous; the
+      intercept captures embed/loss/optimizer). Validated in
+      tests/test_dryrun_small.py against a fully-unrolled small model.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  python -m repro.launch.dryrun --all --both-meshes [--out reports/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..analysis.roofline import collective_bytes_from_hlo, roofline_terms
+from ..configs import ALL_ARCHS, SHAPES
+from ..models.arch import get_arch
+from .mesh import make_production_mesh
+from .sharding import make_policy
+from .specs import input_specs, make_optimizer, shape_kind, step_fn
+
+__all__ = ["run_cell", "runnable", "main"]
+
+
+def runnable(arch: str, shape: str) -> bool:
+    cfg = get_arch(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False  # documented skip: pure full attention at 512k decode
+    return True
+
+
+def accounting_depths(cfg) -> Tuple[int, int, float]:
+    """(k1, k2, effective_layer_count) for linear extrapolation."""
+    if cfg.ssm_kind == "mamba2" and cfg.shared_attn:
+        every = max(1, cfg.hybrid_every)
+        return every, 2 * every, float(cfg.n_layers)
+    if cfg.moe and cfg.n_dense_layers:
+        return cfg.n_dense_layers + 2, cfg.n_dense_layers + 4, float(cfg.n_layers)
+    return 2, 4, float(cfg.n_layers)
+
+
+def reduced(cfg, k: int):
+    upd = dict(n_layers=k)
+    if cfg.enc_dec:
+        upd.update(n_enc_layers=k, n_dec_layers=k)
+    return dataclasses.replace(cfg, **upd)
+
+
+def _policy(mesh, kind, shape, unroll, micro):
+    seq_shard = shape == "long_500k"
+    remat = "full" if kind == "train" else "none"
+    return make_policy(mesh, strategy="fsdp_tp", remat=remat,
+                       seq_shard=seq_shard, microbatch=micro,
+                       unroll_layers=unroll)
+
+
+def _lower_compile(cfg, shape, kind, policy):
+    optimizer = make_optimizer(cfg) if kind == "train" else None
+    fn = step_fn(cfg, kind, policy, optimizer)
+    args = input_specs(cfg, shape, policy, optimizer)
+    # donate params/opt-state (train) or caches (decode): in-place update on
+    # real hardware; keeps memory_analysis honest
+    donate = (0, 1) if kind == "train" else ((1,) if kind == "decode" else ())
+    t0 = time.time()
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args.values())
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "collectives": collective_bytes_from_hlo(compiled.as_text()),
+        "memory": _mem_info(compiled),
+    }
+
+
+def _mem_info(compiled):
+    mem = compiled.memory_analysis()
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if out:
+        out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                  + out.get("output_size_in_bytes", 0)
+                                  + out.get("temp_size_in_bytes", 0)
+                                  - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             strategy: str = "fsdp_tp", remat: Optional[str] = None,
+             microbatch: Optional[int] = None, verbose: bool = True,
+             accounting: bool = True, policy_overrides: Optional[dict] = None
+             ) -> dict:
+    cfg = get_arch(arch)
+    kind = shape_kind(shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    spec = SHAPES[shape]
+    overrides = policy_overrides or {}
+    remat_eff = remat if remat is not None else \
+        ("full" if kind == "train" else "none")
+    micro_eff = microbatch if microbatch is not None else \
+        (8 if kind == "train" else 1)
+
+    with mesh:
+        # ---- pass A: full config, production scan path
+        polA = make_policy(mesh, strategy=strategy, remat=remat_eff,
+                           seq_shard=(shape == "long_500k"),
+                           microbatch=micro_eff, unroll_layers=False)
+        for k, v in overrides.items():
+            setattr(polA, k, v)
+        passA = _lower_compile(cfg, shape, kind, polA)
+
+        result = {
+            "arch": arch, "shape": shape, "kind": kind,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_devices": n_dev, "status": "ok",
+            "tokens": spec["seq_len"] * spec["global_batch"],
+            "policy": polA.describe(),
+            "full_compile": {k: passA[k] for k in
+                             ("lower_s", "compile_s", "memory")},
+            "full_collective_counts": passA["collectives"]["counts"],
+        }
+
+        # ---- pass B: two-point unrolled accounting
+        if accounting:
+            k1, k2, L_eff = accounting_depths(cfg)
+            polB = make_policy(mesh, strategy=strategy, remat=remat_eff,
+                               seq_shard=(shape == "long_500k"),
+                               microbatch=1, unroll_layers=True)
+            for k, v in overrides.items():
+                if k != "microbatch":
+                    setattr(polB, k, v)
+            f1 = _lower_compile(reduced(cfg, k1), shape, kind, polB)
+            f2 = _lower_compile(reduced(cfg, k2), shape, kind, polB)
+
+            def extrap(a, b):
+                per_layer = (b - a) / (k2 - k1)
+                return a + (L_eff - k1) * per_layer
+
+            flops = extrap(f1["flops"], f2["flops"])
+            bytes_ = extrap(f1["bytes"], f2["bytes"])
+            coll = extrap(f1["collectives"]["bytes_per_device"],
+                          f2["collectives"]["bytes_per_device"])
+            mb = polA.microbatch if kind == "train" else 1
+            result.update({
+                "accounting": {
+                    "k1": k1, "k2": k2,
+                    "flops_k1": f1["flops"], "flops_k2": f2["flops"],
+                    "compile_s": f1["compile_s"] + f2["compile_s"],
+                },
+                # pass B ran microbatch=1; flops/bytes are per full batch
+                "flops_per_device": flops,
+                "bytes_per_device": bytes_,
+                "collectives": {"bytes_per_device": coll,
+                                "by_type": f2["collectives"]["by_type"],
+                                "counts": f2["collectives"]["counts"]},
+            })
+            result["roofline"] = roofline_terms(cfg, spec, result)
+
+    if verbose:
+        slim = {k: v for k, v in result.items() if k != "collectives"}
+        print(json.dumps(slim, indent=1, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-accounting", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[cached] {tag}", flush=True)
+                    continue
+                if not runnable(arch, shape):
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "skipped",
+                           "reason": "pure full attention at 512k decode "
+                                     "(DESIGN.md §Arch-applicability)"}
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[skipped] {tag}", flush=True)
+                    continue
+                print(f"[run] {tag}", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp, verbose=False,
+                                   accounting=not args.no_accounting)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "status": "error",
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": repr(e)}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("status") == "ok":
+                    rf = rec.get("roofline", {})
+                    print(f"  ok in {time.time()-t0:.0f}s dominant="
+                          f"{rf.get('dominant')} frac="
+                          f"{rf.get('roofline_fraction', 0):.3f}", flush=True)
+                else:
+                    print(f"  -> {rec.get('status')}: "
+                          f"{rec.get('error', '')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

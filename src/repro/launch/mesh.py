@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import,
+and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_info"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips, v5e) or 2×16×16 (2 pods, 512 chips)."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Mesh over the first prod(shape) devices (elastic: any divisor count)."""
+    import jax
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"run under XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"for the dry-run")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def mesh_info(mesh) -> dict:
+    return {"axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "n_devices": int(np.prod(mesh.devices.shape))}

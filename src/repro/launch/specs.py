@@ -1,0 +1,192 @@
+"""Abstract input specs for every (arch × shape) cell — ShapeDtypeStructs
+with NamedShardings attached; nothing is ever allocated (the shannon/kernels
+pattern). ``step_fn`` builds the jittable train/prefill/decode step the
+dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES
+from ..models import forward, init_params, loss_fn, make_caches
+from ..models.arch import ArchConfig
+from ..optim.optimizers import Optimizer, adafactor, adamw, warmup_cosine, \
+    clip_by_global_norm
+from .sharding import (MeshPolicy, batch_specs, cache_specs, named_sharding,
+                       param_specs)
+
+__all__ = ["abstract_params", "make_optimizer", "input_specs", "step_fn",
+           "shape_kind"]
+
+
+def shape_kind(shape_name: str) -> str:
+    return SHAPES[shape_name]["kind"]
+
+
+def abstract_params(cfg: ArchConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def make_optimizer(cfg: ArchConfig, total_steps: int = 10000) -> Optimizer:
+    """Adafactor for ≥0.5T params (HBM budget), AdamW otherwise."""
+    warmup = max(10, min(200, total_steps // 10))
+    lr = warmup_cosine(3e-4, warmup, total_steps)
+    if cfg.n_params() > 5e11:
+        return adafactor(lr)
+    return adamw(lr)
+
+
+def _sds(tree, shardings=None):
+    if shardings is None:
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+def _batch_struct(cfg: ArchConfig, B: int, T: int, kind: str):
+    b: Dict[str, Any] = {}
+    ii = jnp.int32
+    if kind == "train":
+        if cfg.enc_dec:
+            b["tokens"] = jax.ShapeDtypeStruct((B, T), ii)
+            b["enc_embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                                   jnp.bfloat16)
+        elif cfg.frontend:
+            b["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+        else:
+            b["tokens"] = jax.ShapeDtypeStruct((B, T), ii)
+        b["labels"] = jax.ShapeDtypeStruct((B, T), ii)
+        b["positions"] = jax.ShapeDtypeStruct((B, T), ii)
+    elif kind == "prefill":
+        if cfg.enc_dec or cfg.frontend:
+            b["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+        else:
+            b["tokens"] = jax.ShapeDtypeStruct((B, T), ii)
+        b["positions"] = jax.ShapeDtypeStruct((B, T), ii)
+    else:  # decode: one new token against a T-token cache
+        b["tokens"] = jax.ShapeDtypeStruct((B, 1), ii)
+        b["positions"] = jax.ShapeDtypeStruct((B, 1), ii)
+    return b
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, policy: MeshPolicy,
+                optimizer: Optional[Optimizer] = None):
+    """Returns (example_args, in_shardings_tree) for the step function."""
+    spec = SHAPES[shape_name]
+    B, T, kind = spec["global_batch"], spec["seq_len"], spec["kind"]
+    mesh = policy.mesh
+    seq_shard = policy.seq_shard
+
+    p_abs = abstract_params(cfg)
+    p_spec = param_specs(p_abs, cfg, mesh, policy.strategy)
+    p_shard = named_sharding(mesh, p_spec)
+    params = _sds(p_abs, p_shard)
+
+    batch = _batch_struct(cfg, B, T, kind)
+    b_spec = batch_specs(mesh, batch, seq_shard=seq_shard and kind != "decode")
+    batch = _sds(batch, named_sharding(mesh, b_spec))
+
+    if kind == "train":
+        assert optimizer is not None
+        o_abs = jax.eval_shape(optimizer.init, p_abs)
+        o_spec = param_specs(o_abs, cfg, mesh, policy.strategy)
+        opt = _sds(o_abs, named_sharding(mesh, o_spec))
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return {"params": params, "opt_state": opt, "step": step,
+                "batch": batch}
+    if kind == "prefill":
+        return {"params": params, "batch": batch}
+    # decode
+    caches = make_caches(cfg, B, T, abstract=True)
+    c_spec = cache_specs(mesh, caches, seq_shard=seq_shard)
+    caches = _sds(caches, named_sharding(mesh, c_spec))
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"params": params, "caches": caches, "cache_index": idx,
+            "batch": batch}
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+
+def step_fn(cfg: ArchConfig, kind: str, policy: MeshPolicy,
+            optimizer: Optional[Optimizer] = None) -> Callable:
+    if kind == "train":
+        return make_train_step(cfg, policy, optimizer)
+    if kind == "prefill":
+        def prefill(params, batch):
+            inp = batch.get("embeds", None)
+            if inp is None:
+                inp = batch["tokens"]
+            enc = batch.get("embeds") if cfg.enc_dec else None
+            if cfg.enc_dec:
+                B, T = inp.shape[:2]
+                dec_tokens = jnp.zeros((B, min(T, 1024)), jnp.int32)
+                pos = jnp.broadcast_to(jnp.arange(dec_tokens.shape[1])[None],
+                                       dec_tokens.shape)
+                logits, _, _ = forward(params, cfg, dec_tokens, pos,
+                                       pol=policy, enc_inputs=inp)
+            else:
+                logits, _, _ = forward(params, cfg, inp, batch["positions"],
+                                       pol=policy)
+            return logits
+        return prefill
+
+    def serve_step(params, caches, cache_index, batch):
+        logits, new_caches, _ = forward(params, cfg, batch["tokens"],
+                                        batch["positions"], caches=caches,
+                                        cache_index=cache_index, pol=policy)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+    return serve_step
+
+
+def make_train_step(cfg: ArchConfig, policy: MeshPolicy,
+                    optimizer: Optimizer) -> Callable:
+    nmb = max(1, policy.microbatch)
+
+    def train_step(params, opt_state, step, batch):
+        if nmb == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, pol=policy))(params)
+        else:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(nmb, B // nmb, *x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mbatch, pol=policy))(params)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_loss + l, acc_g), ()
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero_g), mb)
+            loss = loss / nmb
+            grads = jax.tree_util.tree_map(lambda g: g / nmb, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, new_opt = optimizer.update(grads, opt_state, params, step)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                          ).astype(p.dtype), params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, step + 1, metrics
+
+    return train_step

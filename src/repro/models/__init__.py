@@ -1,0 +1,11 @@
+"""Model definitions: architecture registry, layers, composable assembly."""
+
+from .arch import ArchConfig, get_arch, list_archs, register_arch
+from .model import (forward, init_params, lm_loss, loss_fn, make_caches)
+from .layers import NULL_POLICY, NullPolicy
+
+__all__ = [
+    "ArchConfig", "get_arch", "list_archs", "register_arch",
+    "forward", "init_params", "lm_loss", "loss_fn", "make_caches",
+    "NULL_POLICY", "NullPolicy",
+]

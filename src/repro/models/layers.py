@@ -1,0 +1,610 @@
+"""Model layers in pure JAX (params = pytrees of jnp arrays).
+
+Covers every assigned architecture family:
+  * GQA attention with RoPE / M-RoPE, optional sliding window (SWA) and
+    chunked local attention (llama4-style);
+  * MLA (multi-head latent attention, MiniCPM3): low-rank compressed KV with
+    a shared rope head — the KV cache stores the LATENT, not full K/V;
+  * SwiGLU MLP;
+  * MoE with top-k routing, capacity-based sort-free dispatch (one-hot-free,
+    scatter into (E, C, d) buffers — TPU/MXU friendly, EP-shardable);
+  * RWKV6 time/channel mix (data-dependent per-channel decay) and Mamba2
+    (SSD, scalar per-head decay), both via one numerically-stable chunked
+    decay-linear-attention primitive with lax.scan across chunks;
+  * embeddings and the shared norm/linear primitives.
+
+Sharding: every layer threads a ``ShardingPolicy`` (see
+``repro.launch.sharding``); ``pol.cs(x, name)`` applies a
+with_sharding_constraint when a rule for the logical name exists. The Cobra
+distributed planner emits these policies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Sharding policy hook
+# --------------------------------------------------------------------------
+
+class NullPolicy:
+    """No-op policy (single device / tests)."""
+
+    def cs(self, x, name: str):
+        return x
+
+    remat: str = "none"
+    use_kernels: bool = False
+
+
+NULL_POLICY = NullPolicy()
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (y * w).astype(dt)
+
+
+def init_rms(key, d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def act_fn(kind: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[kind]
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(hd_rot: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def apply_rope(x, positions, theta: float = 1e4, mrope_sections: Optional[Tuple[int, ...]] = None):
+    """x: (B, T, H, hd). positions: (B, T) or (B, T, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the rotary half-dims are split into sections, each
+    rotated by its own position stream (temporal / height / width). For text
+    tokens the three streams coincide."""
+    B, T, H, hd = x.shape
+    half = hd // 2
+    freqs = rope_freqs(hd)  # (half,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,T,half)
+    else:
+        assert positions.ndim == 3 and positions.shape[-1] == len(mrope_sections)
+        parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(positions[..., i:i + 1].astype(jnp.float32)
+                         * freqs[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin,
+                            x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def default_mrope_sections(hd: int) -> Tuple[int, int, int]:
+    half = hd // 2
+    a = half // 4
+    return (half - 2 * a, a, a)  # e.g. hd=128 → (32,16,16)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA + SWA/chunked) and MLA
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    if cfg.attn_kind == "mla":
+        qr = cfg.q_lora_rank or d
+        kvr = cfg.kv_lora_rank or d
+        qk_dim = cfg.qk_rope_dim + cfg.qk_nope_dim
+        return {
+            "wq_a": dense_init(ks[0], (d, qr)),
+            "q_norm": init_rms(ks[1], qr),
+            "wq_b": dense_init(ks[2], (qr, H * qk_dim)),
+            "wkv_a": dense_init(ks[3], (d, kvr + cfg.qk_rope_dim)),
+            "kv_norm": init_rms(ks[4], kvr),
+            "wkv_b": dense_init(ks[5], (kvr, H * (cfg.qk_nope_dim + cfg.vhd))),
+            "wo": dense_init(ks[6], (H * cfg.vhd, d)),
+        }
+    return {
+        "wq": dense_init(ks[0], (d, H * hd)),
+        "wk": dense_init(ks[1], (d, KV * hd)),
+        "wv": dense_init(ks[2], (d, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, d)),
+    }
+
+
+def _attn_mask(Tq: int, Tk: int, q_offset, causal: bool,
+               window: Optional[int], chunk: Optional[int]):
+    """(Tq, Tk) boolean mask. q position i attends k position j."""
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    m = jnp.ones((Tq, Tk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    if chunk is not None:
+        m &= (kpos // chunk) == (qpos // chunk)
+    return m
+
+
+def sdpa(q, k, v, mask=None, scale=None, pol=NULL_POLICY):
+    """q: (B,Tq,H,hd) k/v: (B,Tk,KV,hd[v]); GQA broadcast; fp32 softmax."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, Tq, KV, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", p, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H, v.shape[-1]).astype(q.dtype)
+
+
+def attention_gqa(params: Params, x, cfg: ArchConfig, positions,
+                  cache: Optional[Dict] = None, cache_index=None,
+                  pol=NULL_POLICY):
+    """Returns (out, new_cache). cache: {"k","v"} of (B, S_max, KV, hd)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    k = (x @ params["wk"]).reshape(B, T, KV, hd)
+    v = (x @ params["wv"]).reshape(B, T, KV, hd)
+    q = pol.cs(q, "act_bthd")
+    k = pol.cs(k, "act_btkd")
+    v = pol.cs(v, "act_btkd")
+    if cfg.rope_kind == "mrope":
+        secs = default_mrope_sections(hd)
+        pos3 = positions if positions.ndim == 3 else \
+            jnp.repeat(positions[..., None], 3, axis=-1)
+        q = apply_rope(q, pos3, mrope_sections=secs)
+        k = apply_rope(k, pos3, mrope_sections=secs)
+    elif cfg.rope_kind == "rope":
+        q = apply_rope(q, positions)
+        k = apply_rope(k, positions)
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        Tk = ck.shape[1]
+        mask = _attn_mask(T, Tk, cache_index, True, cfg.window, cfg.chunk_size)
+        # mask out beyond-written positions
+        mask = mask & (jnp.arange(Tk)[None, :] <= cache_index + T - 1)
+        out = sdpa(q, ck, cv, mask, pol=pol)
+    else:
+        mask = _attn_mask(T, T, 0, True, cfg.window, cfg.chunk_size)
+        out = sdpa(q, k, v, mask, pol=pol)
+    out = pol.cs(out, "act_bthd")
+    y = out.reshape(B, T, H * hd) @ params["wo"]
+    return pol.cs(y, "act_btd"), new_cache
+
+
+def attention_mla(params: Params, x, cfg: ArchConfig, positions,
+                  cache: Optional[Dict] = None, cache_index=None,
+                  pol=NULL_POLICY):
+    """MLA: KV compressed to a latent of kv_lora_rank (+ shared rope key).
+    The cache stores the latent — this is the memory-term win for decode."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    nope, rdim, vhd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.vhd
+    kvr = cfg.kv_lora_rank or d
+
+    q_lat = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (q_lat @ params["wq_b"]).reshape(B, T, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions)
+
+    kv_all = x @ params["wkv_a"]                      # (B,T,kvr+rdim)
+    kv_lat = rms_norm(kv_all[..., :kvr], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_all[..., kvr:][:, :, None, :], positions)  # (B,T,1,rdim)
+
+    if cache is not None:
+        lat = jax.lax.dynamic_update_slice(
+            cache["lat"], kv_lat.astype(cache["lat"].dtype), (0, cache_index, 0))
+        kr = jax.lax.dynamic_update_slice(
+            cache["rope"], k_rope[:, :, 0, :].astype(cache["rope"].dtype),
+            (0, cache_index, 0))
+        new_cache = {"lat": lat, "rope": kr}
+        kv_lat_full, k_rope_full = lat, kr[:, :, None, :]
+        Tk = lat.shape[1]
+        q_off = cache_index
+    else:
+        new_cache = None
+        kv_lat_full, k_rope_full = kv_lat, k_rope
+        Tk = T
+        q_off = 0
+
+    kv = (kv_lat_full @ params["wkv_b"]).reshape(B, Tk, H, nope + vhd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope_full, (B, Tk, H, rdim)).astype(k_nope.dtype)], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = _attn_mask(T, Tk, q_off, True, cfg.window, cfg.chunk_size)
+    if cache is not None:
+        mask = mask & (jnp.arange(Tk)[None, :] <= cache_index + T - 1)
+    out = sdpa(qfull, k, v, mask, scale=1.0 / math.sqrt(nope + rdim), pol=pol)
+    y = out.reshape(B, T, H * vhd) @ params["wo"]
+    return pol.cs(y, "act_btd"), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d, ff) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, (d, 2 * ff)),   # fused gate+up
+            "w_out": dense_init(k2, (ff, d))}
+
+
+def mlp(params: Params, x, act: str = "silu", pol=NULL_POLICY):
+    gu = x @ params["w_in"]
+    gu = pol.cs(gu, "act_btf2")
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = act_fn(act)(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = h @ params["w_out"]
+    return pol.cs(y, "act_btd")
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    mff = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w_in": dense_init(ks[1], (E, d, 2 * mff)),
+        "w_out": dense_init(ks[2], (E, mff, d)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[3], d, mff * cfg.n_shared_experts)
+    return p
+
+
+def moe(params: Params, x, cfg: ArchConfig, pol=NULL_POLICY):
+    """Top-k routing with capacity-based dispatch.
+
+    Tokens are sorted by destination expert and scattered into an
+    (E, C, d) buffer: expert compute is then one batched einsum — ideal for
+    the MXU and shardable on the "model" axis (expert parallelism). Overflow
+    beyond capacity is dropped (standard Switch-style); aux load-balance loss
+    is returned for training."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    n = B * T
+    xf = x.reshape(n, d)
+    logits = (xf.astype(jnp.float32) @ params["router"])      # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (n, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(8, math.ceil(n * k / E * cfg.capacity_factor)))
+    flat_expert = gate_idx.reshape(-1)                        # (n*k,)
+    # position of each (token, slot) within its expert, via sorted cumcount
+    order = jnp.argsort(flat_expert)
+    sorted_e = flat_expert[order]
+    ones = jnp.ones_like(sorted_e)
+    seg_pos = jax.lax.associative_scan(jnp.add, ones) - 1
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_sorted = seg_pos - seg_start[sorted_e]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)  # (n*k,)
+    keep = pos < cap
+    dst = jnp.where(keep, flat_expert * cap + pos, E * cap)   # overflow → trash
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    tok_rep = jnp.repeat(xf, k, axis=0)
+    buf = buf.at[dst].set(tok_rep)
+    buf = buf[:-1].reshape(E, cap, d)
+    buf = pol.cs(buf, "moe_ecd")
+
+    gu = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = act_fn(cfg.act)(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+    out = pol.cs(out, "moe_ecd")
+
+    out_flat = out.reshape(E * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), x.dtype)], 0)
+    gathered = out_flat[dst]                                  # (n*k, d)
+    w = (gate_vals.reshape(-1) * keep).astype(x.dtype)
+    y = (gathered * w[:, None]).reshape(n, k, d).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], xf, cfg.act, pol=NULL_POLICY)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[flat_expert].add(1.0) / (n * k)
+    aux = E * jnp.sum(me * ce)
+    return pol.cs(y.reshape(B, T, d), "act_btd"), aux
+
+
+# --------------------------------------------------------------------------
+# Chunked decay linear attention (shared by RWKV6 and Mamba2)
+# --------------------------------------------------------------------------
+
+def decay_linear_attention(r, kk, v, w_log, u=None, state=None,
+                           chunk: Optional[int] = None, scalar_decay: bool = False,
+                           pol=NULL_POLICY):
+    """Numerically-stable chunked scan for S_t = diag(exp(w_log_t))·S_{t-1}
+    + k_t ⊗ v_t, with output:
+        u given  (RWKV6):  y_t = r_t·S_{t-1} + (u⊙k_t·r_t)·v_t
+        u None   (Mamba2): y_t = r_t·S_t      (current token decayed in)
+
+    Shapes: r/k/w_log (B,H,T,K), v (B,H,T,V), state (B,H,K,V).
+
+    Stability: every exponential has exponent ≤ 0 (only benign underflow).
+    Inter-chunk terms factor through the running log-decay A (≤ 0); the
+    intra-chunk decay matrix is computed from pairwise DIFFERENCES — as a
+    (C,C) outer difference when the decay is scalar per head (Mamba2), or a
+    (C,C,K) difference tensor at a smaller chunk when per-channel (RWKV6).
+    The Pallas kernel applies the same scheme blockwise in VMEM.
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    C = chunk if chunk is not None else (128 if scalar_decay else 32)
+    C = min(C, T)
+    if T % C != 0:
+        pad = C - T % C
+        z = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, kk, v, w_log = z(r), z(kk), z(v), z(w_log)
+        T_p = T + pad
+    else:
+        T_p = T
+    nC = T_p // C
+    rc = r.reshape(B, H, nC, C, K)
+    kc = kk.reshape(B, H, nC, C, K)
+    vc = v.reshape(B, H, nC, C, V)
+    wc = w_log.reshape(B, H, nC, C, K).astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    rwkv_mode = u is not None
+    tt = jnp.arange(C)
+    mask = (tt[:, None] > tt[None, :]) if rwkv_mode else (tt[:, None] >= tt[None, :])
+
+    def chunk_step(S, inp):
+        rC, kC, vC, wC = inp          # (B,H,C,K/V)
+        A = jnp.cumsum(wC, axis=2)    # inclusive: A_t = Σ_{r≤t} w_r  (≤ 0)
+        A_end = A[:, :, -1:, :]
+        rf = rC.astype(jnp.float32)
+        kf = kC.astype(jnp.float32)
+        vf = vC.astype(jnp.float32)
+        A_q = (A - wC) if rwkv_mode else A          # A_{t-1} vs A_t
+        # ---- inter-chunk: y += (r ⊙ exp(A_q)) · S      (exponents ≤ 0)
+        q_in = rf * jnp.exp(A_q)
+        y = jnp.einsum("bhtk,bhkv->bhtv", q_in, S)
+        # ---- intra-chunk: decay exp(A_q[t] − A[s]) for s<t (or ≤t), ≤ 0
+        if scalar_decay:
+            d1 = A_q[..., 0]                        # (B,H,C)
+            d2 = A[..., 0]
+            D = jnp.exp(jnp.where(mask[None, None],
+                                  d1[:, :, :, None] - d2[:, :, None, :], -jnp.inf))
+            qk = jnp.einsum("bhtk,bhsk->bhts", rf, kf)
+            y = y + jnp.einsum("bhts,bhsv->bhtv", qk * D, vf)
+        else:
+            diff = A_q[:, :, :, None, :] - A[:, :, None, :, :]  # (B,H,C,C,K)
+            D = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+            y = y + jnp.einsum("bhtk,bhtsk,bhsk,bhsv->bhtv", rf, D, kf, vf)
+        if rwkv_mode:
+            uu = u[None, :, None, :] if u.ndim == 2 else u
+            bonus = jnp.einsum("bhtk,bhtk->bht", rf, uu * kf)
+            y = y + bonus[..., None] * vf
+        # ---- state update (exponents ≤ 0)
+        k_carry = kf * jnp.exp(A_end - A)
+        S_new = S * jnp.exp(A_end[:, :, 0, :])[..., None] \
+            + jnp.einsum("bhsk,bhsv->bhkv", k_carry, vf)
+        return S_new, y
+
+    inputs = (jnp.moveaxis(rc, 2, 0), jnp.moveaxis(kc, 2, 0),
+              jnp.moveaxis(vc, 2, 0), jnp.moveaxis(wc, 2, 0))
+    state, ys = jax.lax.scan(chunk_step, state, inputs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T_p, V)[:, :, :T]
+    return y.astype(r.dtype), state
+
+
+# --------------------------------------------------------------------------
+# RWKV6 block
+# --------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg: ArchConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 16)
+    return {
+        "mix": (jax.random.uniform(ks[0], (5, d), jnp.float32) * 0.1 + 0.45
+                ).astype(jnp.bfloat16),  # token-shift mixes for r,k,v,w,g
+        "wr": dense_init(ks[1], (d, d)),
+        "wk": dense_init(ks[2], (d, d)),
+        "wv": dense_init(ks[3], (d, d)),
+        "wg": dense_init(ks[4], (d, d)),
+        "wo": dense_init(ks[5], (d, d)),
+        "w0": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.3 - 6.0),
+        "w_lora_a": dense_init(ks[7], (d, lora)),
+        "w_lora_b": dense_init(ks[8], (lora, d), scale=0.01),
+        "u": (jax.random.normal(ks[9], (H, hd), jnp.float32) * 0.3),
+        "ln_x": init_rms(ks[10], d),
+        # channel mix
+        "cm_mix": (jax.random.uniform(ks[11], (2, d), jnp.float32) * 0.1 + 0.45
+                   ).astype(jnp.bfloat16),
+        "cm_k": dense_init(ks[1], (d, cfg.d_ff)),
+        "cm_v": dense_init(ks[2], (cfg.d_ff, d)),
+        "cm_r": dense_init(ks[3], (d, d)),
+    }
+
+
+def _token_shift(x, last):
+    """shifted(x)[t] = x[t-1]; position 0 takes `last` (decode state)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def rwkv6_block(params: Params, x, cfg: ArchConfig,
+                state: Optional[Dict] = None, pol=NULL_POLICY):
+    """Time-mix with data-dependent decay + channel-mix.
+    state: {"shift_t","shift_c": (B,d), "wkv": (B,H,hd,hd)}."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    if state is None:
+        state = {"shift_t": jnp.zeros((B, d), x.dtype),
+                 "shift_c": jnp.zeros((B, d), x.dtype),
+                 "wkv": jnp.zeros((B, H, hd, hd), jnp.float32)}
+    prev = _token_shift(x, state["shift_t"])
+    mix = params["mix"].astype(x.dtype)
+    xr = x + (prev - x) * mix[0]
+    xk = x + (prev - x) * mix[1]
+    xv = x + (prev - x) * mix[2]
+    xw = x + (prev - x) * mix[3]
+    xg = x + (prev - x) * mix[4]
+    r = (xr @ params["wr"]).reshape(B, T, H, hd)
+    k = (xk @ params["wk"]).reshape(B, T, H, hd)
+    v = (xv @ params["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu((xg @ params["wg"]).astype(jnp.float32))
+    # data-dependent decay: w = exp(-exp(w0 + lora(xw)))  ∈ (0,1)
+    dd = params["w0"] + (jnp.tanh(xw.astype(jnp.float32) @
+                                  params["w_lora_a"].astype(jnp.float32))
+                         @ params["w_lora_b"].astype(jnp.float32))
+    w_log = -jnp.exp(jnp.clip(dd, -12.0, 2.0)).reshape(B, T, H, hd)
+
+    rT = jnp.moveaxis(r, 2, 1)  # (B,H,T,hd)
+    kT = jnp.moveaxis(k, 2, 1)
+    vT = jnp.moveaxis(v, 2, 1)
+    wT = jnp.moveaxis(w_log, 2, 1)
+    y, wkv = decay_linear_attention(rT, kT, vT, wT, u=params["u"],
+                                    state=state["wkv"], pol=pol)
+    y = jnp.moveaxis(y, 1, 2).reshape(B, T, d)
+    y = rms_norm(y, params["ln_x"], cfg.norm_eps) * g.astype(x.dtype)
+    out_t = y @ params["wo"]
+
+    # channel mix
+    xc = x + out_t
+    prev_c = _token_shift(xc, state["shift_c"])
+    cmix = params["cm_mix"].astype(x.dtype)
+    xk2 = xc + (prev_c - xc) * cmix[0]
+    xr2 = xc + (prev_c - xc) * cmix[1]
+    kk = jnp.square(jax.nn.relu((xk2 @ params["cm_k"]).astype(jnp.float32)))
+    cm = (kk.astype(x.dtype) @ params["cm_v"])
+    rr = jax.nn.sigmoid((xr2 @ params["cm_r"]).astype(jnp.float32)).astype(x.dtype)
+    out = xc + rr * cm
+    new_state = {"shift_t": x[:, -1, :], "shift_c": xc[:, -1, :], "wkv": wkv}
+    return pol.cs(out, "act_btd"), new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block (SSD, scalar per-head decay)
+# --------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    dn = cfg.ssm_state
+    H = cfg.n_heads
+    P = 2 * d // H                      # head dim of the expanded stream
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d + 2 * dn + H)),  # x(2d),z(2d),B,C,dt
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rms(ks[1], 2 * d),
+        "w_out": dense_init(ks[2], (2 * d, d)),
+    }
+
+
+def mamba2_block(params: Params, x, cfg: ArchConfig,
+                 state: Optional[jnp.ndarray] = None, pol=NULL_POLICY):
+    """SSD: y_t = Σ_{s≤t} exp(A·Σdt) (C_t·B_s) x_s + D x_t (per head)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dn = cfg.ssm_state
+    P = 2 * d // H
+    zxbcdt = x @ params["w_in"]
+    xs, z, Bm, Cm, dt = jnp.split(
+        zxbcdt, [2 * d, 4 * d, 4 * d + dn, 4 * d + 2 * dn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(params["A_log"])                                     # (H,)
+    w_log = (dt * a)                                                  # (B,T,H) ≤ 0
+    xh = xs.reshape(B, T, H, P)
+    # r=C, k=B (shared across heads), v = dt-scaled x
+    r = jnp.broadcast_to(Cm[:, :, None, :], (B, T, H, dn))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, T, H, dn))
+    v = xh * dt[..., None].astype(xh.dtype)
+    rT = jnp.moveaxis(r, 2, 1).astype(x.dtype)
+    kT = jnp.moveaxis(k, 2, 1).astype(x.dtype)
+    vT = jnp.moveaxis(v, 2, 1)
+    wT = jnp.broadcast_to(jnp.moveaxis(w_log, 2, 1)[..., None], (B, H, T, dn))
+    y, new_state = decay_linear_attention(rT, kT, vT, wT, u=None,
+                                          state=state, scalar_decay=True,
+                                          pol=pol)
+    y = jnp.moveaxis(y, 1, 2).reshape(B, T, 2 * d)
+    y = y + (xh * params["D"].astype(xh.dtype)[None, None, :, None]
+             ).reshape(B, T, 2 * d)
+    y = rms_norm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["w_out"]
+    return pol.cs(out, "act_btd"), new_state
+
+
+# --------------------------------------------------------------------------
+# Embedding
+# --------------------------------------------------------------------------
+
+def init_embed(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.vocab_size, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), scale=0.02)
+    return p
+
+
+def embed(params: Params, tokens, pol=NULL_POLICY):
+    y = jnp.take(params["tok"], tokens, axis=0)
+    return pol.cs(y, "act_btd")
+
+
+def unembed(params: Params, x, cfg: ArchConfig, pol=NULL_POLICY):
+    w = params["tok"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w
+    return pol.cs(logits, "logits")

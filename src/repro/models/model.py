@@ -1,0 +1,450 @@
+"""Composable model assembly: init, forward, prefill/decode, loss.
+
+One ``forward`` covers all 10 assigned architectures, dispatching per
+family; layer stacks run under ``jax.lax.scan`` over stacked parameters so
+HLO size is O(1) in depth (critical at 61–80 layers × 512 devices).
+
+Caches (decode):
+  gqa      {"k","v"}           (L, B, S_max, KV, hd)
+  mla      {"lat","rope"}      (L, B, S_max, kvr | rdim)     ← latent only
+  rwkv6    {"shift_t","shift_c","wkv"}  (L,B,d) / (L,B,H,hd,hd)
+  mamba2   {"ssm"}             (L, B, H, dn, P)
+  zamba2   mamba states + per-application-site KV for the ONE shared block
+  enc-dec  decoder self KV + precomputed cross KV from the encoder
+
+Modality frontends (vlm/audio) are stubs per the assignment: inputs arrive
+as precomputed patch/frame embeddings of shape (B, T, d_model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import ArchConfig
+from .layers import (NULL_POLICY, attention_gqa, attention_mla, embed,
+                     init_attention, init_embed, init_mlp, init_moe,
+                     init_mamba2, init_rwkv6, mamba2_block, mlp, moe,
+                     rms_norm, rwkv6_block, unembed, init_rms, dense_init)
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def _init_block(key, cfg: ArchConfig, kind: str) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": init_rms(k3, cfg.d_model)}
+    if kind == "dense":
+        p["attn"] = init_attention(k1, cfg)
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+        p["ln2"] = init_rms(k4, cfg.d_model)
+    elif kind == "moe":
+        p["attn"] = init_attention(k1, cfg)
+        p["moe"] = init_moe(k2, cfg)
+        p["ln2"] = init_rms(k4, cfg.d_model)
+    elif kind == "rwkv6":
+        p = {"rwkv": init_rwkv6(k1, cfg)}
+    elif kind == "mamba2":
+        p["mamba"] = init_mamba2(k1, cfg)
+    elif kind == "cross":  # decoder block: self-attn + cross-attn + mlp
+        p["attn"] = init_attention(k1, cfg)
+        p["cross"] = init_attention(k2, cfg)
+        p["ln_cross"] = init_rms(k4, cfg.d_model)
+        p["mlp"] = init_mlp(jax.random.fold_in(k2, 7), cfg.d_model, cfg.d_ff)
+        p["ln2"] = init_rms(jax.random.fold_in(k4, 7), cfg.d_model)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    """Concrete initialization (smoke tests / examples; full configs are only
+    ever lowered abstractly via param_specs)."""
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": init_embed(ks[0], cfg),
+                 "ln_f": init_rms(ks[1], cfg.d_model)}
+    if cfg.enc_dec:
+        p["enc"] = _stack([_init_block(jax.random.fold_in(ks[2], i), cfg, "dense")
+                           for i in range(cfg.n_enc_layers)])
+        p["dec"] = _stack([_init_block(jax.random.fold_in(ks[3], i), cfg, "cross")
+                           for i in range(cfg.n_dec_layers)])
+        p["ln_enc"] = init_rms(ks[4], cfg.d_model)
+        return p
+    if cfg.ssm_kind == "rwkv6":
+        p["layers"] = _stack([_init_block(jax.random.fold_in(ks[2], i), cfg, "rwkv6")
+                              for i in range(cfg.n_layers)])
+        return p
+    if cfg.ssm_kind == "mamba2":
+        p["layers"] = _stack([_init_block(jax.random.fold_in(ks[2], i), cfg, "mamba2")
+                              for i in range(cfg.n_layers)])
+        if cfg.shared_attn:
+            p["shared_attn"] = _init_block(ks[5], cfg, "dense")
+        return p
+    if cfg.moe:
+        if cfg.n_dense_layers:
+            p["dense_layers"] = _stack(
+                [_init_block(jax.random.fold_in(ks[2], i), cfg, "dense")
+                 for i in range(cfg.n_dense_layers)])
+        p["layers"] = _stack(
+            [_init_block(jax.random.fold_in(ks[3], i), cfg, "moe")
+             for i in range(cfg.n_layers - cfg.n_dense_layers)])
+        return p
+    p["layers"] = _stack([_init_block(jax.random.fold_in(ks[2], i), cfg, "dense")
+                          for i in range(cfg.n_layers)])
+    return p
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+def make_caches(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16,
+                abstract: bool = False):
+    """Concrete zeros (or ShapeDtypeStructs for the dry-run)."""
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+    B = batch
+    if cfg.enc_dec:
+        L = cfg.n_dec_layers
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        return {"k": mk((L, B, s_max, KV, hd), dtype),
+                "v": mk((L, B, s_max, KV, hd), dtype),
+                "xk": mk((L, B, s_max, KV, hd), dtype),   # cross K (enc len)
+                "xv": mk((L, B, s_max, KV, hd), dtype)}
+    if cfg.ssm_kind == "rwkv6":
+        L, d, H = cfg.n_layers, cfg.d_model, cfg.n_heads
+        hd = d // H
+        return {"shift_t": mk((L, B, d), dtype), "shift_c": mk((L, B, d), dtype),
+                "wkv": mk((L, B, H, hd, hd), jnp.float32)}
+    if cfg.ssm_kind == "mamba2":
+        L, H, dn = cfg.n_layers, cfg.n_heads, cfg.ssm_state
+        P = 2 * cfg.d_model // H
+        c = {"ssm": mk((L, B, H, dn, P), jnp.float32)}
+        if cfg.shared_attn:
+            n_sites = max(1, cfg.n_layers // max(1, cfg.hybrid_every))
+            c["k"] = mk((n_sites, B, s_max, cfg.n_kv_heads, cfg.hd), dtype)
+            c["v"] = mk((n_sites, B, s_max, cfg.n_kv_heads, cfg.hd), dtype)
+        return c
+    if cfg.attn_kind == "mla":
+        L = cfg.n_layers
+        return {"lat": mk((L, B, s_max, cfg.kv_lora_rank), dtype),
+                "rope": mk((L, B, s_max, cfg.qk_rope_dim), dtype)}
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    s_eff = min(s_max, cfg.window) if cfg.window else s_max
+    s_eff = s_max  # keep absolute positions; window masks reads
+    return {"k": mk((L, B, s_eff, KV, hd), dtype),
+            "v": mk((L, B, s_eff, KV, hd), dtype)}
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _dense_block(bp, h, cfg, positions, cache, idx, pol):
+    attn_fn = attention_mla if cfg.attn_kind == "mla" else attention_gqa
+    a, new_cache = attn_fn(bp["attn"], rms_norm(h, bp["ln1"], cfg.norm_eps),
+                           cfg, positions, cache, idx, pol)
+    h = h + a
+    h = h + mlp(bp["mlp"], rms_norm(h, bp["ln2"], cfg.norm_eps), cfg.act, pol)
+    return h, new_cache
+
+
+def _moe_block(bp, h, cfg, positions, cache, idx, pol):
+    attn_fn = attention_mla if cfg.attn_kind == "mla" else attention_gqa
+    a, new_cache = attn_fn(bp["attn"], rms_norm(h, bp["ln1"], cfg.norm_eps),
+                           cfg, positions, cache, idx, pol)
+    h = h + a
+    y, aux = moe(bp["moe"], rms_norm(h, bp["ln2"], cfg.norm_eps), cfg, pol)
+    return h + y, new_cache, aux
+
+
+def _scan_blocks(stack_params, h, cfg, positions, caches, idx, pol, kind):
+    """lax.scan over stacked layer params (+ per-layer caches)."""
+    use_cache = caches is not None
+
+    def body(carry, xs):
+        h = carry
+        if use_cache:
+            bp, cache_l = xs
+        else:
+            bp, cache_l = xs, None
+        if kind == "dense":
+            h, nc = _dense_block(bp, h, cfg, positions, cache_l, idx, pol)
+            aux = jnp.zeros((), jnp.float32)
+        elif kind == "moe":
+            h, nc, aux = _moe_block(bp, h, cfg, positions, cache_l, idx, pol)
+        elif kind == "rwkv6":
+            h, nc = rwkv6_block(bp["rwkv"], h, cfg, cache_l, pol)
+            aux = jnp.zeros((), jnp.float32)
+        elif kind == "mamba2":
+            hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            y, nst = mamba2_block(bp["mamba"], hn, cfg,
+                                  cache_l["ssm"] if cache_l else None, pol)
+            h = h + y
+            nc = {"ssm": nst} if use_cache else None
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(kind)
+        if not use_cache:
+            nc = jnp.zeros((), jnp.float32)  # dummy scan output
+        return h, (nc, aux)
+
+    body_fn = body
+    if getattr(pol, "remat", "none") != "none":
+        policy = {"full": None,
+                  "dots": jax.checkpoint_policies.checkpoint_dots,
+                  "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                  }.get(pol.remat, None)
+        body_fn = jax.checkpoint(body, policy=policy) if policy is None \
+            else jax.checkpoint(body, policy=policy)
+
+    xs = (stack_params, caches) if use_cache else stack_params
+    h, (new_caches, auxs) = _maybe_scan(body_fn, h, xs, pol)
+    return h, (new_caches if use_cache else None), jnp.sum(auxs)
+
+
+def _maybe_scan(body_fn, carry, xs, pol):
+    """lax.scan, or an unrolled python loop when pol.unroll_layers is set.
+
+    Unrolling is used by the dry-run so compiled.cost_analysis() counts
+    every layer's FLOPs/bytes/collectives (XLA tallies while-loop bodies
+    exactly once); real training uses the scan for O(1)-in-depth HLO."""
+    if not getattr(pol, "unroll_layers", False):
+        return jax.lax.scan(body_fn, carry, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(L):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, out = body_fn(carry, x_i)
+        outs.append(out)
+    stacked = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys, axis=0), *outs)
+    return carry, stacked
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ArchConfig, inputs, positions,
+            caches=None, cache_index=None, pol=NULL_POLICY,
+            enc_inputs=None):
+    """Returns (logits, new_caches, aux_loss).
+
+    inputs: int tokens (B,T) or precomputed embeddings (B,T,d) for
+    vlm/audio frontends. enc_inputs: encoder-side embeddings for enc-dec.
+    """
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        h = embed(params["embed"], inputs, pol)
+    else:
+        h = pol.cs(inputs.astype(jnp.bfloat16), "act_btd")
+    aux_total = jnp.zeros((), jnp.float32)
+    idx = cache_index if cache_index is not None else 0
+
+    if cfg.enc_dec:
+        return _forward_encdec(params, cfg, h, positions, caches, idx, pol,
+                               enc_inputs)
+
+    if cfg.ssm_kind == "mamba2" and cfg.shared_attn:
+        return _forward_zamba(params, cfg, h, positions, caches, idx, pol)
+
+    if cfg.ssm_kind in ("rwkv6", "mamba2"):
+        kind = cfg.ssm_kind
+        h, new_caches, aux = _scan_blocks(params["layers"], h, cfg, positions,
+                                          caches, idx, pol, kind)
+        aux_total += aux
+    elif cfg.moe:
+        new_caches = {}
+        dense_caches = moe_caches = None
+        if caches is not None:
+            nd = cfg.n_dense_layers
+            dense_caches = jax.tree_util.tree_map(lambda c: c[:nd], caches)
+            moe_caches = jax.tree_util.tree_map(lambda c: c[nd:], caches)
+        if cfg.n_dense_layers:
+            h, ncd, _ = _scan_blocks(params["dense_layers"], h, cfg, positions,
+                                     dense_caches, idx, pol, "dense")
+        else:
+            ncd = None
+        h, ncm, aux = _scan_blocks(params["layers"], h, cfg, positions,
+                                   moe_caches, idx, pol, "moe")
+        aux_total += aux
+        if caches is not None:
+            if ncd is not None:
+                new_caches = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), ncd, ncm)
+            else:
+                new_caches = ncm
+        else:
+            new_caches = None
+    else:
+        h, new_caches, _ = _scan_blocks(params["layers"], h, cfg, positions,
+                                        caches, idx, pol, "dense")
+
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg, pol)
+    return logits, new_caches, aux_total
+
+
+def _forward_zamba(params, cfg, h, positions, caches, idx, pol):
+    """Zamba2: mamba2 stack with ONE shared attention block applied every
+    `hybrid_every` layers. Each application site has its own KV cache but
+    the SAME parameters (the paper's parameter-sharing trick)."""
+    every = max(1, cfg.hybrid_every)
+    n_sites = max(1, cfg.n_layers // every)
+    mstack = params["layers"]
+    new_ssm = []
+    new_k, new_v = [], []
+    for g in range(n_sites):
+        lo, hi = g * every, min((g + 1) * every, cfg.n_layers)
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], mstack)
+        seg_cache = None
+        if caches is not None:
+            seg_cache = {"ssm": caches["ssm"][lo:hi]}
+        h, nc, _ = _scan_blocks(seg, h, cfg, positions, seg_cache, idx, pol,
+                                "mamba2")
+        if caches is not None:
+            new_ssm.append(nc["ssm"])
+        sp = params["shared_attn"]
+        site_cache = None
+        if caches is not None and "k" in caches:
+            site_cache = {"k": caches["k"][g], "v": caches["v"][g]}
+        h, site_nc = _dense_block(sp, h, cfg, positions, site_cache, idx, pol)
+        if site_nc is not None:
+            new_k.append(site_nc["k"])
+            new_v.append(site_nc["v"])
+    tail = n_sites * every
+    if tail < cfg.n_layers:
+        seg = jax.tree_util.tree_map(lambda a: a[tail:], mstack)
+        seg_cache = {"ssm": caches["ssm"][tail:]} if caches is not None else None
+        h, nc, _ = _scan_blocks(seg, h, cfg, positions, seg_cache, idx, pol,
+                                "mamba2")
+        if caches is not None:
+            new_ssm.append(nc["ssm"])
+    new_caches = None
+    if caches is not None:
+        new_caches = {"ssm": jnp.concatenate(new_ssm, axis=0)}
+        if new_k:
+            new_caches["k"] = jnp.stack(new_k, axis=0)
+            new_caches["v"] = jnp.stack(new_v, axis=0)
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg, pol)
+    return logits, new_caches, jnp.zeros((), jnp.float32)
+
+
+def _forward_encdec(params, cfg, h_dec, positions, caches, idx, pol, enc_inputs):
+    """Encoder-decoder (seamless): bidirectional encoder, causal decoder with
+    cross attention. For decode steps, enc_inputs is None and the cross KV
+    comes from the cache (computed at prefill)."""
+    dcfg = cfg
+    enc_out = None
+    if enc_inputs is not None:
+        he = pol.cs(enc_inputs.astype(jnp.bfloat16), "act_btd")
+        enc_pos = jnp.broadcast_to(jnp.arange(he.shape[1])[None], he.shape[:2])
+        ecfg = dataclasses.replace(cfg, window=None, chunk_size=None)
+
+        def enc_body(carry, bp):
+            hh = carry
+            from .layers import attention_gqa as ag
+            x = rms_norm(hh, bp["ln1"], cfg.norm_eps)
+            B, T, d = x.shape
+            H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = (x @ bp["attn"]["wq"]).reshape(B, T, H, hd)
+            k = (x @ bp["attn"]["wk"]).reshape(B, T, KV, hd)
+            v = (x @ bp["attn"]["wv"]).reshape(B, T, KV, hd)
+            from .layers import apply_rope, sdpa
+            q = apply_rope(q, enc_pos)
+            k = apply_rope(k, enc_pos)
+            out = sdpa(q, k, v, mask=None, pol=pol)   # bidirectional
+            hh = hh + out.reshape(B, T, H * hd) @ bp["attn"]["wo"]
+            hh = hh + mlp(bp["mlp"], rms_norm(hh, bp["ln2"], cfg.norm_eps),
+                          cfg.act, pol)
+            return hh, jnp.zeros((), jnp.float32)
+
+        he, _ = _maybe_scan(enc_body, he, params["enc"], pol)
+        enc_out = rms_norm(he, params["ln_enc"], cfg.norm_eps)
+
+    # decoder
+    use_cache = caches is not None
+
+    def dec_body(carry, xs):
+        hh = carry
+        bp, cache_l = xs if use_cache else (xs, None)
+        self_cache = {"k": cache_l["k"], "v": cache_l["v"]} if use_cache else None
+        a, nc_self = attention_gqa(bp["attn"],
+                                   rms_norm(hh, bp["ln1"], cfg.norm_eps),
+                                   dcfg, positions, self_cache, idx, pol)
+        hh = hh + a
+        # cross attention
+        from .layers import sdpa
+        x = rms_norm(hh, bp["ln_cross"], cfg.norm_eps)
+        B, T, d = x.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (x @ bp["cross"]["wq"]).reshape(B, T, H, hd)
+        if enc_out is not None:
+            xk = (enc_out @ bp["cross"]["wk"]).reshape(B, enc_out.shape[1], KV, hd)
+            xv = (enc_out @ bp["cross"]["wv"]).reshape(B, enc_out.shape[1], KV, hd)
+            if use_cache:
+                S = cache_l["xk"].shape[1]
+                xk_c = jax.lax.dynamic_update_slice(
+                    cache_l["xk"], xk.astype(cache_l["xk"].dtype), (0, 0, 0, 0))
+                xv_c = jax.lax.dynamic_update_slice(
+                    cache_l["xv"], xv.astype(cache_l["xv"].dtype), (0, 0, 0, 0))
+            else:
+                xk_c, xv_c = xk, xv
+        else:
+            xk_c, xv_c = cache_l["xk"], cache_l["xv"]
+        out = sdpa(q, xk_c, xv_c, mask=None, pol=pol)
+        hh = hh + out.reshape(B, T, H * hd) @ bp["cross"]["wo"]
+        hh = hh + mlp(bp["mlp"], rms_norm(hh, bp["ln2"], cfg.norm_eps),
+                      cfg.act, pol)
+        if use_cache:
+            return hh, ({"k": nc_self["k"], "v": nc_self["v"],
+                         "xk": xk_c, "xv": xv_c}, jnp.zeros((), jnp.float32))
+        return hh, (jnp.zeros(()), jnp.zeros((), jnp.float32))
+
+    xs = (params["dec"], caches) if use_cache else params["dec"]
+    h_dec, (ncs, _) = _maybe_scan(dec_body, h_dec, xs, pol)
+    h_dec = rms_norm(h_dec, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], h_dec, cfg, pol)
+    return logits, (ncs if use_cache else None), jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+def lm_loss(logits, labels, pol=NULL_POLICY):
+    """Next-token cross entropy in fp32; labels -100 are masked."""
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.clip(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, pol=NULL_POLICY,
+            aux_weight: float = 0.01):
+    inputs = batch.get("embeds", batch.get("tokens"))
+    positions = batch.get("positions")
+    if positions is None:
+        B, T = inputs.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    enc_inputs = batch.get("enc_embeds")
+    logits, _, aux = forward(params, cfg, inputs, positions, pol=pol,
+                             enc_inputs=enc_inputs)
+    return lm_loss(logits, batch["labels"], pol) + aux_weight * aux

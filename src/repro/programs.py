@@ -1,0 +1,305 @@
+"""The paper's example programs and workloads, as executable region IR.
+
+  * ``make_p0 / make_p1 / make_p2`` — Fig. 3 (Hibernate N+1 / SQL join /
+    prefetch) over TPC-DS-sized ``orders`` / ``customer`` tables.
+  * ``make_m0`` — Fig. 7 (dependent aggregations: sum + cumulative sum).
+  * ``make_wilos_<X>`` — one representative program per Wilos pattern A–F
+    (Fig. 14), matching the paper's descriptions.
+  * data generators with configurable cardinalities, many-to-one ratio and
+    predicate selectivity (Sec. VIII experiment setup).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .relational.algebra import (AggSpec, Aggregate, Cmp, Col, Join, Lit,
+                                 OrderBy, Param, Project, Scan, Select)
+from .relational.database import DatabaseServer
+from .relational.table import Field, Schema, Table
+from .core.regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
+                           CondRegion, IBin, ICacheLookup, ICall, IConst,
+                           IEmptyList, IEmptyMap, IField, ILoadAll, INav,
+                           IQuery, IVar, LoopRegion, MapPut, Prefetch, Program,
+                           SeqRegion, UpdateRow, seq)
+
+__all__ = [
+    "make_orders_customer_db", "make_sales_db", "make_wilos_db",
+    "make_p0", "make_p1", "make_p2", "make_m0",
+    "make_wilos_a", "make_wilos_b", "make_wilos_c", "make_wilos_d",
+    "make_wilos_e", "make_wilos_f", "WILOS_PROGRAMS",
+]
+
+# make the programs' pure functions available to relational computed columns
+# (rule T4 translates imperative calls into projected scalar expressions)
+from .relational.algebra import register_scalar_func as _reg
+from .core.regions import get_function as _getf
+
+for _name in ("myFunc", "combine", "scale"):
+    _reg(_name, _getf(_name))
+
+
+# --------------------------------------------------------------------------
+# Data generators
+# --------------------------------------------------------------------------
+
+def make_orders_customer_db(n_orders: int, n_customers: int,
+                            seed: int = 0) -> DatabaseServer:
+    """TPC-DS-sized rows: customer ≈ 132 B, orders (store_sales-ish) ≈ 100 B."""
+    rng = np.random.default_rng(seed)
+    customer = Table.from_columns(
+        "customer",
+        Schema.of(Field("c_customer_sk", "int64", 8),
+                  Field("c_birth_year", "int32", 4),
+                  Field("c_credit", "float32", 4),
+                  Field("c_payload", "int32", 116)),  # varchar payload stand-in
+        c_customer_sk=np.arange(n_customers, dtype=np.int64),
+        c_birth_year=rng.integers(1930, 2005, n_customers),
+        c_credit=rng.uniform(0, 1e4, n_customers).astype(np.float32),
+        c_payload=rng.integers(0, 1 << 20, n_customers),
+    )
+    orders = Table.from_columns(
+        "orders",
+        Schema.of(Field("o_id", "int64", 8),
+                  Field("o_customer_sk", "int64", 8),
+                  Field("o_amt", "float32", 4),
+                  Field("o_payload", "int32", 80)),
+        o_id=np.arange(n_orders, dtype=np.int64),
+        o_customer_sk=rng.integers(0, n_customers, n_orders),
+        o_amt=rng.uniform(1, 500, n_orders).astype(np.float32),
+        o_payload=rng.integers(0, 1 << 20, n_orders),
+    )
+    return DatabaseServer({"customer": customer, "orders": orders})
+
+
+def make_sales_db(n_sales: int, n_months: int = 12, seed: int = 1) -> DatabaseServer:
+    rng = np.random.default_rng(seed)
+    sales = Table.from_columns(
+        "sales",
+        Schema.of(Field("month", "int32", 4), Field("sale_amt", "float32", 4),
+                  Field("s_payload", "int32", 92)),
+        month=rng.integers(1, n_months + 1, n_sales),
+        sale_amt=rng.uniform(1, 100, n_sales).astype(np.float32),
+        s_payload=rng.integers(0, 1 << 20, n_sales),
+    )
+    return DatabaseServer({"sales": sales})
+
+
+def make_wilos_db(n_big: int, ratio: int = 10, seed: int = 2) -> DatabaseServer:
+    """Two relations with a many-to-one FK (ratio:1), per the Exp-4 setup
+    (mapping ratio 10:1, selectivity 20%)."""
+    rng = np.random.default_rng(seed)
+    n_small = max(1, n_big // ratio)
+    small = Table.from_columns(
+        "roles",
+        Schema.of(Field("r_id", "int64", 8), Field("r_rank", "int32", 4),
+                  Field("r_payload", "int32", 120)),
+        r_id=np.arange(n_small, dtype=np.int64),
+        r_rank=rng.integers(0, 5, n_small),  # 20% selectivity on == one rank
+        r_payload=rng.integers(0, 1 << 20, n_small),
+    )
+    big = Table.from_columns(
+        "tasks",
+        Schema.of(Field("t_id", "int64", 8), Field("t_role_id", "int64", 8),
+                  Field("t_state", "int32", 4), Field("t_hours", "float32", 4),
+                  Field("t_payload", "int32", 76)),
+        t_id=np.arange(n_big, dtype=np.int64),
+        t_role_id=rng.integers(0, n_small, n_big),
+        t_state=rng.integers(0, 5, n_big),
+        t_hours=rng.uniform(0, 40, n_big).astype(np.float32),
+        t_payload=rng.integers(0, 1 << 20, n_big),
+    )
+    return DatabaseServer({"roles": small, "tasks": big})
+
+
+# --------------------------------------------------------------------------
+# Fig. 3 — P0 / P1 / P2
+# --------------------------------------------------------------------------
+
+def make_p0() -> Program:
+    """Hibernate ORM program: per-order navigation → N+1 selects."""
+    body = seq(
+        Assign("cust", INav(IVar("o"), "o_customer_sk", "customer", "c_customer_sk")),
+        Assign("val", ICall("myFunc", (IField(IVar("o"), "o_id"),
+                                       IField(IVar("cust"), "c_birth_year")))),
+        CollectionAdd("result", IVar("val")),
+    )
+    return Program(
+        "P0",
+        seq(Assign("result", IEmptyList()),
+            LoopRegion("o", ILoadAll("orders"), body, label="L3-7")),
+        outputs=("result",),
+    )
+
+
+def make_p1() -> Program:
+    """Rewritten to a single SQL join (Fig. 3b)."""
+    join = Join(Scan("orders"), Scan("customer"), "o_customer_sk", "c_customer_sk")
+    body = seq(
+        Assign("val", ICall("myFunc", (IField(IVar("r"), "o_id"),
+                                       IField(IVar("r"), "c_birth_year")))),
+        CollectionAdd("result", IVar("val")),
+    )
+    return Program(
+        "P1",
+        seq(Assign("result", IEmptyList()),
+            LoopRegion("r", IQuery(join), body)),
+        outputs=("result",),
+    )
+
+
+def make_p2() -> Program:
+    """Rewritten to prefetch + local cache lookups (Fig. 3c)."""
+    body = seq(
+        Assign("cust", ICacheLookup("customer", "c_customer_sk",
+                                    IField(IVar("o"), "o_customer_sk"))),
+        Assign("val", ICall("myFunc", (IField(IVar("o"), "o_id"),
+                                       IField(IVar("cust"), "c_birth_year")))),
+        CollectionAdd("result", IVar("val")),
+    )
+    return Program(
+        "P2",
+        seq(Assign("result", IEmptyList()),
+            BasicBlock(Prefetch(Scan("customer"), "c_customer_sk")),
+            LoopRegion("o", ILoadAll("orders"), body)),
+        outputs=("result",),
+    )
+
+
+# --------------------------------------------------------------------------
+# Fig. 7 — M0 (dependent aggregations)
+# --------------------------------------------------------------------------
+
+def make_m0() -> Program:
+    q = OrderBy(("month",), Project(("month", "sale_amt"), Scan("sales")))
+    body = seq(
+        Assign("total", IBin("+", IVar("total"), IField(IVar("t"), "sale_amt"))),
+        MapPut("cSum", IField(IVar("t"), "month"), IVar("total")),
+    )
+    return Program(
+        "M0",
+        seq(Assign("total", IConst(0.0)),
+            Assign("cSum", IEmptyMap()),
+            LoopRegion("t", IQuery(q), body)),
+        outputs=("total", "cSum"),
+    )
+
+
+# --------------------------------------------------------------------------
+# Wilos patterns A–F (Fig. 14)
+# --------------------------------------------------------------------------
+
+def make_wilos_a() -> Program:
+    """A: nested loops with intermittent updates. The inner loop filters an
+    inner relation imperatively; the outer loop issues DB updates, so only
+    the inner loop can move to SQL — or be prefetched (Cobra's choice)."""
+    inner = LoopRegion(
+        "y", ILoadAll("tasks"),
+        CondRegion(IBin("==", IField(IVar("y"), "t_role_id"),
+                        IField(IVar("x"), "r_id")),
+                   BasicBlock(Assign("cnt", IBin("+", IVar("cnt"), IConst(1))))))
+    outer_body = seq(
+        Assign("cnt", IConst(0)),
+        inner,
+        UpdateRow("roles", "r_rank", IVar("cnt"), "r_id", IField(IVar("x"), "r_id")),
+    )
+    return Program(
+        "W_A",
+        seq(LoopRegion("x", ILoadAll("roles"), outer_body)),
+        outputs=(),
+    )
+
+
+def make_wilos_b() -> Program:
+    """B: multiple aggregations in one loop — a scalar count plus a collection
+    touching every row. Extracting the count to SQL adds a query (heuristic);
+    Cobra keeps the original single query."""
+    body = seq(
+        Assign("n", IBin("+", IVar("n"), IConst(1))),
+        CollectionAdd("items", ICall("scale", (IField(IVar("t"), "t_hours"),))),
+    )
+    return Program(
+        "W_B",
+        seq(Assign("n", IConst(0)),
+            Assign("items", IEmptyList()),
+            LoopRegion("t", ILoadAll("tasks"), body)),
+        outputs=("n", "items"),
+    )
+
+
+def make_wilos_c() -> Program:
+    """C: nested-loops join implemented imperatively."""
+    inner = LoopRegion(
+        "y", ILoadAll("roles"),
+        CondRegion(IBin("==", IField(IVar("y"), "r_id"),
+                        IField(IVar("x"), "t_role_id")),
+                   BasicBlock(CollectionAdd(
+                       "result", ICall("combine", (IField(IVar("x"), "t_hours"),
+                                                   IField(IVar("y"), "r_rank")))))))
+    return Program(
+        "W_C",
+        seq(Assign("result", IEmptyList()),
+            LoopRegion("x", ILoadAll("tasks"), inner)),
+        outputs=("result",),
+    )
+
+
+def make_wilos_d() -> Program:
+    """D: a per-row 'function' (inlined) aggregating a correlated query."""
+    inner_q = IQuery(Select(Cmp("==", Col("t_role_id"), Param("rid")), Scan("tasks")),
+                     (("rid", IField(IVar("x"), "r_id")),))
+    inner = LoopRegion("y", inner_q,
+                       BasicBlock(Assign("s", IBin("+", IVar("s"),
+                                                   IField(IVar("y"), "t_hours")))))
+    body = seq(Assign("s", IConst(0.0)), inner,
+               CollectionAdd("result", IVar("s")))
+    return Program(
+        "W_D",
+        seq(Assign("result", IEmptyList()),
+            LoopRegion("x", ILoadAll("roles"), body)),
+        outputs=("result",),
+    )
+
+
+def make_wilos_e() -> Program:
+    """E: the same relation filtered differently across (recursive) calls —
+    modeled as a loop over a worklist issuing per-key σ queries."""
+    inner_q = IQuery(Select(Cmp("==", Col("t_role_id"), Param("rid")), Scan("tasks")),
+                     (("rid", IVar("wid")),))
+    inner = LoopRegion("y", inner_q,
+                       BasicBlock(CollectionAdd("result",
+                                                IField(IVar("y"), "t_hours"))))
+    return Program(
+        "W_E",
+        seq(Assign("result", IEmptyList()),
+            LoopRegion("wid", IVar("worklist"), inner)),
+        outputs=("result",),
+        inputs=(("worklist", ()),),
+    )
+
+
+def make_wilos_f() -> Program:
+    """F: different column subsets of one relation used by different callees —
+    two narrow queries vs. one prefetch of the whole relation."""
+    q1 = Project(("t_hours",), Scan("tasks"))
+    q2 = Project(("t_state",), Scan("tasks"))
+    l1 = LoopRegion("a", IQuery(q1),
+                    BasicBlock(Assign("hours", IBin("+", IVar("hours"),
+                                                    IField(IVar("a"), "t_hours")))))
+    l2 = LoopRegion("b", IQuery(q2),
+                    BasicBlock(Assign("states", IBin("+", IVar("states"),
+                                                     IField(IVar("b"), "t_state")))))
+    return Program(
+        "W_F",
+        seq(Assign("hours", IConst(0.0)), l1,
+            Assign("states", IConst(0)), l2),
+        outputs=("hours", "states"),
+    )
+
+
+WILOS_PROGRAMS = {
+    "A": make_wilos_a, "B": make_wilos_b, "C": make_wilos_c,
+    "D": make_wilos_d, "E": make_wilos_e, "F": make_wilos_f,
+}

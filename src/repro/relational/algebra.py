@@ -1,0 +1,583 @@
+"""Relational algebra over columnar JAX tables.
+
+Query trees are what Cobra's F-IR relational leaves (σ, π, ⋈, γ — Fig. 11)
+denote. Every node can:
+
+  * ``execute(db)``   — produce a concrete ``Table`` (vectorized jnp compute)
+  * ``sql()``         — render as SQL text (for logs / EXPERIMENTS.md)
+  * structural hash / equality — required by the Region DAG's duplicate
+    detection (Volcano/Cascades memoization).
+
+Scalar expressions (``Col``, ``Lit``, arithmetic, comparisons, boolean
+combinators, ``Func``) evaluate column-vectorized over a table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import Field, Schema, Table
+
+__all__ = [
+    "Scalar", "Col", "Lit", "Arith", "Cmp", "BoolOp", "Not", "Func", "Param",
+    "Query", "Scan", "Select", "Project", "Join", "Aggregate", "OrderBy", "Limit",
+    "AggSpec", "equi_join_indices", "register_scalar_func",
+]
+
+# --------------------------------------------------------------------------
+# Scalar expressions
+# --------------------------------------------------------------------------
+
+_SCALAR_FUNCS: Dict[str, Callable] = {
+    "abs": jnp.abs,
+    "sqrt": jnp.sqrt,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "floor": jnp.floor,
+    "ceil": jnp.ceil,
+    "neg": jnp.negative,
+    "square": jnp.square,
+    "mod100": lambda x: jnp.mod(x, 100),
+}
+
+
+def register_scalar_func(name: str, fn: Callable) -> None:
+    _SCALAR_FUNCS[name] = fn
+
+
+class Scalar:
+    """Base class for scalar (per-row) expressions."""
+
+    def eval(self, table: Table, params: Optional[Mapping[str, object]] = None):
+        raise NotImplementedError
+
+    def key(self) -> Tuple:
+        raise NotImplementedError
+
+    def columns(self) -> Tuple[str, ...]:
+        return ()
+
+    def __hash__(self):
+        return hash(self.key())
+
+    def __eq__(self, other):
+        return isinstance(other, Scalar) and self.key() == other.key()
+
+    # sugar
+    def __add__(self, o):  return Arith("+", self, _wrap(o))
+    def __radd__(self, o): return Arith("+", _wrap(o), self)
+    def __sub__(self, o):  return Arith("-", self, _wrap(o))
+    def __mul__(self, o):  return Arith("*", self, _wrap(o))
+    def __truediv__(self, o): return Arith("/", self, _wrap(o))
+    def eq(self, o):  return Cmp("==", self, _wrap(o))
+    def ne(self, o):  return Cmp("!=", self, _wrap(o))
+    def lt(self, o):  return Cmp("<", self, _wrap(o))
+    def le(self, o):  return Cmp("<=", self, _wrap(o))
+    def gt(self, o):  return Cmp(">", self, _wrap(o))
+    def ge(self, o):  return Cmp(">=", self, _wrap(o))
+    def and_(self, o): return BoolOp("and", self, _wrap(o))
+    def or_(self, o):  return BoolOp("or", self, _wrap(o))
+
+
+def _wrap(v) -> "Scalar":
+    if isinstance(v, Scalar):
+        return v
+    return Lit(v)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Col(Scalar):
+    name: str
+
+    def eval(self, table, params=None):
+        return table.column(self.name)
+
+    def key(self):
+        return ("col", self.name)
+
+    def columns(self):
+        return (self.name,)
+
+    def sql(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Lit(Scalar):
+    value: object
+
+    def eval(self, table, params=None):
+        return jnp.full((table.nrows,), self.value)
+
+    def key(self):
+        return ("lit", self.value)
+
+    def sql(self):
+        return repr(self.value)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Param(Scalar):
+    """A runtime parameter (e.g. the loop variable's field in a correlated query)."""
+
+    name: str
+
+    def eval(self, table, params=None):
+        if params is None or self.name not in params:
+            raise KeyError(f"unbound query parameter {self.name!r}")
+        return jnp.full((table.nrows,), params[self.name])
+
+    def key(self):
+        return ("param", self.name)
+
+    def sql(self):
+        return f":{self.name}"
+
+
+_ARITH = {
+    "+": jnp.add, "-": jnp.subtract, "*": jnp.multiply, "/": jnp.divide,
+    "min": jnp.minimum, "max": jnp.maximum,
+}
+_CMP = {
+    "==": jnp.equal, "!=": jnp.not_equal, "<": jnp.less, "<=": jnp.less_equal,
+    ">": jnp.greater, ">=": jnp.greater_equal,
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Arith(Scalar):
+    op: str
+    left: Scalar
+    right: Scalar
+
+    def eval(self, table, params=None):
+        return _ARITH[self.op](self.left.eval(table, params), self.right.eval(table, params))
+
+    def key(self):
+        return ("arith", self.op, self.left.key(), self.right.key())
+
+    def columns(self):
+        return self.left.columns() + self.right.columns()
+
+    def sql(self):
+        return f"({_sql(self.left)} {self.op} {_sql(self.right)})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Cmp(Scalar):
+    op: str
+    left: Scalar
+    right: Scalar
+
+    def eval(self, table, params=None):
+        return _CMP[self.op](self.left.eval(table, params), self.right.eval(table, params))
+
+    def key(self):
+        return ("cmp", self.op, self.left.key(), self.right.key())
+
+    def columns(self):
+        return self.left.columns() + self.right.columns()
+
+    def sql(self):
+        op = {"==": "=", "!=": "<>"}.get(self.op, self.op)
+        return f"{_sql(self.left)} {op} {_sql(self.right)}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BoolOp(Scalar):
+    op: str  # "and" | "or"
+    left: Scalar
+    right: Scalar
+
+    def eval(self, table, params=None):
+        l = self.left.eval(table, params)
+        r = self.right.eval(table, params)
+        return jnp.logical_and(l, r) if self.op == "and" else jnp.logical_or(l, r)
+
+    def key(self):
+        return ("bool", self.op, self.left.key(), self.right.key())
+
+    def columns(self):
+        return self.left.columns() + self.right.columns()
+
+    def sql(self):
+        return f"({_sql(self.left)} {self.op.upper()} {_sql(self.right)})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Not(Scalar):
+    child: Scalar
+
+    def eval(self, table, params=None):
+        return jnp.logical_not(self.child.eval(table, params))
+
+    def key(self):
+        return ("not", self.child.key())
+
+    def columns(self):
+        return self.child.columns()
+
+    def sql(self):
+        return f"NOT ({_sql(self.child)})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Func(Scalar):
+    name: str
+    args: Tuple[Scalar, ...]
+
+    def eval(self, table, params=None):
+        fn = _SCALAR_FUNCS[self.name]
+        return fn(*[a.eval(table, params) for a in self.args])
+
+    def key(self):
+        return ("func", self.name, tuple(a.key() for a in self.args))
+
+    def columns(self):
+        out: Tuple[str, ...] = ()
+        for a in self.args:
+            out += a.columns()
+        return out
+
+    def sql(self):
+        return f"{self.name}({', '.join(_sql(a) for a in self.args)})"
+
+
+def _sql(e: Scalar) -> str:
+    return e.sql() if hasattr(e, "sql") else repr(e)
+
+
+# --------------------------------------------------------------------------
+# Join index machinery (host-side; bulk gathers stay in jnp)
+# --------------------------------------------------------------------------
+
+def equi_join_indices(lk: np.ndarray, rk: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """All (li, ri) pairs with lk[li] == rk[ri], via sort+searchsorted."""
+    lk = np.asarray(lk)
+    rk = np.asarray(rk)
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    lo = np.searchsorted(rk_sorted, lk, side="left")
+    hi = np.searchsorted(rk_sorted, lk, side="right")
+    counts = hi - lo
+    li = np.repeat(np.arange(len(lk)), counts)
+    starts = np.repeat(lo, counts)
+    base = np.repeat(np.cumsum(counts) - counts, counts)
+    run_off = np.arange(len(li)) - base
+    ri = order[starts + run_off]
+    return li, ri
+
+
+# --------------------------------------------------------------------------
+# Query algebra
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    func: str  # sum | count | min | max | avg
+    col: Optional[str]  # None for count(*)
+    out: str
+
+    def key(self):
+        return ("agg", self.func, self.col, self.out)
+
+    def sql(self):
+        arg = self.col if self.col is not None else "*"
+        return f"{self.func}({arg}) AS {self.out}"
+
+
+class Query:
+    """Base class for relational algebra nodes."""
+
+    def execute(self, db, params: Optional[Mapping[str, object]] = None) -> Table:
+        raise NotImplementedError
+
+    def key(self) -> Tuple:
+        raise NotImplementedError
+
+    def sql(self) -> str:
+        raise NotImplementedError
+
+    def children(self) -> Tuple["Query", ...]:
+        return ()
+
+    def output_schema(self, db) -> Schema:
+        raise NotImplementedError
+
+    def __hash__(self):
+        return hash(self.key())
+
+    def __eq__(self, other):
+        return isinstance(other, Query) and self.key() == other.key()
+
+    def __repr__(self):
+        return f"{type(self).__name__}[{self.sql()}]"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scan(Query):
+    table: str
+
+    def execute(self, db, params=None):
+        return db.table(self.table)
+
+    def key(self):
+        return ("scan", self.table)
+
+    def sql(self):
+        return f"SELECT * FROM {self.table}"
+
+    def output_schema(self, db):
+        return db.table(self.table).schema
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Select(Query):
+    pred: Scalar
+    child: Query
+
+    def execute(self, db, params=None):
+        t = self.child.execute(db, params)
+        if t.nrows == 0:
+            return t
+        mask = self.pred.eval(t, params)
+        return t.filter_mask(np.asarray(mask))
+
+    def key(self):
+        return ("select", self.pred.key(), self.child.key())
+
+    def children(self):
+        return (self.child,)
+
+    def sql(self):
+        return f"SELECT * FROM ({self.child.sql()}) WHERE {_sql(self.pred)}"
+
+    def output_schema(self, db):
+        return self.child.output_schema(db)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Project(Query):
+    """π — keeps `cols` and adds computed columns {name: scalar expr}."""
+
+    cols: Tuple[str, ...]
+    child: Query
+    computed: Tuple[Tuple[str, Scalar], ...] = ()
+
+    def execute(self, db, params=None):
+        t = self.child.execute(db, params)
+        out = t.select_columns([c for c in self.cols]) if self.cols else t.select_columns([])
+        for name, expr in self.computed:
+            vals = expr.eval(t, params)
+            out = out.with_column(Field(name, str(np.asarray(vals).dtype)), vals)
+        return out
+
+    def key(self):
+        return ("project", self.cols, tuple((n, e.key()) for n, e in self.computed), self.child.key())
+
+    def children(self):
+        return (self.child,)
+
+    def sql(self):
+        items = list(self.cols) + [f"{_sql(e)} AS {n}" for n, e in self.computed]
+        return f"SELECT {', '.join(items) or '*'} FROM ({self.child.sql()})"
+
+    def output_schema(self, db):
+        base = self.child.output_schema(db).subset(self.cols)
+        for name, _ in self.computed:
+            base = base.concat(Schema.of(Field(name, "float64")))
+        return base
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Join(Query):
+    """Inner equi-join on left.left_key == right.right_key."""
+
+    left: Query
+    right: Query
+    left_key: str
+    right_key: str
+
+    def execute(self, db, params=None):
+        lt = self.left.execute(db, params)
+        rt = self.right.execute(db, params)
+        li, ri = equi_join_indices(np.asarray(lt.column(self.left_key)),
+                                   np.asarray(rt.column(self.right_key)))
+        lsel = lt.take(li)
+        rsel = rt.take(ri)
+        # disambiguate duplicate names by prefixing right side
+        lnames = set(lsel.schema.names)
+        ren = {n: f"{rt.name}_{n}" for n in rsel.schema.names if n in lnames}
+        rsel = rsel.rename(ren)
+        cols = dict(lsel.columns)
+        cols.update(rsel.columns)
+        return Table(f"{lt.name}_join_{rt.name}", lsel.schema.concat(rsel.schema), cols)
+
+    def key(self):
+        return ("join", self.left_key, self.right_key, self.left.key(), self.right.key())
+
+    def children(self):
+        return (self.left, self.right)
+
+    def sql(self):
+        return (f"SELECT * FROM ({self.left.sql()}) l JOIN ({self.right.sql()}) r "
+                f"ON l.{self.left_key} = r.{self.right_key}")
+
+    def output_schema(self, db):
+        ls = self.left.output_schema(db)
+        rs = self.right.output_schema(db)
+        lnames = set(ls.names)
+        rf = []
+        rprefix = self.right.table if isinstance(self.right, Scan) else "r"
+        for f in rs.fields:
+            rf.append(dataclasses.replace(f, name=f"{rprefix}_{f.name}") if f.name in lnames else f)
+        return ls.concat(Schema(tuple(rf)))
+
+
+_AGG_FUNCS = {
+    "sum": lambda x: jnp.sum(x),
+    "min": lambda x: jnp.min(x),
+    "max": lambda x: jnp.max(x),
+    "avg": lambda x: jnp.mean(x),
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Aggregate(Query):
+    """γ — group-by aggregation. Empty group_by = single global group."""
+
+    group_by: Tuple[str, ...]
+    aggs: Tuple[AggSpec, ...]
+    child: Query
+
+    def execute(self, db, params=None):
+        t = self.child.execute(db, params)
+        if not self.group_by:
+            return self._global(t)
+        return self._grouped(t)
+
+    def _global(self, t: Table) -> Table:
+        fields, cols = [], {}
+        for a in self.aggs:
+            if a.func == "count":
+                val, dt = t.nrows, "int32"
+            else:
+                arr = t.column(a.col)
+                if t.nrows == 0:
+                    val, dt = 0, "float32"
+                else:
+                    val = _AGG_FUNCS[a.func](arr)
+                    dt = "float32" if a.func == "avg" else str(np.asarray(val).dtype)
+            fields.append(Field(a.out, dt))
+            cols[a.out] = np.asarray([val], dtype=np.dtype(dt) if np.dtype(dt).itemsize<8 else np.dtype(dt.replace("64","32")))
+        return Table("agg", Schema(tuple(fields)), cols)
+
+    def _grouped(self, t: Table) -> Table:
+        keys = [np.asarray(t.column(g)) for g in self.group_by]
+        if t.nrows == 0:
+            uniq_idx = np.asarray([], dtype=np.int64)
+            inv = np.asarray([], dtype=np.int64)
+            ngroups = 0
+        else:
+            stacked = np.stack(keys, axis=1)
+            _, uniq_idx, inv = np.unique(stacked, axis=0, return_index=True, return_inverse=True)
+            inv = inv.reshape(-1)
+            ngroups = int(inv.max()) + 1 if len(inv) else 0
+        fields, cols = [], {}
+        for g in self.group_by:
+            f = None
+            for tf in t.schema.fields:
+                if tf.name == g:
+                    f = tf
+            fields.append(f)
+            cols[g] = np.asarray(t.column(g))[uniq_idx]
+        seg = jnp.asarray(inv)
+        for a in self.aggs:
+            if a.func == "count":
+                vals = jax.ops.segment_sum(jnp.ones((t.nrows,), jnp.int32), seg, ngroups)
+                dt = "int32"
+            else:
+                arr = t.column(a.col)
+                if a.func == "sum":
+                    vals = jax.ops.segment_sum(arr, seg, ngroups)
+                elif a.func == "min":
+                    vals = jax.ops.segment_min(arr, seg, ngroups)
+                elif a.func == "max":
+                    vals = jax.ops.segment_max(arr, seg, ngroups)
+                elif a.func == "avg":
+                    s = jax.ops.segment_sum(arr.astype(jnp.float32), seg, ngroups)
+                    c = jax.ops.segment_sum(jnp.ones((t.nrows,), jnp.float32), seg, ngroups)
+                    vals = s / jnp.maximum(c, 1.0)
+                else:
+                    raise ValueError(a.func)
+                dt = "float32" if a.func == "avg" else str(np.asarray(vals).dtype)
+            fields.append(Field(a.out, dt))
+            cols[a.out] = vals
+        return Table("agg", Schema(tuple(fields)), cols)
+
+    def key(self):
+        return ("aggregate", self.group_by, tuple(a.key() for a in self.aggs), self.child.key())
+
+    def children(self):
+        return (self.child,)
+
+    def sql(self):
+        items = list(self.group_by) + [a.sql() for a in self.aggs]
+        gb = f" GROUP BY {', '.join(self.group_by)}" if self.group_by else ""
+        return f"SELECT {', '.join(items)} FROM ({self.child.sql()}){gb}"
+
+    def output_schema(self, db):
+        base = self.child.output_schema(db).subset(self.group_by) if self.group_by else Schema(())
+        for a in self.aggs:
+            base = base.concat(Schema.of(Field(a.out, "float64")))
+        return base
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class OrderBy(Query):
+    keys: Tuple[str, ...]
+    child: Query
+    descending: bool = False
+
+    def execute(self, db, params=None):
+        return self.child.execute(db, params).sort_by(self.keys, self.descending)
+
+    def key(self):
+        return ("orderby", self.keys, self.descending, self.child.key())
+
+    def children(self):
+        return (self.child,)
+
+    def sql(self):
+        d = " DESC" if self.descending else ""
+        return f"{self.child.sql()} ORDER BY {', '.join(self.keys)}{d}"
+
+    def output_schema(self, db):
+        return self.child.output_schema(db)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Limit(Query):
+    k: int
+    child: Query
+
+    def execute(self, db, params=None):
+        return self.child.execute(db, params).head(self.k)
+
+    def key(self):
+        return ("limit", self.k, self.child.key())
+
+    def children(self):
+        return (self.child,)
+
+    def sql(self):
+        return f"{self.child.sql()} LIMIT {self.k}"
+
+    def output_schema(self, db):
+        return self.child.output_schema(db)

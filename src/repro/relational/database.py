@@ -1,0 +1,405 @@
+"""Simulated client/server database environment.
+
+The paper evaluates Cobra against a real MySQL server over ethernet with a
+network simulator (Sec. VIII). This container has neither, so we model the
+*same knobs the paper's cost catalog exposes*:
+
+  C_NRT       network round-trip time
+  BW          network bandwidth
+  C_Q^F/C_Q^L server time to first/last row (from a simple server model —
+              the paper "consulted the database query optimizer" for these)
+  C_Z         per-imperative-statement cost
+  AF_Q        amortization factor for prefetched queries
+
+Two distinct views (kept deliberately separate):
+
+  * ``DatabaseServer.run(query)``      — actually executes (jnp compute) and
+    returns TRUE timing from true cardinalities → the *simulated wall clock*
+    ("actual running time" axis of Fig. 13).
+  * ``DatabaseServer.estimate(query)`` — cardinality/cost ESTIMATES from table
+    statistics only → what Cobra's cost model consumes.
+
+``ClientEnv`` owns the simulated clock, the ORM id-cache (Hibernate caches
+fetched rows by primary key — needed to reproduce Fig. 13b), and the
+client-side prefetch cache (``cacheByColumn`` / ``lookup``, footnote 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .algebra import (Aggregate, Join, Limit, OrderBy, Project, Query, Scan,
+                      Select)
+from .table import Table
+
+__all__ = [
+    "NetworkProfile", "ServerModel", "TableStats", "QueryEstimate",
+    "DatabaseServer", "ClientEnv", "SLOW_REMOTE", "FAST_LOCAL",
+]
+
+
+# --------------------------------------------------------------------------
+# Environment profiles (paper Sec. VIII, Experiment 1/2 settings)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetworkProfile:
+    name: str
+    bandwidth_bytes_per_s: float
+    rtt_s: float
+
+    @property
+    def c_nrt(self) -> float:
+        return self.rtt_s
+
+
+# bandwidth 500 kbps, latency 250 ms  (paper: "slow remote network")
+SLOW_REMOTE = NetworkProfile("slow_remote", bandwidth_bytes_per_s=500e3 / 8, rtt_s=0.250)
+# bandwidth 6 gbps, rtt 0.5 ms        (paper: "fast local network")
+FAST_LOCAL = NetworkProfile("fast_local", bandwidth_bytes_per_s=6e9 / 8, rtt_s=0.5e-3)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerModel:
+    """A simple DB-server timing model (stand-in for 'consult the optimizer').
+
+    All rates in rows/second; overheads in seconds. Values loosely calibrated
+    to a MySQL 5.7-class server on the paper's hardware.
+    """
+
+    startup_s: float = 2e-4            # parse/plan/dispatch per query
+    scan_rows_per_s: float = 8e6       # sequential scan emit rate
+    index_lookup_s: float = 3e-5       # one B-tree point lookup
+    hash_build_rows_per_s: float = 6e6
+    hash_probe_rows_per_s: float = 7e6
+    sort_rows_per_s: float = 2.5e6     # n log n folded into effective rate
+    agg_rows_per_s: float = 9e6
+    emit_rows_per_s: float = 1.2e7     # result serialization
+
+
+@dataclasses.dataclass(frozen=True)
+class TableStats:
+    nrows: int
+    row_bytes: int
+    distinct: Mapping[str, int]        # per-column NDV
+    minmax: Mapping[str, Tuple[float, float]]
+
+    def ndv(self, col: str) -> int:
+        return max(1, int(self.distinct.get(col, max(1, self.nrows // 10))))
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryEstimate:
+    """What the optimizer knows about a query before running it (Fig. 12 terms)."""
+
+    n_rows: float          # N_Q
+    row_bytes: float       # S_row(Q)
+    first_row_s: float     # C_Q^F
+    last_row_s: float      # C_Q^L
+
+    @property
+    def result_bytes(self) -> float:
+        return self.n_rows * self.row_bytes
+
+
+# --------------------------------------------------------------------------
+# Server
+# --------------------------------------------------------------------------
+
+class DatabaseServer:
+    def __init__(self, tables: Dict[str, Table], model: ServerModel = ServerModel()):
+        self.tables = dict(tables)
+        self.model = model
+        self._stats: Dict[str, TableStats] = {}
+        self.analyze()
+
+    def table(self, name: str) -> Table:
+        return self.tables[name]
+
+    def add_table(self, t: Table) -> None:
+        self.tables[t.name] = t
+        self._stats[t.name] = self._compute_stats(t)
+
+    # ----------------------------------------------------------- statistics
+    def analyze(self) -> None:
+        for name, t in self.tables.items():
+            self._stats[name] = self._compute_stats(t)
+
+    def _compute_stats(self, t: Table) -> TableStats:
+        distinct, minmax = {}, {}
+        for f in t.schema.fields:
+            arr = np.asarray(t.column(f.name))
+            if arr.size:
+                distinct[f.name] = int(len(np.unique(arr)))
+                minmax[f.name] = (float(arr.min()), float(arr.max()))
+            else:
+                distinct[f.name] = 1
+                minmax[f.name] = (0.0, 0.0)
+        return TableStats(t.nrows, t.row_bytes, distinct, minmax)
+
+    def stats(self, name: str) -> TableStats:
+        return self._stats[name]
+
+    # ----------------------------------------------------------- execution
+    def run(self, query: Query, params: Optional[Mapping[str, object]] = None
+            ) -> Tuple[Table, float, float]:
+        """Execute and return (result, true C_Q^F, true C_Q^L)."""
+        result = query.execute(self, params)
+        first, last = self._true_times(query, params)
+        return result, first, last
+
+    def _true_times(self, q: Query, params) -> Tuple[float, float]:
+        """Server time model evaluated on TRUE cardinalities (post-execution)."""
+        m = self.model
+        total = m.startup_s
+        blocking = m.startup_s
+
+        def walk(node: Query) -> int:
+            nonlocal total, blocking
+            if isinstance(node, Scan):
+                n = self.table(node.table).nrows
+                total += n / m.scan_rows_per_s
+                return n
+            if isinstance(node, Select):
+                n_in = walk(node.child)
+                out = node.execute(self, params).nrows
+                return out
+            if isinstance(node, Project):
+                return walk(node.child)
+            if isinstance(node, Join):
+                nl = walk(node.left)
+                nr = walk(node.right)
+                build = min(nl, nr)
+                probe = max(nl, nr)
+                total += build / m.hash_build_rows_per_s + probe / m.hash_probe_rows_per_s
+                blocking += build / m.hash_build_rows_per_s
+                return node.execute(self, params).nrows
+            if isinstance(node, Aggregate):
+                n_in = walk(node.child)
+                total += n_in / m.agg_rows_per_s
+                blocking = total  # aggregation is blocking
+                return node.execute(self, params).nrows
+            if isinstance(node, OrderBy):
+                n_in = walk(node.child)
+                total += n_in / m.sort_rows_per_s
+                blocking = total  # sort is blocking
+                return n_in
+            if isinstance(node, Limit):
+                return min(node.k, walk(node.child))
+            raise TypeError(f"unknown node {node}")
+
+        n_out = walk(q)
+        total += n_out / m.emit_rows_per_s
+        first = min(blocking, total)
+        last = total
+        return first, last
+
+    # ----------------------------------------------------------- estimation
+    def estimate(self, q: Query, params_known: bool = False) -> QueryEstimate:
+        """Cardinality + server-time estimates from statistics only."""
+        m = self.model
+        total = m.startup_s
+        blocking = m.startup_s
+
+        def est_rows(node: Query) -> Tuple[float, float]:
+            """returns (est rows, est row_bytes)"""
+            nonlocal total, blocking
+            if isinstance(node, Scan):
+                st = self.stats(node.table)
+                total += st.nrows / m.scan_rows_per_s
+                return float(st.nrows), float(st.row_bytes)
+            if isinstance(node, Select):
+                n, rb = est_rows(node.child)
+                sel = self._selectivity(node)
+                return max(1.0, n * sel), rb
+            if isinstance(node, Project):
+                n, rb = est_rows(node.child)
+                try:
+                    rb_exact = float(node.output_schema(self).row_bytes)
+                    return n, max(4.0, rb_exact)
+                except Exception:
+                    sch_cols = len(node.cols) + len(node.computed)
+                    return n, max(4.0, rb * sch_cols / max(1, sch_cols + 2))
+            if isinstance(node, Join):
+                nl, rbl = est_rows(node.left)
+                nr, rbr = est_rows(node.right)
+                ndv_l = self._ndv_of(node.left, node.left_key)
+                ndv_r = self._ndv_of(node.right, node.right_key)
+                out = nl * nr / max(ndv_l, ndv_r, 1.0)
+                build = min(nl, nr)
+                probe = max(nl, nr)
+                total += build / m.hash_build_rows_per_s + probe / m.hash_probe_rows_per_s
+                blocking += build / m.hash_build_rows_per_s
+                return max(1.0, out), rbl + rbr
+            if isinstance(node, Aggregate):
+                n, rb = est_rows(node.child)
+                total += n / m.agg_rows_per_s
+                blocking = total
+                if not node.group_by:
+                    return 1.0, 8.0 * len(node.aggs)
+                groups = 1.0
+                for g in node.group_by:
+                    groups *= self._ndv_of(node.child, g)
+                return min(n, groups), 8.0 * (len(node.group_by) + len(node.aggs))
+            if isinstance(node, OrderBy):
+                n, rb = est_rows(node.child)
+                total += n / m.sort_rows_per_s
+                blocking = total
+                return n, rb
+            if isinstance(node, Limit):
+                n, rb = est_rows(node.child)
+                return min(float(node.k), n), rb
+            raise TypeError(f"unknown node {node}")
+
+        n, rb = est_rows(q)
+        total += n / m.emit_rows_per_s
+        return QueryEstimate(n_rows=n, row_bytes=rb,
+                             first_row_s=min(blocking, total), last_row_s=total)
+
+    def _selectivity(self, node: Select) -> float:
+        from .algebra import Cmp, Col, Lit, Param, BoolOp
+        p = node.pred
+        if isinstance(p, BoolOp):
+            l = self._selectivity(Select(p.left, node.child))
+            r = self._selectivity(Select(p.right, node.child))
+            return l * r if p.op == "and" else min(1.0, l + r)
+        if isinstance(p, Cmp):
+            col = p.left if isinstance(p.left, Col) else (p.right if isinstance(p.right, Col) else None)
+            if col is not None:
+                ndv = self._ndv_of(node.child, col.name)
+                if p.op == "==":
+                    return 1.0 / ndv
+                if p.op == "!=":
+                    return 1.0 - 1.0 / ndv
+                return 1.0 / 3.0  # range predicate, System-R default
+        return 0.5
+
+    def _ndv_of(self, node: Query, col: str) -> float:
+        if isinstance(node, Scan):
+            return float(self.stats(node.table).ndv(col))
+        if isinstance(node, (Select, Project, OrderBy, Limit, Aggregate)):
+            kids = node.children()
+            return self._ndv_of(kids[0], col) if kids else 100.0
+        if isinstance(node, Join):
+            try:
+                return self._ndv_of(node.left, col)
+            except Exception:
+                return self._ndv_of(node.right, col)
+        return 100.0
+
+
+# --------------------------------------------------------------------------
+# Client environment (simulated clock + caches)
+# --------------------------------------------------------------------------
+
+class ClientEnv:
+    """Application-side runtime: clock, ORM id-cache, prefetch cache.
+
+    Charges time per Sec. VI:
+        C_Q = C_NRT + C_Q^F + max(N_Q*S_row/BW, C_Q^L − C_Q^F)
+    """
+
+    def __init__(self, db: DatabaseServer, network: NetworkProfile,
+                 c_z: float = 30e-9, orm_cache: bool = True):
+        self.db = db
+        self.network = network
+        self.c_z = c_z              # per-imperative-statement cost (paper: 30ns)
+        self.clock = 0.0
+        self.orm_cache_enabled = orm_cache
+        self._orm_cache: Dict[Tuple[str, object], Dict[str, object]] = {}
+        self._prefetch_cache: Dict[Tuple[str, str], Dict[object, list]] = {}
+        self.query_log: list = []
+        self.n_queries = 0
+        self.n_round_trips = 0
+
+    # ---------------------------------------------------------------- clock
+    def charge_statement(self, n: int = 1) -> None:
+        self.clock += self.c_z * n
+
+    def _charge_query(self, n_rows: int, row_bytes: int, first_s: float, last_s: float) -> float:
+        transfer = n_rows * row_bytes / self.network.bandwidth_bytes_per_s
+        cost = self.network.c_nrt + first_s + max(transfer, last_s - first_s)
+        self.clock += cost
+        self.n_queries += 1
+        self.n_round_trips += 1
+        return cost
+
+    # --------------------------------------------------------------- queries
+    def execute_query(self, q: Query, params: Optional[Mapping[str, object]] = None) -> Table:
+        result, first_s, last_s = self.db.run(q, params)
+        cost = self._charge_query(result.nrows, result.row_bytes, first_s, last_s)
+        self.query_log.append((q.sql(), result.nrows, cost))
+        return result
+
+    def point_lookup(self, table: str, key_col: str, key_val) -> Optional[Dict[str, object]]:
+        """ORM-style navigation (o.customer): point query w/ Hibernate id-cache."""
+        ck = (table, key_val)
+        if self.orm_cache_enabled and ck in self._orm_cache:
+            self.charge_statement()
+            return self._orm_cache[ck]
+        t = self.db.table(table)
+        # index lookup: server time is one B-tree probe, one row out
+        arr = np.asarray(t.column(key_col))
+        idx = np.flatnonzero(arr == key_val)
+        m = self.db.model
+        self._charge_query(len(idx), t.row_bytes,
+                           m.startup_s + m.index_lookup_s,
+                           m.startup_s + m.index_lookup_s + len(idx) / m.emit_rows_per_s)
+        self.query_log.append((f"SELECT * FROM {table} WHERE {key_col} = {key_val}", len(idx), None))
+        if len(idx) == 0:
+            return None
+        row = t.row(int(idx[0]))
+        if self.orm_cache_enabled:
+            self._orm_cache[ck] = row
+        return row
+
+    # --------------------------------------------------- prefetch cache (N1)
+    def cache_by_column(self, t: Table, col: str) -> None:
+        """``Utils.cacheByColumn`` from the paper (footnote 3)."""
+        index: Dict[object, list] = {}
+        arr = np.asarray(t.column(col))
+        # building the local hash index costs C_Z per row
+        self.charge_statement(t.nrows)
+        order = np.argsort(arr, kind="stable")
+        sorted_keys = arr[order]
+        # store as (table, sorted keys, order) for O(log n) lookups
+        self._prefetch_cache[(t.name, col)] = {
+            "table": t, "keys": sorted_keys, "order": order,
+        }
+
+    def lookup_cache(self, table_name: str, col: str, key_val) -> Optional[Dict[str, object]]:
+        entry = self._prefetch_cache.get((table_name, col))
+        if entry is None:
+            raise KeyError(f"no prefetch cache for ({table_name}, {col})")
+        self.charge_statement()
+        keys = entry["keys"]
+        lo = np.searchsorted(keys, key_val, side="left")
+        if lo < len(keys) and keys[lo] == key_val:
+            return entry["table"].row(int(entry["order"][lo]))
+        return None
+
+    def lookup_cache_all(self, table_name: str, col: str, key_val) -> list:
+        entry = self._prefetch_cache.get((table_name, col))
+        if entry is None:
+            raise KeyError(f"no prefetch cache for ({table_name}, {col})")
+        self.charge_statement()
+        keys = entry["keys"]
+        lo = np.searchsorted(keys, key_val, side="left")
+        hi = np.searchsorted(keys, key_val, side="right")
+        t = entry["table"]
+        return [t.row(int(entry["order"][i])) for i in range(lo, hi)]
+
+    def has_cache(self, table_name: str, col: str) -> bool:
+        return (table_name, col) in self._prefetch_cache
+
+    def reset(self) -> None:
+        self.clock = 0.0
+        self._orm_cache.clear()
+        self._prefetch_cache.clear()
+        self.query_log.clear()
+        self.n_queries = 0
+        self.n_round_trips = 0

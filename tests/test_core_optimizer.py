@@ -1,0 +1,165 @@
+"""Cobra core end-to-end: memo, rules, cost-based choice, codegen, semantics.
+
+Reproduces the paper's qualitative claims as assertions:
+  * P0 → P1 (join) at low Order cardinality, P0 → P2 (prefetch) when the
+    join result dominates (Experiments 1–3), with the paper's rule subset;
+  * Wilos patterns: Cobra ≥ heuristic ≥/≈ original (Experiment 4);
+  * optimization time < 1 s (Sec. VIII);
+  * cyclic rules terminate (T2 ↔ N2) via memo duplicate detection.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CostCatalog, Interpreter, optimize
+from repro.core.rules import default_rules
+from repro.programs import (WILOS_PROGRAMS, make_m0, make_orders_customer_db,
+                            make_p0, make_p1, make_p2, make_sales_db,
+                            make_wilos_db)
+from repro.relational.database import ClientEnv, FAST_LOCAL, SLOW_REMOTE
+
+
+def run(prog, db, net, init=None):
+    env = ClientEnv(db, net)
+    out = Interpreter(env, "fast").run(prog, init)
+    return out, env.clock
+
+
+def coll_close(a, b, rtol=1e-4):
+    a = np.sort(np.asarray(a, dtype=np.float64))
+    b = np.sort(np.asarray(b, dtype=np.float64))
+    return a.shape == b.shape and np.allclose(a, b, rtol=rtol)
+
+
+def paper_rules():
+    """Rule subset used in the paper's Experiments 1–3 (no T3 composition)."""
+    return [r for r in default_rules() if r.name != "T3"]
+
+
+class TestP0Alternatives:
+    def test_picks_join_at_low_orders(self):
+        db = make_orders_customer_db(100, 5000)
+        res = optimize(make_p0(), db, CostCatalog(SLOW_REMOTE), rules=paper_rules())
+        assert "JOIN" in repr(res.program.body)
+
+    def test_picks_prefetch_when_join_dominates(self):
+        db = make_orders_customer_db(4000, 500)
+        res = optimize(make_p0(), db, CostCatalog(SLOW_REMOTE), rules=paper_rules())
+        assert "prefetch" in repr(res.program.body)
+
+    def test_optimized_semantics_match(self):
+        db = make_orders_customer_db(500, 100)
+        p0 = make_p0()
+        o0, t0 = run(p0, db, SLOW_REMOTE)
+        for rules in (paper_rules(), None):
+            res = optimize(p0, db, CostCatalog(SLOW_REMOTE), rules=rules)
+            o1, t1 = run(res.program, db, SLOW_REMOTE)
+            assert coll_close(o0["result"], o1["result"])
+            assert t1 <= t0
+
+    def test_never_worse_than_original(self):
+        # Sec VIII: "the program rewritten using COBRA always performs at
+        # least as well as the original"
+        for n_orders, n_cust in [(100, 2000), (1000, 1000), (3000, 300)]:
+            db = make_orders_customer_db(n_orders, n_cust)
+            p0 = make_p0()
+            _, t_orig = run(p0, db, SLOW_REMOTE)
+            res = optimize(p0, db, CostCatalog(SLOW_REMOTE))
+            _, t_opt = run(res.program, db, SLOW_REMOTE)
+            assert t_opt <= t_orig * 1.05
+
+    def test_full_ruleset_beats_paper_alternatives(self):
+        # beyond-paper: T3 ∘ T4j (projection-pushed join) beats P1 and P2
+        db = make_orders_customer_db(2000, 500)
+        res_full = optimize(make_p0(), db, CostCatalog(SLOW_REMOTE))
+        _, t_full = run(res_full.program, db, SLOW_REMOTE)
+        _, t_p1 = run(make_p1(), db, SLOW_REMOTE)
+        _, t_p2 = run(make_p2(), db, SLOW_REMOTE)
+        assert t_full <= min(t_p1, t_p2)
+
+
+class TestDependentAggregations:
+    def test_m0_kept_as_single_loop(self):
+        """Sec. V-B: extracting `sum` to SQL adds a round trip; Cobra keeps
+        the loop computing both sum and cumulative sum."""
+        db = make_sales_db(5000)
+        m0 = make_m0()
+        o0, t0 = run(m0, db, SLOW_REMOTE)
+        res = optimize(m0, db, CostCatalog(SLOW_REMOTE))
+        o1, t1 = run(res.program, db, SLOW_REMOTE)
+        assert abs(o0["total"] - o1["total"]) < 1e-2 * abs(o0["total"])
+        assert {k: round(v, 1) for k, v in o0["cSum"].items()} == \
+               {k: round(v, 1) for k, v in o1["cSum"].items()}
+        assert t1 <= t0 * 1.05
+        # exactly one query in the optimized program
+        env = ClientEnv(db, SLOW_REMOTE)
+        Interpreter(env, "fast").run(res.program)
+        assert env.n_queries == 1
+
+
+class TestWilosPatterns:
+    @pytest.mark.parametrize("pid", list(WILOS_PROGRAMS))
+    def test_cobra_at_least_as_good(self, pid):
+        prog = WILOS_PROGRAMS[pid]()
+        init = {"worklist": [1, 3, 5, 7]} if pid == "E" else None
+        db = make_wilos_db(1000, ratio=10)
+        o0, t_orig = run(prog, db, FAST_LOCAL, init)
+        db2 = make_wilos_db(1000, ratio=10)
+        res = optimize(prog, db2, CostCatalog(FAST_LOCAL, af=50.0))
+        o1, t_opt = run(res.program, db2, FAST_LOCAL, init)
+        for k in o0:
+            if isinstance(o0[k], list):
+                assert coll_close(o0[k], o1[k]), k
+            elif isinstance(o0[k], (int, float)):
+                assert abs(o0[k] - o1[k]) <= 1e-3 * max(1.0, abs(o0[k])), k
+        if pid == "A":
+            assert db.table("roles").same_rows(db2.table("roles"))
+        assert t_opt <= t_orig * 1.05
+
+    def test_pattern_a_cobra_prefetches_heuristic_pushes(self):
+        db = make_wilos_db(1000)
+        res_c = optimize(WILOS_PROGRAMS["A"](), db, CostCatalog(FAST_LOCAL))
+        res_h = optimize(WILOS_PROGRAMS["A"](), db, CostCatalog(FAST_LOCAL),
+                         choice="heuristic")
+        assert "prefetch" in repr(res_c.program.body)
+        assert "prefetch" not in repr(res_h.program.body)
+
+    def test_pattern_b_cobra_keeps_single_query(self):
+        db = make_wilos_db(1000)
+        res_c = optimize(WILOS_PROGRAMS["B"](), db, CostCatalog(FAST_LOCAL))
+        env = ClientEnv(db, FAST_LOCAL)
+        Interpreter(env, "fast").run(res_c.program)
+        assert env.n_queries == 1
+        res_h = optimize(WILOS_PROGRAMS["B"](), db, CostCatalog(FAST_LOCAL),
+                         choice="heuristic")
+        env_h = ClientEnv(db, FAST_LOCAL)
+        Interpreter(env_h, "fast").run(res_h.program)
+        assert env_h.n_queries == 2  # count extracted to an extra SQL query
+
+    def test_pattern_c_join_identified(self):
+        db = make_wilos_db(1000)
+        res = optimize(WILOS_PROGRAMS["C"](), db, CostCatalog(FAST_LOCAL))
+        assert "JOIN" in repr(res.program.body)
+
+
+class TestFramework:
+    def test_optimization_time_under_1s(self):
+        db = make_orders_customer_db(1000, 100)
+        res = optimize(make_p0(), db, CostCatalog(SLOW_REMOTE))
+        assert res.opt_time_s < 1.0
+
+    def test_cyclic_rules_terminate(self):
+        # T2c/N2c are mutually inverse; saturation must still stop
+        db = make_wilos_db(500)
+        res = optimize(WILOS_PROGRAMS["C"](), db, CostCatalog(FAST_LOCAL))
+        assert res.memo_stats["rounds"] < 64
+        assert res.memo_stats["duplicates_detected"] >= 1
+
+    def test_already_optimal_input_unchanged_cost(self):
+        # optimizing P2 should not make it slower
+        db = make_orders_customer_db(2000, 200)
+        p2 = make_p2()
+        _, t0 = run(p2, db, SLOW_REMOTE)
+        res = optimize(p2, db, CostCatalog(SLOW_REMOTE))
+        _, t1 = run(res.program, db, SLOW_REMOTE)
+        assert t1 <= t0 * 1.05

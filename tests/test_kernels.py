@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (build_direct_table, flash_attention, join_probe,
+                           rwkv6_scan, segment_reduce)
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+ATTN_SWEEP = [
+    # (B, H, KV, Tq, Tk, hd, dtype, causal, window, chunk)
+    (1, 2, 2, 64, 64, 32, jnp.float32, True, None, None),
+    (2, 4, 2, 64, 64, 16, jnp.float32, True, None, None),     # GQA
+    (1, 2, 1, 128, 128, 32, jnp.bfloat16, True, None, None),  # bf16 + GQA
+    (1, 2, 2, 64, 64, 32, jnp.float32, True, 16, None),       # SWA
+    (1, 2, 2, 64, 64, 32, jnp.float32, True, None, 32),       # chunked local
+    (1, 1, 1, 32, 128, 32, jnp.float32, True, None, None),    # decode-ish tail
+    (1, 2, 2, 64, 64, 64, jnp.float32, False, None, None),    # bidirectional
+]
+
+
+@pytest.mark.parametrize("B,H,KV,Tq,Tk,hd,dt,causal,window,chunk", ATTN_SWEEP)
+def test_flash_attention_matches_ref(B, H, KV, Tq, Tk, hd, dt, causal,
+                                     window, chunk):
+    k1, k2, k3 = keys(3)
+    q = jax.random.normal(k1, (B, H, Tq, hd), dt)
+    k = jax.random.normal(k2, (B, KV, Tk, hd), dt)
+    v = jax.random.normal(k3, (B, KV, Tk, hd), dt)
+    got = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   chunk=chunk)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_independence():
+    k1, k2, k3 = keys(3)
+    q = jax.random.normal(k1, (1, 2, 128, 32))
+    k = jax.random.normal(k2, (1, 2, 128, 32))
+    v = jax.random.normal(k3, (1, 2, 128, 32))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# rwkv6 scan
+# --------------------------------------------------------------------------
+
+RWKV_SWEEP = [
+    # (B, H, T, K, V, chunk, dtype)
+    (1, 2, 64, 16, 16, 16, jnp.float32),
+    (2, 3, 128, 32, 32, 32, jnp.float32),
+    (1, 2, 64, 16, 32, 64, jnp.float32),    # chunk == T
+    (1, 2, 96, 16, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,T,K,V,chunk,dt", RWKV_SWEEP)
+def test_rwkv6_scan_matches_ref(B, H, T, K, V, chunk, dt):
+    k1, k2, k3, k4, k5 = keys(5)
+    r = jax.random.normal(k1, (B, H, T, K), dt)
+    k = jax.random.normal(k2, (B, H, T, K), dt)
+    v = jax.random.normal(k3, (B, H, T, V), dt)
+    w = -jnp.exp(jax.random.normal(k4, (B, H, T, K)) * 1.5).astype(jnp.float32)
+    u = jax.random.normal(k5, (H, K), jnp.float32)
+    y, s = rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    y0, s0 = ref.rwkv6_scan_ref(r, k, v, w, u)
+    tol = 3e-2 if dt == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y0, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_extreme_decay_stable():
+    """Strongly negative decays must underflow benignly, never overflow."""
+    k1, k2, k3 = keys(3)
+    B, H, T, K = 1, 1, 64, 16
+    r = jax.random.normal(k1, (B, H, T, K))
+    k = jax.random.normal(k2, (B, H, T, K))
+    v = jax.random.normal(k3, (B, H, T, K))
+    w = jnp.full((B, H, T, K), -40.0)
+    u = jnp.zeros((H, K))
+    y, s = rwkv6_scan(r, k, v, w, u, chunk=16, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+# --------------------------------------------------------------------------
+# segment reduce (relational γ)
+# --------------------------------------------------------------------------
+
+SEG_SWEEP = [
+    (100, 7, "sum"), (512, 64, "sum"), (1000, 13, "count"),
+    (257, 5, "min"), (300, 999, "max"), (64, 1, "sum"),
+]
+
+
+@pytest.mark.parametrize("N,G,op", SEG_SWEEP)
+def test_segment_reduce_matches_ref(N, G, op):
+    k1, k2 = keys(2)
+    vals = jax.random.normal(k1, (N,), jnp.float32)
+    segs = jax.random.randint(k2, (N,), 0, G)
+    got = segment_reduce(vals, segs, G, op=op, block_n=64, block_g=128,
+                         interpret=True)
+    want = ref.segment_reduce_ref(vals, segs, G, op=op)
+    # empty groups: kernel emits 0 for min/max; align oracle
+    if op in ("min", "max"):
+        counts = ref.segment_reduce_ref(jnp.ones_like(vals), segs, G, "sum")
+        want = jnp.where(counts > 0, want, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# join probe
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_build,n_probe,space", [
+    (50, 200, 64), (1000, 333, 1024), (7, 1500, 8),
+])
+def test_join_probe_matches_ref(n_build, n_probe, space):
+    rng = np.random.default_rng(0)
+    build = jnp.asarray(rng.choice(space, size=n_build, replace=False)
+                        .astype(np.int32))
+    probe = jnp.asarray(rng.integers(0, space, n_probe).astype(np.int32))
+    table = build_direct_table(build, space)
+    got = join_probe(probe, table, block_n=128, interpret=True)
+    want = ref.join_probe_ref(probe, build)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_join_probe_roundtrip_semantics():
+    """probe→gather reproduces the relational equi-join."""
+    rng = np.random.default_rng(1)
+    build = jnp.asarray(np.arange(100, dtype=np.int32))
+    payload = jnp.asarray(rng.normal(size=100).astype(np.float32))
+    probe = jnp.asarray(rng.integers(0, 100, 400).astype(np.int32))
+    table = build_direct_table(build, 128)
+    idx = join_probe(probe, table, interpret=True)
+    joined = payload[idx]
+    np.testing.assert_allclose(np.asarray(joined),
+                               np.asarray(payload)[np.asarray(probe)])

@@ -1,0 +1,121 @@
+"""Relational substrate: tables, algebra execution, estimates, client env."""
+
+import numpy as np
+import pytest
+
+from repro.relational import (AggSpec, Aggregate, ClientEnv, Cmp, Col,
+                              DatabaseServer, FAST_LOCAL, Field, Join, Lit,
+                              OrderBy, Project, Scan, Schema, Select,
+                              SLOW_REMOTE, Table, equi_join_indices)
+
+
+@pytest.fixture
+def db():
+    rng = np.random.default_rng(0)
+    cust = Table.from_columns(
+        "customer",
+        Schema.of(Field("c_id", "int64", 8), Field("c_year", "int32", 4),
+                  Field("c_pay", "int32", 120)),
+        c_id=np.arange(100), c_year=rng.integers(1940, 2000, 100),
+        c_pay=rng.integers(0, 10, 100))
+    orders = Table.from_columns(
+        "orders",
+        Schema.of(Field("o_id", "int64", 8), Field("o_cid", "int64", 8),
+                  Field("o_amt", "float64", 8)),
+        o_id=np.arange(500), o_cid=rng.integers(0, 100, 500),
+        o_amt=rng.uniform(0, 1000, 500))
+    return DatabaseServer({"customer": cust, "orders": orders})
+
+
+def test_row_bytes_uses_wire_sizes(db):
+    assert db.table("customer").row_bytes == 8 + 4 + 120
+
+
+def test_select_matches_numpy(db):
+    t = Select(Cmp("<", Col("c_year"), Lit(1960)), Scan("customer")).execute(db)
+    want = int((np.asarray(db.table("customer").column("c_year")) < 1960).sum())
+    assert t.nrows == want
+
+
+def test_join_row_count_and_order(db):
+    res = Join(Scan("orders"), Scan("customer"), "o_cid", "c_id").execute(db)
+    assert res.nrows == 500  # FK integrity: every order matches one customer
+    # left-major order preserved
+    assert np.array_equal(np.asarray(res.column("o_id")), np.arange(500))
+
+
+def test_equi_join_indices_all_pairs():
+    lk = np.array([1, 2, 2, 3])
+    rk = np.array([2, 2, 3, 9])
+    li, ri = equi_join_indices(lk, rk)
+    pairs = set(zip(li.tolist(), ri.tolist()))
+    assert pairs == {(1, 0), (1, 1), (2, 0), (2, 1), (3, 2)}
+
+
+def test_groupby_sum_matches_numpy(db):
+    res = Aggregate(("o_cid",), (AggSpec("sum", "o_amt", "s"),
+                                 AggSpec("count", None, "n")),
+                    Scan("orders")).execute(db)
+    a = np.asarray(db.table("orders").column("o_cid"))
+    b = np.asarray(db.table("orders").column("o_amt"))
+    for k, s, n in zip(np.asarray(res.column("o_cid")),
+                       np.asarray(res.column("s")),
+                       np.asarray(res.column("n"))):
+        sel = b[a == k]
+        assert abs(float(s) - sel.sum()) < 1e-2 * max(1.0, abs(sel.sum()))
+        assert int(n) == len(sel)
+
+
+def test_orderby_sorted(db):
+    res = OrderBy(("c_year",), Scan("customer")).execute(db)
+    ys = np.asarray(res.column("c_year"))
+    assert np.all(ys[:-1] <= ys[1:])
+
+
+def test_estimates_reasonable(db):
+    est = db.estimate(Scan("orders"))
+    assert est.n_rows == 500
+    est = db.estimate(Select(Cmp("==", Col("o_cid"), Lit(5)), Scan("orders")))
+    assert 1 <= est.n_rows <= 20  # 500/NDV(100) = 5
+    est = db.estimate(Join(Scan("orders"), Scan("customer"), "o_cid", "c_id"))
+    assert 250 <= est.n_rows <= 1000
+
+
+def test_client_env_charges_query_cost(db):
+    env = ClientEnv(db, SLOW_REMOTE)
+    t = env.execute_query(Scan("customer"))
+    expected_transfer = t.nrows * t.row_bytes / SLOW_REMOTE.bandwidth_bytes_per_s
+    assert env.clock >= SLOW_REMOTE.rtt_s + expected_transfer
+    assert env.n_queries == 1
+
+
+def test_orm_cache_hit_is_local(db):
+    env = ClientEnv(db, SLOW_REMOTE)
+    env.point_lookup("customer", "c_id", 7)
+    q1, t1 = env.n_queries, env.clock
+    env.point_lookup("customer", "c_id", 7)
+    assert env.n_queries == q1            # cache hit: no extra round trip
+    assert env.clock - t1 < 1e-6
+
+
+def test_prefetch_cache_lookup(db):
+    env = ClientEnv(db, FAST_LOCAL)
+    env.cache_by_column(db.table("customer"), "c_id")
+    row = env.lookup_cache("customer", "c_id", 42)
+    assert row["c_id"] == 42
+    assert env.lookup_cache("customer", "c_id", 10**9) is None
+
+
+def test_project_computed_column(db):
+    from repro.relational import Arith
+    q = Project(("o_id",), Scan("orders"), computed=(("dbl", Arith("*", Col("o_amt"), Lit(2.0))),))
+    t = q.execute(db)
+    assert np.allclose(np.asarray(t.column("dbl")),
+                       2 * np.asarray(db.table("orders").column("o_amt")), rtol=1e-5)
+
+
+def test_table_semantic_equality(db):
+    t = db.table("customer")
+    shuffled = t.take(np.random.default_rng(3).permutation(t.nrows))
+    assert t.same_rows(shuffled)
+    assert not t.same_rows(shuffled, ordered=True) or t.nrows <= 1

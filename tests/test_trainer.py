@@ -1,0 +1,119 @@
+"""Fault tolerance: checkpoint/restart, failure injection, data determinism."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.data import PipelineConfig, Prefetcher, SyntheticLM
+from repro.launch.train import TrainConfig, train
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return all(np.array_equal(np.asarray(x, np.float32),
+                              np.asarray(y, np.float32)) for x, y in zip(la, lb))
+
+
+def test_loss_decreases_on_structured_stream(tmp_path):
+    out = train(TrainConfig(arch="h2o-danube-1.8b", steps=60, global_batch=8,
+                            seq_len=32, log_every=10))
+    losses = [l for _, l in out["losses"]]
+    # per-batch noise: require the best later loss to clearly beat the start
+    assert min(losses[2:]) < losses[0] - 0.05, losses
+
+
+def test_failure_injection_and_bitwise_resume(tmp_path):
+    """Crash at step 7, restart, and land bit-identical to an uninterrupted
+    run — checkpoint covers params, opt state, and the data cursor."""
+    common = dict(arch="h2o-danube-1.8b", steps=12, global_batch=4,
+                  seq_len=32, ckpt_every=5, log_every=100)
+    ref = train(TrainConfig(**common, ckpt_dir=str(tmp_path / "ref")))
+
+    crash_dir = str(tmp_path / "crash")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train(TrainConfig(**common, ckpt_dir=crash_dir, fail_at=7))
+    resumed = train(TrainConfig(**common, ckpt_dir=crash_dir))
+    assert resumed["final_step"] == 12
+    assert _leaves_equal(ref["params"], resumed["params"])
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(10), "b": {"c": jnp.ones((3, 3))}}
+    for step in (1, 2, 3):
+        ck.save(step, tree, extras={"data": {"next_index": step}}, block=True)
+    names = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert names == ["step_00000002", "step_00000003"]  # keep=2
+    assert ck.latest_step() == 3
+    step, restored, extras = ck.restore(tree)
+    assert step == 3 and extras["data"]["next_index"] == 3
+    assert _leaves_equal(tree, restored)
+
+
+def test_checkpoint_restore_rejects_shape_mismatch(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.ones((4, 4))}, block=True)
+    with pytest.raises(ValueError):
+        ck.restore({"w": jnp.ones((5, 4))})
+
+
+def test_pipeline_deterministic_and_shardable():
+    cfg = PipelineConfig(global_batch=8, seq_len=16, vocab_size=100, seed=3)
+    a = SyntheticLM(cfg).batch(5)
+    b = SyntheticLM(cfg).batch(5)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    # shards partition the global batch deterministically and disjointly
+    s0 = SyntheticLM(PipelineConfig(global_batch=8, seq_len=16, vocab_size=100,
+                                    seed=3, shard_rank=0, shard_count=2)).batch(5)
+    s1 = SyntheticLM(PipelineConfig(global_batch=8, seq_len=16, vocab_size=100,
+                                    seed=3, shard_rank=1, shard_count=2)).batch(5)
+    assert s0["tokens"].shape == (4, 16) and s1["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_prefetcher_resume_state():
+    cfg = PipelineConfig(global_batch=2, seq_len=8, vocab_size=50)
+    src = SyntheticLM(cfg)
+    p = Prefetcher(src, depth=2)
+    first = p.get()
+    st = p.state()
+    p.close()
+    p2 = Prefetcher.restore(src, st)
+    nxt = p2.get()
+    p2.close()
+    assert np.array_equal(nxt["tokens"], src.batch(st["next_index"])["tokens"])
+
+
+def test_gradient_compression_roundtrip():
+    from repro.optim import compress_int8, compressed_accumulate, decompress_int8
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    q, s = compress_int8(g)
+    assert q.dtype == jnp.int8
+    err = jnp.max(jnp.abs(decompress_int8(q, s) - g))
+    assert float(err) <= float(s) * 0.51 + 1e-6  # half-ulp of the int8 grid
+    # error feedback drives the accumulated estimate toward the true sum
+    acc = jnp.zeros_like(g)
+    e = jnp.zeros_like(g)
+    for _ in range(8):
+        acc, e = compressed_accumulate(acc, g, e)
+    rel = float(jnp.linalg.norm(acc - 8 * g) / jnp.linalg.norm(8 * g))
+    assert rel < 0.01
+
+
+def test_microbatched_step_matches_single_batch():
+    """grad accumulation over microbatches == one big batch (linear loss)."""
+    import dataclasses as dc
+    out1 = train(TrainConfig(arch="h2o-danube-1.8b", steps=3, global_batch=8,
+                             seq_len=16, microbatch=1, log_every=1))
+    out2 = train(TrainConfig(arch="h2o-danube-1.8b", steps=3, global_batch=8,
+                             seq_len=16, microbatch=4, log_every=1))
+    l1 = dict(out1["losses"])[3]
+    l2 = dict(out2["losses"])[3]
+    assert abs(l1 - l2) < 0.05, (l1, l2)
