@@ -1,0 +1,26 @@
+PYTHON ?= python
+PYTHONPATH := src
+
+.PHONY: test test-fast bench-smoke bench examples
+
+# tier-1: the full suite (slow markers included)
+test:
+	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m pytest -x -q
+
+# sub-60s inner loop: everything not marked slow
+test-fast:
+	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m pytest -x -q -m "not slow"
+
+# tiny-configuration pass over the benchmark drivers — catches API drift
+# (the drivers import and exercise the CobraSession/compile/run surface)
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m benchmarks.run --smoke \
+		exp_crossover exp_wilos exp_opt_time bench_planner
+
+# full benchmark harness (all modules, paper-scale configurations)
+bench:
+	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m benchmarks.run
+
+examples:
+	$(PYTHON) examples/quickstart.py
+	$(PYTHON) examples/plan_distributed.py

@@ -2,29 +2,29 @@
 cardinalities, plus Cobra's cost-based choice.
 
 The paper's alternative space for these experiments is {P0, P1, P2}
-(generated with N1 + a T5 variation); we therefore restrict the rule set to
-exclude T3 for the faithful row, and ALSO report the full-rule-set Cobra
-(beyond-paper: T3∘T4j projection-pushed join) separately.
+(generated with N1 + a T5 variation); we therefore use the
+``paper-exp1-3`` config preset (no T3) for the faithful row, and ALSO
+report the full-rule-set Cobra (beyond-paper: T3∘T4j projection-pushed
+join) separately. All rows go through one ``CobraSession`` per database so
+the faithful and full-rule compilations share the plan-cache machinery the
+serving path uses.
+
+``REPRO_BENCH_SMOKE=1`` (set by ``benchmarks/run.py --smoke``) shrinks the
+cardinality sweep to a seconds-long API-drift check.
 """
 
 from __future__ import annotations
 
-import time
+import os
 
-from repro.core import CostCatalog, Interpreter, optimize
-from repro.core.rules import default_rules
+from repro.api import CobraSession, OptimizerConfig
+from repro.core import CostCatalog
 from repro.programs import make_orders_customer_db, make_p0, make_p1, make_p2
-from repro.relational.database import ClientEnv, FAST_LOCAL, SLOW_REMOTE
+from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
 
 
-def run_program(prog, db, net, init=None):
-    env = ClientEnv(db, net)
-    Interpreter(env, "fast").run(prog, init)
-    return env.clock
-
-
-def paper_rules():
-    return [r for r in default_rules() if r.name != "T3"]
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def crossover_rows(env_name: str, sweep: str = "orders"):
@@ -33,24 +33,29 @@ def crossover_rows(env_name: str, sweep: str = "orders"):
     if sweep == "orders":
         # Experiment 1/2: customers fixed (scaled-down 73k → 7300 for CPU
         # runtime; the crossover structure is cardinality-RATIO driven)
-        n_cust = 7300
-        order_counts = [100, 1000, 5000, 20000, 100000]
+        n_cust = 730 if _smoke() else 7300
+        order_counts = [100, 2000] if _smoke() else \
+            [100, 1000, 5000, 20000, 100000]
         cases = [(n, n_cust) for n in order_counts]
     else:
         # Experiment 3: orders fixed at 10k (scaled 1k), vary customers
-        cases = [(1000, c) for c in [500, 2000, 8000, 32000]]
+        cases = [(200, c) for c in [500, 4000]] if _smoke() else \
+            [(1000, c) for c in [500, 2000, 8000, 32000]]
 
     for n_orders, n_cust in cases:
         db = make_orders_customer_db(n_orders, n_cust)
-        t0 = run_program(make_p0(), db, net) if n_orders <= 20000 else None
-        t1 = run_program(make_p1(), db, net)
-        t2 = run_program(make_p2(), db, net)
-        res = optimize(make_p0(), db, CostCatalog(net), rules=paper_rules())
-        t_cobra = run_program(res.program, db, net)
-        body = repr(res.program.body)
+        session = CobraSession(db, CostCatalog(net),
+                               config=OptimizerConfig.preset("paper-exp1-3"))
+        t0 = session.execute(make_p0()).simulated_s if n_orders <= 20000 else None
+        t1 = session.execute(make_p1()).simulated_s
+        t2 = session.execute(make_p2()).simulated_s
+        exe = session.compile(make_p0())
+        t_cobra = exe.run().simulated_s
+        body = repr(exe.program.body)
         pick = "P2" if "prefetch" in body else ("P1" if "JOIN" in body else "P0")
-        res_full = optimize(make_p0(), db, CostCatalog(net))
-        t_full = run_program(res_full.program, db, net)
+        exe_full = session.compile(make_p0(),
+                                   config=OptimizerConfig.preset("full"))
+        t_full = exe_full.run().simulated_s
         correct = t_cobra <= min(x for x in (t0, t1, t2) if x is not None) * 1.02
         rows.append({
             "env": env_name, "orders": n_orders, "customers": n_cust,

@@ -4,41 +4,46 @@ Bars per pattern: Original, Heuristic ([4]: maximal SQL push, no prefetch),
 Cobra(AF=1), Cobra(AF=50). Setup mirrors the paper: fast local network,
 many-to-one ratio 10:1, ~20% selectivity; relation size scaled 1M → 20k for
 CPU wall-time (times are simulated; ratios are scale-stable).
+
+Each bar family shares a ``CobraSession``; the heuristic and the two AF
+settings are per-compile config/catalog overrides rather than separate
+entry points. ``REPRO_BENCH_SMOKE=1`` shrinks the relation size.
 """
 
 from __future__ import annotations
 
-from repro.core import CostCatalog, Interpreter, optimize
+import os
+
+from repro.api import CobraSession, OptimizerConfig
+from repro.core import CostCatalog
 from repro.programs import WILOS_PROGRAMS, make_wilos_db
-from repro.relational.database import ClientEnv, FAST_LOCAL
+from repro.relational.database import FAST_LOCAL
 
 N_BIG = 4000
 
 
-def run_program(prog, db, init=None):
-    env = ClientEnv(db, FAST_LOCAL)
-    Interpreter(env, "fast").run(prog, init)
-    return env.clock
+def _n_big() -> int:
+    return 400 if os.environ.get("REPRO_BENCH_SMOKE") == "1" else N_BIG
 
 
 def wilos_rows():
     rows = []
     for pid, maker in WILOS_PROGRAMS.items():
-        init = {"worklist": [1, 3, 5, 7, 9, 11]} if pid == "E" else None
+        params = {"worklist": [1, 3, 5, 7, 9, 11]} if pid == "E" else {}
         prog = maker()
 
         def fresh():
-            return make_wilos_db(N_BIG, ratio=10)
+            return CobraSession(make_wilos_db(_n_big(), ratio=10),
+                                CostCatalog(FAST_LOCAL))
 
-        t_orig = run_program(prog, fresh(), init)
-        res_h = optimize(prog, fresh(), CostCatalog(FAST_LOCAL),
-                         choice="heuristic")
-        t_heur = run_program(res_h.program, fresh(), init)
+        t_orig = fresh().execute(prog, **params).simulated_s
+        exe_h = fresh().compile(prog,
+                                config=OptimizerConfig.preset("heuristic"))
+        t_heur = exe_h.run(**params).simulated_s
         out = {"pattern": pid, "original_s": t_orig, "heuristic_s": t_heur}
         for af in (1.0, 50.0):
-            res_c = optimize(prog, fresh(), CostCatalog(FAST_LOCAL, af=af))
-            t_c = run_program(res_c.program, fresh(), init)
-            out[f"cobra_af{int(af)}_s"] = t_c
+            exe_c = fresh().compile(prog, catalog=CostCatalog(FAST_LOCAL, af=af))
+            out[f"cobra_af{int(af)}_s"] = exe_c.run(**params).simulated_s
         out["cobra_never_worse"] = (
             out["cobra_af50_s"] <= min(t_orig, t_heur) * 1.05
             or out["cobra_af1_s"] <= min(t_orig, t_heur) * 1.05)

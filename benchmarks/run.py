@@ -2,14 +2,24 @@
 
   exp_crossover  Fig. 13 a/b/c  (P0/P1/P2 crossover + Cobra's choice)
   exp_wilos      Fig. 14/15     (Wilos patterns A–F, 4 bars each)
-  exp_opt_time   Sec. VIII      (optimization time < 1 s)
+  exp_opt_time   Sec. VIII      (optimization time < 1 s + plan-cache hit)
   bench_kernels  kernel tile/roofline analysis + CPU reference timings
   bench_roofline §Roofline table from dry-run artifacts
   bench_planner  planner-vs-XLA validation (beyond-paper)
 
+Usage::
+
+    python -m benchmarks.run [--smoke] [module ...]
+
+``--smoke`` sets ``REPRO_BENCH_SMOKE=1`` before importing the drivers,
+shrinking every workload to a seconds-long configuration — the CI guard
+against API drift in the benchmark drivers (``make bench-smoke``). With no
+module arguments all modules run.
+
 Prints ``name,us_per_call,derived`` CSV.
 """
 
+import os
 import sys
 import time
 
@@ -19,22 +29,34 @@ def emit(name, value, derived=""):
 
 
 def main() -> None:
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args.remove("--smoke")
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     from . import (bench_kernels, bench_planner, bench_roofline,
                    exp_crossover, exp_opt_time, exp_wilos)
     mods = {"exp_crossover": exp_crossover, "exp_wilos": exp_wilos,
             "exp_opt_time": exp_opt_time, "bench_kernels": bench_kernels,
             "bench_roofline": bench_roofline, "bench_planner": bench_planner}
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    unknown = [a for a in args if a not in mods]
+    if unknown:
+        print(f"unknown module(s) {unknown}; available: {sorted(mods)}",
+              file=sys.stderr)
+        sys.exit(2)
+    selected = args or list(mods)
     print("name,us_per_call,derived")
-    for name, mod in mods.items():
-        if only and name != only:
-            continue
+    failures = 0
+    for name in selected:
+        mod = mods[name]
         t0 = time.time()
         try:
             mod.main(emit)
             emit(f"{name}/__total_s", (time.time() - t0) * 1e6, "harness")
         except Exception as e:  # keep the harness going
+            failures += 1
             emit(f"{name}/__error", 0, repr(e)[:120])
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,22 @@
+"""Repo-level pytest configuration.
+
+  * registers the ``slow`` marker — the longest system/optimizer tests carry
+    it, so ``pytest -m "not slow"`` (or ``make test-fast``) is the sub-60s
+    inner loop while the default run keeps full coverage.
+
+(The optional-``hypothesis`` guard lives in tests/test_properties.py itself
+via ``pytest.importorskip``; hypothesis is a dev extra in pyproject.toml.)
+"""
+
+import os
+import sys
+
+# the tier-1 command is `PYTHONPATH=src python -m pytest`; make the import
+# path robust for bare `pytest` invocations too
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running system/optimizer tests; deselect with -m 'not slow'")

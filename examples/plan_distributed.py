@@ -2,22 +2,24 @@
 
     PYTHONPATH=src python examples/plan_distributed.py
 
-For several (architecture × workload) cells, enumerate the plan space
-(layout × remat × microbatch × MoE dispatch) through the Region-DAG
-machinery, cost each with the three-term TPU roofline model, and print the
-least-cost plan — the same Volcano-style choice the paper makes between
-P1 and P2, applied to sharding instead of SQL.
+For several (architecture × workload) cells, front the step-program planner
+through the same ``CobraSession`` facade used for program rewriting: both
+domains return ``PlanReport``s — the chosen alternative, its estimated
+cost, and the size of the enumerated plan space — so sharding choices read
+exactly like SQL/prefetch choices.
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.planner import enumerate_plans, plan
-from repro.models.arch import get_arch
+from repro.api import CobraSession
+from repro.programs import make_orders_customer_db
 
 
 def main():
+    # the planner facade needs no relational data; a tiny db seeds the session
+    session = CobraSession(make_orders_customer_db(10, 10))
     cells = [
         ("stablelm-12b", "train", 4096, 256),
         ("kimi-k2-1t-a32b", "train", 4096, 256),
@@ -26,15 +28,15 @@ def main():
         ("rwkv6-3b", "decode", 524288, 1),
     ]
     for arch, kind, T, B in cells:
-        cfg = get_arch(arch)
-        out = plan(cfg, T, B, kind, mesh=(1, 16, 16), top_k=3)
+        reports = session.plan_step(arch, T, B, kind, mesh=(1, 16, 16),
+                                    top_k=3)
         print(f"\n=== {arch} / {kind} T={T} B={B} on 16x16 ===")
-        for i, cand in enumerate(out):
-            c, t = cand["choice"], cand["terms"]
+        for i, rep in enumerate(reports):
+            c, t = rep.choice, rep.artifact
             flag = " ← chosen" if i == 0 else ""
             feas = "" if t["feasible"] else "  [infeasible: HBM]"
             print(f"  {c.strategy:8s} remat={c.remat:5s} mb={c.microbatch:<3d} "
-                  f"moe={c.moe_mode:13s} step≈{cand['cost_s']*1e3:8.1f}ms "
+                  f"moe={c.moe_mode:13s} step≈{rep.est_cost_s*1e3:8.1f}ms "
                   f"(C {t['compute_s']*1e3:7.1f} | M {t['memory_s']*1e3:7.1f} "
                   f"| X {t['collective_s']*1e3:7.1f}) "
                   f"res={t['resident_bytes']/1e9:5.1f}GB{feas}{flag}")

@@ -1,53 +1,87 @@
-"""Quickstart: Cobra cost-based rewriting of the Fig. 3 ORM program.
+"""Quickstart: the `CobraSession` API on the Fig. 3 ORM program.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds P0 (the Hibernate N+1 program), optimizes it under two network
-environments, and shows Cobra picking the join rewrite (P1) in one regime
-and the prefetch rewrite (P2) in the other — then executes everything and
-verifies identical results.
+Walkthrough:
+
+  1. Trace P0 (the Hibernate N+1 program) with ``ProgramBuilder`` — no
+     hand-assembled Region IR.
+  2. Open a ``CobraSession`` and ``compile()`` the program: the memo search
+     runs once and the chosen plan lands in a stats-versioned plan cache.
+  3. ``Executable.run()`` executes the rewritten program (execute-many).
+  4. Re-compiling the same program is a cache hit; ``db.analyze()`` after a
+     data change bumps the stats version and forces a fresh compilation —
+     whose winning plan may flip (join ↔ prefetch) with the new stats.
+
+Migration note: the old free function ``repro.core.optimize(program, db,
+catalog)`` still works — it is now a thin shim that opens a throwaway
+session per call — but it re-runs the full memo search every time. Hold a
+``CobraSession`` instead to compile once and execute many.
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import CostCatalog, Interpreter, optimize
-from repro.core.rules import default_rules
-from repro.programs import make_orders_customer_db, make_p0
-from repro.relational.database import ClientEnv, FAST_LOCAL, SLOW_REMOTE
+from repro.api import CobraSession, OptimizerConfig, ProgramBuilder
+from repro.core import CostCatalog
+from repro.programs import make_orders_customer_db
+from repro.relational.database import SLOW_REMOTE
 
 
-def run(prog, db, net):
-    env = ClientEnv(db, net)
-    out = Interpreter(env, "fast").run(prog)
-    return out["result"], env.clock
+def trace_p0():
+    """Fig. 3a, written as straight-line traced code."""
+    b = ProgramBuilder("P0")
+    b.relate("orders", "o_customer_sk", "customer", "c_customer_sk",
+             name="customer")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("orders"), var="o") as o:
+        cust = b.let("cust", o.customer)          # ORM navigation → N+1
+        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
 
 
 def main():
-    paper_rules = [r for r in default_rules() if r.name != "T3"]
+    p0 = trace_p0()
     for n_orders, n_cust, label in [(200, 7300, "few orders, many customers"),
                                     (20000, 1000, "many orders, few customers")]:
         db = make_orders_customer_db(n_orders, n_cust)
-        p0 = make_p0()
+        session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                               config=OptimizerConfig.preset("paper-exp1-3"))
         print(f"\n=== {label}: orders={n_orders} customers={n_cust} "
               f"(slow remote network) ===")
-        r0, t0 = run(p0, db, SLOW_REMOTE)
-        print(f"original P0 (N+1 selects):      {t0:8.2f}s simulated")
 
-        res = optimize(p0, db, CostCatalog(SLOW_REMOTE), rules=paper_rules)
-        r1, t1 = run(res.program, db, SLOW_REMOTE)
-        kind = "P2 (prefetch)" if "prefetch" in repr(res.program.body) \
+        baseline = session.execute(p0)
+        print(f"original P0 (N+1 selects):      {baseline.simulated_s:8.2f}s "
+              f"simulated, {baseline.n_queries} queries")
+
+        exe = session.compile(p0)
+        opt = exe.run()
+        kind = "P2 (prefetch)" if "prefetch" in repr(exe.program.body) \
             else "P1 (SQL join)"
-        print(f"Cobra chose {kind:20s}: {t1:8.2f}s "
-              f"(est {res.est_cost:.2f}s, optimized in {res.opt_time_s*1e3:.0f}ms)")
+        print(f"Cobra chose {kind:20s}: {opt.simulated_s:8.2f}s "
+              f"(est {exe.est_cost_s:.2f}s, optimized in "
+              f"{exe.result.opt_time_s*1e3:.0f}ms)")
 
-        res_full = optimize(p0, db, CostCatalog(SLOW_REMOTE))
-        r2, t2 = run(res_full.program, db, SLOW_REMOTE)
-        print(f"Cobra, full rule set (T3∘T4j):  {t2:8.2f}s  [beyond-paper]")
-        assert r0 == r1 == r2, "all rewrites must be semantics-preserving"
+        # full rule set (beyond-paper T3∘T4j projection-pushed join)
+        exe_full = session.compile(p0, config=OptimizerConfig.preset("full"))
+        full = exe_full.run()
+        print(f"Cobra, full rule set (T3∘T4j):  {full.simulated_s:8.2f}s")
+
+        # compile-once / execute-many: second compile is a cache hit
+        again = session.compile(p0)
+        assert again.from_cache, "repeated compile must hit the plan cache"
+        t = session.telemetry
+        print(f"plan cache: {t['cache_hits']} hit(s), "
+              f"{t['memo_runs']} memo run(s) for {t['compile_calls']} compiles")
+
+        assert baseline["result"] == opt["result"] == full["result"], \
+            "all rewrites must be semantics-preserving"
         print(f"results identical across all programs "
-              f"({len(r0)} rows) — speedup {t0/t1:.0f}x / {t0/t2:.0f}x")
+              f"({len(baseline['result'])} rows) — speedup "
+              f"{baseline.simulated_s/opt.simulated_s:.0f}x / "
+              f"{baseline.simulated_s/full.simulated_s:.0f}x")
 
 
 if __name__ == "__main__":

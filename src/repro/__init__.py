@@ -1,6 +1,30 @@
 """COBRA on TPU: cost-based rewriting of database applications (Emani &
 Sudarshan, 2018) as a production JAX framework.
 
+The public surface is the session API::
+
+    from repro.api import CobraSession, OptimizerConfig, ProgramBuilder, q
+    from repro.core import CostCatalog
+
+    session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                           config=OptimizerConfig.preset("paper-exp1-3"))
+    exe = session.compile(program)     # memo search once, plan cached
+    out = exe.run()                    # execute-many (outputs + sim clock)
+
+Programs are written with the tracing ``ProgramBuilder`` (``with``-scoped
+loops, ``q()`` relational query handles, attribute/relationship navigation)
+instead of hand-assembled Region IR. Compiled plans live in a cache keyed by
+(program fingerprint, cost catalog, optimizer config, ``db.stats_version``);
+``db.analyze()`` bumps the stats version, invalidating plans whose cost
+estimates are stale. The same session fronts the distributed TPU planner
+(``session.plan_step``) with a shared ``PlanReport`` result vocabulary.
+
+Migration note: the legacy free function ``repro.core.optimize(program, db,
+catalog, choice, rules)`` remains supported as a thin shim that opens a
+throwaway session per call — correct, but it re-runs the full memo search
+every time; hold a ``CobraSession`` for compile-once/execute-many.
+
+  repro.api         — CobraSession, OptimizerConfig, ProgramBuilder, PlanCache
   repro.core        — the paper: regions, F-IR, Region DAG, rules, search
   repro.core.planner — the technique applied to distributed execution
   repro.relational  — columnar JAX tables + simulated DB environment
@@ -9,4 +33,4 @@ Sudarshan, 2018) as a production JAX framework.
   repro.launch      — meshes, sharding, dry-run, train/serve drivers
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

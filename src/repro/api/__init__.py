@@ -1,0 +1,24 @@
+"""Cobra's public API: session, config, tracing frontend, plan cache.
+
+    from repro.api import CobraSession, OptimizerConfig, ProgramBuilder, q
+
+    session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                           config=OptimizerConfig.preset("paper-exp1-3"))
+    exe = session.compile(program)     # memo search once, then cached
+    out = exe.run()                    # execute-many
+
+See ``examples/quickstart.py`` for the end-to-end walkthrough and
+``repro.api.builder`` for the tracing program frontend.
+"""
+
+from .builder import Expr, ProgramBuilder, Q, VarHandle, col, param, q
+from .cache import PlanCache, PlanCacheKey, program_fingerprint
+from .config import OptimizerConfig, PRESETS
+from .session import CobraSession, Executable, ExecutionResult, PlanReport
+
+__all__ = [
+    "CobraSession", "Executable", "ExecutionResult", "PlanReport",
+    "OptimizerConfig", "PRESETS",
+    "ProgramBuilder", "Expr", "VarHandle", "Q", "q", "col", "param",
+    "PlanCache", "PlanCacheKey", "program_fingerprint",
+]

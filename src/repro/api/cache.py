@@ -1,0 +1,96 @@
+"""Stats-versioned plan cache: compile once, execute many.
+
+Keyed by (program fingerprint, cost-catalog key, optimizer-config key,
+database stats version). The stats version is a monotonic counter on
+``DatabaseServer`` bumped whenever table statistics change (``analyze()``
+or table replacement), so a cached plan is automatically invalidated when
+the data the cost model saw is stale — the winning plan may legitimately
+flip (e.g. P1 join → P2 prefetch) after cardinalities shift.
+
+Entries are LRU-evicted beyond ``max_entries``; hit/miss/eviction counters
+feed ``CobraSession.telemetry``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+__all__ = ["PlanCache", "PlanCacheKey", "program_fingerprint"]
+
+
+def program_fingerprint(program) -> str:
+    """Stable content hash of a Program's structural key (name excluded, so
+    two identically-shaped programs share compiled plans)."""
+    key = program.key()
+    # drop the name component ("P", name, body_key, outputs) -> structure
+    # only; declared inputs (name, default) are NOT part of Program.key()
+    # but change run() semantics, so they must distinguish fingerprints
+    structural = (key[0],) + tuple(key[2:]) + (tuple(program.inputs),)
+    return hashlib.sha256(repr(structural).encode()).hexdigest()[:32]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCacheKey:
+    program_fp: str
+    catalog_key: Tuple
+    config_key: Tuple
+    stats_version: int
+
+
+class PlanCache:
+    """A small LRU over compiled :class:`~repro.core.search.OptimizationResult`s."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[PlanCacheKey, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: PlanCacheKey) -> Optional[object]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            # a stale sibling (same program/catalog/config, older stats
+            # version) counts as an invalidation, not a cold miss
+            for k in self._entries:
+                if (k.program_fp == key.program_fp
+                        and k.catalog_key == key.catalog_key
+                        and k.config_key == key.config_key
+                        and k.stats_version != key.stats_version):
+                    self.invalidations += 1
+                    break
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return entry
+
+    def put(self, key: PlanCacheKey, value: object) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def drop_stale(self, current_stats_version: int) -> int:
+        """Eagerly drop entries compiled against older statistics."""
+        stale = [k for k in self._entries
+                 if k.stats_version != current_stats_version]
+        for k in stale:
+            del self._entries[k]
+        return len(stale)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "invalidations": self.invalidations}

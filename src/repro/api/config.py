@@ -1,0 +1,107 @@
+"""Optimizer configuration for the session API.
+
+``OptimizerConfig`` unifies the three knobs that were previously scattered
+across ``optimize()`` keyword arguments and module-level constants in
+``core.search``:
+
+  * **rule selection** — which Fig. 11 transformation rules participate in
+    memo saturation, by name (``rules=None`` = the full default set,
+    ``exclude_rules=("T3",)`` = the paper's Experiment 1–3 alternative
+    space {P0, P1, P2});
+  * **cost-choice strategy** — ``"cost"`` (Cobra) or ``"heuristic"``
+    (the [4]-style maximal-SQL-push comparator, Fig. 15's baseline);
+  * **search budgets** — top-K plans per memo group, the cross-product
+    bound at combination points, and the saturation round limit.
+
+Presets mirror the paper's experiments::
+
+    OptimizerConfig.preset("paper-exp1-3")   # no T3: {P0, P1, P2} space
+    OptimizerConfig.preset("full")           # every rule (beyond-paper T3∘T4j)
+    OptimizerConfig.preset("heuristic")      # Fig. 15 baseline comparator
+    OptimizerConfig.preset("wilos")          # Experiment 4: full rules
+
+The config is hashable via :meth:`cache_key` so a ``CobraSession`` can key
+its plan cache on it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+__all__ = ["OptimizerConfig", "PRESETS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Rule selection + cost-choice strategy + search budgets.
+
+    Database/network cost-catalog knobs (C_NRT, BW, C_Z, AF_Q, ...) stay in
+    ``core.cost.CostCatalog`` — the catalog describes the *environment*, this
+    config describes the *optimizer*.
+    """
+
+    choice: str = "cost"                      # "cost" | "heuristic"
+    rules: Optional[Tuple[str, ...]] = None   # rule names; None = full set
+    exclude_rules: Tuple[str, ...] = ()       # subtracted from the above
+    topk: int = 4                             # plans kept per memo group
+    max_combos: int = 4096                    # combination cross-product bound
+    max_rounds: int = 64                      # saturation round limit
+    use_plan_cache: bool = True               # sessions may bypass the cache
+
+    def __post_init__(self):
+        if self.choice not in ("cost", "heuristic"):
+            raise ValueError(f"choice must be 'cost' or 'heuristic', got {self.choice!r}")
+        if isinstance(self.rules, list):
+            object.__setattr__(self, "rules", tuple(self.rules))
+        if isinstance(self.exclude_rules, list):
+            object.__setattr__(self, "exclude_rules", tuple(self.exclude_rules))
+
+    # ------------------------------------------------------------ resolution
+    def resolve_rules(self) -> List:
+        """Materialize the rule objects this config selects."""
+        from ..core.rules import default_rules
+        available = default_rules()
+        by_name = {r.name: r for r in available}
+        if self.rules is None:
+            selected = available
+        else:
+            unknown = [n for n in self.rules if n not in by_name]
+            if unknown:
+                raise ValueError(f"unknown rule name(s): {unknown}; "
+                                 f"available: {sorted(by_name)}")
+            selected = [by_name[n] for n in self.rules]
+        return [r for r in selected if r.name not in self.exclude_rules]
+
+    def rule_names(self) -> Tuple[str, ...]:
+        return tuple(r.name for r in self.resolve_rules())
+
+    def cache_key(self) -> Tuple:
+        """Stable identity for plan-cache keying."""
+        return ("cfg", self.choice, self.rule_names(), self.topk,
+                self.max_combos, self.max_rounds)
+
+    # --------------------------------------------------------------- presets
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "OptimizerConfig":
+        try:
+            base = PRESETS[name]
+        except KeyError:
+            raise ValueError(f"unknown preset {name!r}; "
+                             f"available: {sorted(PRESETS)}") from None
+        return dataclasses.replace(base, **overrides) if overrides else base
+
+
+PRESETS = {
+    # Full Fig. 11 rule set, cost-based choice (includes the beyond-paper
+    # T3 ∘ T4j projection-pushed join).
+    "full": OptimizerConfig(),
+    # Experiments 1-3: the paper's alternative space {P0, P1, P2} is
+    # generated without rule composition via T3.
+    "paper-exp1-3": OptimizerConfig(exclude_rules=("T3",)),
+    # Fig. 15 "Heuristic" bars: push as much into SQL as possible, never
+    # prefetch.
+    "heuristic": OptimizerConfig(choice="heuristic"),
+    # Experiment 4 (Wilos patterns A-F): full rules, cost-based.
+    "wilos": OptimizerConfig(),
+}

@@ -1,0 +1,284 @@
+"""`CobraSession` — the unified public surface of the framework.
+
+One object owns the database handle, the cost catalog, the optimizer
+configuration, and a stats-versioned plan cache::
+
+    session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                           config=OptimizerConfig.preset("paper-exp1-3"))
+    exe = session.compile(make_p0())       # memo search runs (once)
+    out = exe.run()                        # execute the rewritten program
+    exe2 = session.compile(make_p0())      # served from the plan cache
+    db.analyze()                           # stats changed -> version bump
+    exe3 = session.compile(make_p0())      # recompiled against fresh stats
+
+The same session also fronts the distributed TPU planner
+(``core.planner.plan``) through :meth:`CobraSession.plan_step`, so program
+rewriting and step-program sharding share one configuration/result
+vocabulary: both return a :class:`PlanReport` (domain ``"program"`` vs
+``"step"``) with the chosen alternative, its estimated cost, the number of
+alternatives considered, and memo statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+
+from ..core.cost import CostCatalog
+from ..core.regions import Interpreter, Program
+from ..core.search import OptimizationResult, run_search
+from ..relational.database import ClientEnv, DatabaseServer, NetworkProfile, SLOW_REMOTE
+from .cache import PlanCache, PlanCacheKey, program_fingerprint
+from .config import OptimizerConfig
+
+__all__ = ["CobraSession", "Executable", "ExecutionResult", "PlanReport"]
+
+
+# --------------------------------------------------------------------------
+# Shared result vocabulary (program rewriting AND step-program planning)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanReport:
+    """What any Cobra planning pass reports, regardless of domain."""
+
+    domain: str                 # "program" (SQL/prefetch rewriting) | "step" (TPU sharding)
+    name: str                   # program name or arch/workload cell
+    choice: object              # search.Plan | planner.PlanChoice
+    est_cost_s: float           # model-estimated cost of the winner
+    alternatives: int           # alternatives enumerated by the search
+    memo_stats: Dict[str, int]
+    opt_time_s: float
+    artifact: object            # rewritten Program | planner terms dict
+    from_cache: bool = False
+
+    def describe(self) -> str:
+        src = "cache" if self.from_cache else "search"
+        return (f"[{self.domain}] {self.name}: est {self.est_cost_s:.4g}s "
+                f"over {self.alternatives} alternatives "
+                f"({self.opt_time_s*1e3:.1f}ms, {src})")
+
+
+@dataclasses.dataclass
+class ExecutionResult(Mapping):
+    """Outputs of one program execution plus its simulated-clock telemetry."""
+
+    outputs: Dict[str, object]
+    simulated_s: float
+    n_queries: int
+    n_round_trips: int
+
+    # Mapping over outputs so ``exe.run()["result"]`` reads naturally.
+    def __getitem__(self, k):
+        return self.outputs[k]
+
+    def __iter__(self):
+        return iter(self.outputs)
+
+    def __len__(self):
+        return len(self.outputs)
+
+
+class Executable:
+    """A compiled program: the chosen plan + rewritten region IR, runnable
+    many times against the session's database."""
+
+    def __init__(self, session: "CobraSession", source: Program,
+                 result: OptimizationResult, from_cache: bool):
+        self.session = session
+        self.source = source
+        self.result = result
+        self.from_cache = from_cache
+        self.n_runs = 0
+
+    # ------------------------------------------------------------ plan view
+    @property
+    def program(self) -> Program:
+        """The rewritten (optimized) program."""
+        return self.result.program
+
+    @property
+    def plan(self):
+        return self.result.plan
+
+    @property
+    def est_cost_s(self) -> float:
+        return self.result.est_cost
+
+    @property
+    def report(self) -> PlanReport:
+        return PlanReport(
+            domain="program", name=self.source.name, choice=self.result.plan,
+            est_cost_s=self.result.est_cost,
+            alternatives=self.result.alternatives,
+            memo_stats=self.result.memo_stats,
+            opt_time_s=self.result.opt_time_s, artifact=self.result.program,
+            from_cache=self.from_cache)
+
+    def describe(self) -> str:
+        body = repr(self.program.body)
+        kind = ("prefetch" if "prefetch" in body
+                else "join" if "JOIN" in body else "original-shape")
+        return f"{self.report.describe()} -> {kind}"
+
+    # ------------------------------------------------------------ execution
+    def run(self, *, network: Optional[NetworkProfile] = None,
+            mode: str = "fast", **params) -> ExecutionResult:
+        """Execute the optimized program. ``params`` bind program inputs
+        (e.g. ``run(worklist=[1, 3, 5])``)."""
+        self.n_runs += 1
+        self.session.executions += 1
+        return self.session.execute(self.program, network=network, mode=mode,
+                                    **params)
+
+    def run_baseline(self, *, network: Optional[NetworkProfile] = None,
+                     mode: str = "fast", **params) -> ExecutionResult:
+        """Execute the ORIGINAL (unoptimized) program for comparison."""
+        return self.session.execute(self.source, network=network, mode=mode,
+                                    **params)
+
+
+# --------------------------------------------------------------------------
+# Session
+# --------------------------------------------------------------------------
+
+class CobraSession:
+    """Compile-once / execute-many frontend over one simulated database."""
+
+    def __init__(self, db: DatabaseServer,
+                 catalog: Optional[CostCatalog] = None,
+                 config: Optional[OptimizerConfig] = None,
+                 plan_cache_entries: int = 256):
+        self.db = db
+        self.catalog = catalog if catalog is not None else CostCatalog(SLOW_REMOTE)
+        self.config = config if config is not None else OptimizerConfig()
+        self.plan_cache = PlanCache(plan_cache_entries)
+        self._step_cache: Dict[Tuple, PlanReport] = {}
+        # telemetry counters
+        self.compile_calls = 0
+        self.memo_runs = 0          # actual memo build+saturate+search passes
+        self.executions = 0
+
+    # ------------------------------------------------------------- keys
+    def _catalog_key(self, catalog: CostCatalog) -> Tuple:
+        return dataclasses.astuple(catalog)
+
+    def _cache_key(self, program: Program, catalog: CostCatalog,
+                   config: OptimizerConfig,
+                   rules_override: Optional[Sequence]) -> PlanCacheKey:
+        if rules_override is not None:
+            config_key = ("cfg", config.choice,
+                          tuple(r.name for r in rules_override),
+                          config.topk, config.max_combos, config.max_rounds)
+        else:
+            config_key = config.cache_key()
+        return PlanCacheKey(
+            program_fp=program_fingerprint(program),
+            catalog_key=self._catalog_key(catalog),
+            config_key=config_key,
+            stats_version=self.db.stats_version)
+
+    # ---------------------------------------------------------- compilation
+    def compile(self, program: Program, *,
+                config: Optional[OptimizerConfig] = None,
+                catalog: Optional[CostCatalog] = None,
+                rules: Optional[Sequence] = None) -> Executable:
+        """Optimize ``program`` (or fetch its cached plan) -> :class:`Executable`.
+
+        ``config``/``catalog`` override the session defaults for this call;
+        ``rules`` takes pre-built ``Rule`` objects (the back-compat path used
+        by ``repro.core.optimize``)."""
+        cfg = config if config is not None else self.config
+        cat = catalog if catalog is not None else self.catalog
+        self.compile_calls += 1
+
+        key = self._cache_key(program, cat, cfg, rules)
+        if cfg.use_plan_cache:
+            cached = self.plan_cache.get(key)
+            if cached is not None:
+                return Executable(self, program, cached, from_cache=True)
+
+        rule_objs = list(rules) if rules is not None else cfg.resolve_rules()
+        result = run_search(program, self.db, cat, choice=cfg.choice,
+                            rules=rule_objs, topk=cfg.topk,
+                            max_combos=cfg.max_combos,
+                            max_rounds=cfg.max_rounds)
+        self.memo_runs += 1
+        if cfg.use_plan_cache:
+            self.plan_cache.put(key, result)
+        return Executable(self, program, result, from_cache=False)
+
+    # ------------------------------------------------------------ execution
+    def execute(self, program: Program, *,
+                network: Optional[NetworkProfile] = None,
+                mode: str = "fast", **params) -> ExecutionResult:
+        """Run any program (optimized or not) against the session database
+        on a fresh simulated client, returning outputs + clock telemetry."""
+        declared = {n for n, _ in program.inputs}
+        unknown = set(params) - declared
+        if unknown:
+            raise TypeError(
+                f"unknown program input(s) {sorted(unknown)}; "
+                f"{program.name} declares {sorted(declared) or 'no inputs'}")
+        env = ClientEnv(self.db, network or self.catalog.network,
+                        c_z=self.catalog.c_z)
+        outputs = Interpreter(env, mode).run(program, params or None)
+        return ExecutionResult(outputs=outputs, simulated_s=env.clock,
+                               n_queries=env.n_queries,
+                               n_round_trips=env.n_round_trips)
+
+    # --------------------------------------------- distributed-planner facade
+    def plan_step(self, arch: Union[str, object], seq_len: int,
+                  global_batch: int, kind: str,
+                  mesh: Tuple[int, ...] = (1, 16, 16),
+                  top_k: int = 1) -> Union[PlanReport, list]:
+        """Front the TPU step-program planner with the same result vocabulary.
+
+        Accepts an architecture name (resolved via ``models.arch.get_arch``)
+        or an ``ArchConfig``. ``top_k > 1`` returns the K best reports."""
+        from ..core.planner import enumerate_plans, plan as planner_plan
+        cfg = arch
+        if isinstance(arch, str):
+            from ..models.arch import get_arch
+            cfg = get_arch(arch)
+        name = f"{getattr(cfg, 'name', arch)}/{kind}/T{seq_len}/B{global_batch}"
+        key = (name, tuple(mesh), top_k)
+        cached = self._step_cache.get(key)
+        if cached is not None:
+            return cached
+
+        t0 = time.perf_counter()
+        out = planner_plan(cfg, seq_len, global_batch, kind, mesh=mesh,
+                           top_k=top_k)
+        dt = time.perf_counter() - t0
+        if top_k == 1:
+            report = PlanReport(
+                domain="step", name=name, choice=out["choice"],
+                est_cost_s=out["cost_s"], alternatives=out["n_alternatives"],
+                memo_stats=out["memo"], opt_time_s=dt, artifact=out["terms"])
+        else:
+            n_alts = len(enumerate_plans(cfg, kind))
+            report = [PlanReport(domain="step", name=name, choice=c["choice"],
+                                 est_cost_s=c["cost_s"], alternatives=n_alts,
+                                 memo_stats={}, opt_time_s=dt,
+                                 artifact=c["terms"])
+                      for c in out]
+        self._step_cache[key] = report
+        return report
+
+    # ------------------------------------------------------------- telemetry
+    def analyze(self) -> int:
+        """Refresh table statistics (bumps the stats version, invalidating
+        cached plans); returns the new version."""
+        self.db.analyze()
+        return self.db.stats_version
+
+    @property
+    def telemetry(self) -> Dict[str, int]:
+        t = {"compile_calls": self.compile_calls,
+             "memo_runs": self.memo_runs,
+             "executions": self.executions,
+             "stats_version": self.db.stats_version}
+        t.update({f"cache_{k}": v for k, v in self.plan_cache.stats().items()})
+        return t

@@ -14,7 +14,7 @@ from .fir import (FIRConversionError, eval_fir, fir_to_region, loop_to_fir)
 from .dag import AndNode, Memo, Rule, expand
 from .rules import RuleContext, build_memo, default_rules
 from .cost import CostCatalog, CostModel
-from .search import OptimizationResult, Plan, optimize
+from .search import OptimizationResult, Plan, optimize, run_search
 
 __all__ = [
     "Assign", "BasicBlock", "CacheByColumn", "CollectionAdd", "CondRegion",
@@ -25,5 +25,5 @@ __all__ = [
     "FIRConversionError", "eval_fir", "fir_to_region", "loop_to_fir",
     "AndNode", "Memo", "Rule", "expand", "RuleContext", "build_memo",
     "default_rules", "CostCatalog", "CostModel", "OptimizationResult", "Plan",
-    "optimize",
+    "optimize", "run_search",
 ]

@@ -33,7 +33,8 @@ from .regions import (Assign, BasicBlock, CondRegion, IBin, IQuery,
                       Region, SeqRegion)
 from .rules import RuleContext, _get_parts, build_memo, default_rules
 
-__all__ = ["optimize", "OptimizationResult", "Plan", "best_plans", "plan_cost"]
+__all__ = ["optimize", "run_search", "OptimizationResult", "Plan",
+           "best_plans", "plan_cost"]
 
 _TOPK = 4
 _MAX_COMBOS = 4096
@@ -61,11 +62,12 @@ def _merge_resources(*resource_sets) -> Tuple[Tuple[object, float], ...]:
     return tuple(sorted(seen.items(), key=lambda kv: repr(kv[0])))
 
 
-def _combine(children_lists: Sequence[List[Plan]]) -> List[Tuple[Plan, ...]]:
+def _combine(children_lists: Sequence[List[Plan]],
+             max_combos: int = _MAX_COMBOS) -> List[Tuple[Plan, ...]]:
     combos = 1
     for cl in children_lists:
         combos *= max(1, len(cl))
-    if combos > _MAX_COMBOS:
+    if combos > max_combos:
         # greedy: take each child's best only
         return [tuple(cl[0] for cl in children_lists)]
     return list(itertools.product(*children_lists))
@@ -73,11 +75,14 @@ def _combine(children_lists: Sequence[List[Plan]]) -> List[Tuple[Plan, ...]]:
 
 class Searcher:
     def __init__(self, memo: Memo, cm: CostModel, ctx: RuleContext,
-                 choice: str = "cost"):
+                 choice: str = "cost", topk: int = _TOPK,
+                 max_combos: int = _MAX_COMBOS):
         self.memo = memo
         self.cm = cm
         self.ctx = ctx
         self.choice = choice  # "cost" | "heuristic"
+        self.topk = topk
+        self.max_combos = max_combos
         self._cache: Dict[int, List[Plan]] = {}
         self._in_progress: set = set()
 
@@ -93,7 +98,7 @@ class Searcher:
         for a in self.memo.members(g):
             plans.extend(self.and_plans(a))
         self._in_progress.discard(g)
-        plans = self._rank(plans)[:_TOPK]
+        plans = self._rank(plans)[:self.topk]
         self._cache[g] = plans
         return plans
 
@@ -108,7 +113,7 @@ class Searcher:
         if any(len(k) == 0 for k in kids):
             return []
         out: List[Plan] = []
-        for combo in _combine(kids):
+        for combo in _combine(kids, self.max_combos):
             base, res = self._compose(node, combo)
             out.append(Plan(a, node.op, node.payload, combo, base, res))
         return out
@@ -380,18 +385,23 @@ class OptimizationResult:
     alternatives: int
 
 
-def optimize(program: Program, db, catalog: CostCatalog,
-             choice: str = "cost", rules: Optional[Sequence] = None
-             ) -> OptimizationResult:
-    """rules=None uses the full Fig. 11 rule set; pass a restricted list
-    (e.g. without T3) to reproduce the paper's Experiment-1/2/3 alternative
-    space {P0, P1, P2} exactly."""
+def run_search(program: Program, db, catalog: CostCatalog, *,
+               choice: str = "cost", rules: Optional[Sequence] = None,
+               topk: int = _TOPK, max_combos: int = _MAX_COMBOS,
+               max_rounds: int = 64) -> OptimizationResult:
+    """One full memo pass: build → saturate rules → search → codegen.
+
+    This is the uncached engine; callers wanting compile-once/execute-many
+    semantics should go through ``repro.api.CobraSession``, which fronts
+    this with a stats-versioned plan cache."""
     t0 = time.perf_counter()
     ctx = RuleContext(db=db)
     memo, root = build_memo(program, ctx)
-    stats = expand(memo, list(rules) if rules is not None else default_rules(), ctx)
+    stats = expand(memo, list(rules) if rules is not None else default_rules(),
+                   ctx, max_rounds=max_rounds)
     cm = CostModel(db, catalog)
-    searcher = Searcher(memo, cm, ctx, choice=choice)
+    searcher = Searcher(memo, cm, ctx, choice=choice, topk=topk,
+                        max_combos=max_combos)
     plans = searcher.group_plans(root)
     if not plans:
         raise RuntimeError("no plan found")
@@ -402,3 +412,18 @@ def optimize(program: Program, db, catalog: CostCatalog,
     dt = time.perf_counter() - t0
     return OptimizationResult(out, best, best.total, stats, dt,
                               stats.get("alternatives_added", 0))
+
+
+def optimize(program: Program, db, catalog: CostCatalog,
+             choice: str = "cost", rules: Optional[Sequence] = None
+             ) -> OptimizationResult:
+    """Back-compat shim over :class:`repro.api.CobraSession`.
+
+    rules=None uses the full Fig. 11 rule set; pass a restricted list
+    (e.g. without T3) to reproduce the paper's Experiment-1/2/3 alternative
+    space {P0, P1, P2} exactly. New code should hold a session and use
+    ``session.compile(program)`` so repeated optimizations hit the plan
+    cache instead of re-running memo expansion."""
+    from ..api import CobraSession, OptimizerConfig
+    session = CobraSession(db, catalog, config=OptimizerConfig(choice=choice))
+    return session.compile(program, rules=rules).result

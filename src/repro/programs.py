@@ -1,4 +1,4 @@
-"""The paper's example programs and workloads, as executable region IR.
+"""The paper's example programs and workloads, via the tracing frontend.
 
   * ``make_p0 / make_p1 / make_p2`` — Fig. 3 (Hibernate N+1 / SQL join /
     prefetch) over TPC-DS-sized ``orders`` / ``customer`` tables.
@@ -7,6 +7,11 @@
     (Fig. 14), matching the paper's descriptions.
   * data generators with configurable cardinalities, many-to-one ratio and
     predicate selectivity (Sec. VIII experiment setup).
+
+All programs are written against ``repro.api.ProgramBuilder`` — straight-line
+code with ``with``-scoped loops and conditionals — instead of hand-assembled
+``LoopRegion``/``SeqRegion`` trees. The builder emits byte-identical Region
+IR to the previous hand-built versions (asserted in tests/test_api.py).
 """
 
 from __future__ import annotations
@@ -15,15 +20,10 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from .relational.algebra import (AggSpec, Aggregate, Cmp, Col, Join, Lit,
-                                 OrderBy, Param, Project, Scan, Select)
+from .api.builder import ProgramBuilder, col, param, q
+from .core.regions import Program
 from .relational.database import DatabaseServer
 from .relational.table import Field, Schema, Table
-from .core.regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
-                           CondRegion, IBin, ICacheLookup, ICall, IConst,
-                           IEmptyList, IEmptyMap, IField, ILoadAll, INav,
-                           IQuery, IVar, LoopRegion, MapPut, Prefetch, Program,
-                           SeqRegion, UpdateRow, seq)
 
 __all__ = [
     "make_orders_customer_db", "make_sales_db", "make_wilos_db",
@@ -120,52 +120,39 @@ def make_wilos_db(n_big: int, ratio: int = 10, seed: int = 2) -> DatabaseServer:
 
 def make_p0() -> Program:
     """Hibernate ORM program: per-order navigation → N+1 selects."""
-    body = seq(
-        Assign("cust", INav(IVar("o"), "o_customer_sk", "customer", "c_customer_sk")),
-        Assign("val", ICall("myFunc", (IField(IVar("o"), "o_id"),
-                                       IField(IVar("cust"), "c_birth_year")))),
-        CollectionAdd("result", IVar("val")),
-    )
-    return Program(
-        "P0",
-        seq(Assign("result", IEmptyList()),
-            LoopRegion("o", ILoadAll("orders"), body, label="L3-7")),
-        outputs=("result",),
-    )
+    b = ProgramBuilder("P0")
+    b.relate("orders", "o_customer_sk", "customer", "c_customer_sk",
+             name="customer")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("orders"), var="o", label="L3-7") as o:
+        cust = b.let("cust", o.customer)  # lazy relationship → point query
+        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
 
 
 def make_p1() -> Program:
     """Rewritten to a single SQL join (Fig. 3b)."""
-    join = Join(Scan("orders"), Scan("customer"), "o_customer_sk", "c_customer_sk")
-    body = seq(
-        Assign("val", ICall("myFunc", (IField(IVar("r"), "o_id"),
-                                       IField(IVar("r"), "c_birth_year")))),
-        CollectionAdd("result", IVar("val")),
-    )
-    return Program(
-        "P1",
-        seq(Assign("result", IEmptyList()),
-            LoopRegion("r", IQuery(join), body)),
-        outputs=("result",),
-    )
+    b = ProgramBuilder("P1")
+    join = q("orders").join("customer", "o_customer_sk", "c_customer_sk")
+    result = b.let("result", b.empty_list())
+    with b.loop(join, var="r") as r:
+        val = b.let("val", b.call("myFunc", r.o_id, r.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
 
 
 def make_p2() -> Program:
     """Rewritten to prefetch + local cache lookups (Fig. 3c)."""
-    body = seq(
-        Assign("cust", ICacheLookup("customer", "c_customer_sk",
-                                    IField(IVar("o"), "o_customer_sk"))),
-        Assign("val", ICall("myFunc", (IField(IVar("o"), "o_id"),
-                                       IField(IVar("cust"), "c_birth_year")))),
-        CollectionAdd("result", IVar("val")),
-    )
-    return Program(
-        "P2",
-        seq(Assign("result", IEmptyList()),
-            BasicBlock(Prefetch(Scan("customer"), "c_customer_sk")),
-            LoopRegion("o", ILoadAll("orders"), body)),
-        outputs=("result",),
-    )
+    b = ProgramBuilder("P2")
+    result = b.let("result", b.empty_list())
+    b.prefetch("customer", by="c_customer_sk")
+    with b.loop(b.load_all("orders"), var="o") as o:
+        cust = b.let("cust", b.cache_lookup("customer", "c_customer_sk",
+                                            o.o_customer_sk))
+        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
 
 
 # --------------------------------------------------------------------------
@@ -173,18 +160,14 @@ def make_p2() -> Program:
 # --------------------------------------------------------------------------
 
 def make_m0() -> Program:
-    q = OrderBy(("month",), Project(("month", "sale_amt"), Scan("sales")))
-    body = seq(
-        Assign("total", IBin("+", IVar("total"), IField(IVar("t"), "sale_amt"))),
-        MapPut("cSum", IField(IVar("t"), "month"), IVar("total")),
-    )
-    return Program(
-        "M0",
-        seq(Assign("total", IConst(0.0)),
-            Assign("cSum", IEmptyMap()),
-            LoopRegion("t", IQuery(q), body)),
-        outputs=("total", "cSum"),
-    )
+    b = ProgramBuilder("M0")
+    monthly = q("sales").select("month", "sale_amt").order_by("month")
+    total = b.let("total", 0.0)
+    csum = b.let("cSum", b.empty_map())
+    with b.loop(monthly, var="t") as t:
+        b.let("total", total + t.sale_amt)
+        b.put(csum, t.month, total)
+    return b.build(outputs=(total, csum))
 
 
 # --------------------------------------------------------------------------
@@ -195,108 +178,79 @@ def make_wilos_a() -> Program:
     """A: nested loops with intermittent updates. The inner loop filters an
     inner relation imperatively; the outer loop issues DB updates, so only
     the inner loop can move to SQL — or be prefetched (Cobra's choice)."""
-    inner = LoopRegion(
-        "y", ILoadAll("tasks"),
-        CondRegion(IBin("==", IField(IVar("y"), "t_role_id"),
-                        IField(IVar("x"), "r_id")),
-                   BasicBlock(Assign("cnt", IBin("+", IVar("cnt"), IConst(1))))))
-    outer_body = seq(
-        Assign("cnt", IConst(0)),
-        inner,
-        UpdateRow("roles", "r_rank", IVar("cnt"), "r_id", IField(IVar("x"), "r_id")),
-    )
-    return Program(
-        "W_A",
-        seq(LoopRegion("x", ILoadAll("roles"), outer_body)),
-        outputs=(),
-    )
+    b = ProgramBuilder("W_A")
+    with b.loop(b.load_all("roles"), var="x") as x:
+        cnt = b.let("cnt", 0)
+        with b.loop(b.load_all("tasks"), var="y") as y:
+            with b.when(y.t_role_id == x.r_id):
+                b.let("cnt", cnt + 1)
+        b.update_row("roles", "r_rank", cnt, "r_id", x.r_id)
+    return b.build(outputs=())
 
 
 def make_wilos_b() -> Program:
     """B: multiple aggregations in one loop — a scalar count plus a collection
     touching every row. Extracting the count to SQL adds a query (heuristic);
     Cobra keeps the original single query."""
-    body = seq(
-        Assign("n", IBin("+", IVar("n"), IConst(1))),
-        CollectionAdd("items", ICall("scale", (IField(IVar("t"), "t_hours"),))),
-    )
-    return Program(
-        "W_B",
-        seq(Assign("n", IConst(0)),
-            Assign("items", IEmptyList()),
-            LoopRegion("t", ILoadAll("tasks"), body)),
-        outputs=("n", "items"),
-    )
+    b = ProgramBuilder("W_B")
+    n = b.let("n", 0)
+    items = b.let("items", b.empty_list())
+    with b.loop(b.load_all("tasks"), var="t") as t:
+        b.let("n", n + 1)
+        b.add(items, b.call("scale", t.t_hours))
+    return b.build(outputs=(n, items))
 
 
 def make_wilos_c() -> Program:
     """C: nested-loops join implemented imperatively."""
-    inner = LoopRegion(
-        "y", ILoadAll("roles"),
-        CondRegion(IBin("==", IField(IVar("y"), "r_id"),
-                        IField(IVar("x"), "t_role_id")),
-                   BasicBlock(CollectionAdd(
-                       "result", ICall("combine", (IField(IVar("x"), "t_hours"),
-                                                   IField(IVar("y"), "r_rank")))))))
-    return Program(
-        "W_C",
-        seq(Assign("result", IEmptyList()),
-            LoopRegion("x", ILoadAll("tasks"), inner)),
-        outputs=("result",),
-    )
+    b = ProgramBuilder("W_C")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("tasks"), var="x") as x:
+        with b.loop(b.load_all("roles"), var="y") as y:
+            with b.when(y.r_id == x.t_role_id):
+                b.add(result, b.call("combine", x.t_hours, y.r_rank))
+    return b.build(outputs=(result,))
 
 
 def make_wilos_d() -> Program:
     """D: a per-row 'function' (inlined) aggregating a correlated query."""
-    inner_q = IQuery(Select(Cmp("==", Col("t_role_id"), Param("rid")), Scan("tasks")),
-                     (("rid", IField(IVar("x"), "r_id")),))
-    inner = LoopRegion("y", inner_q,
-                       BasicBlock(Assign("s", IBin("+", IVar("s"),
-                                                   IField(IVar("y"), "t_hours")))))
-    body = seq(Assign("s", IConst(0.0)), inner,
-               CollectionAdd("result", IVar("s")))
-    return Program(
-        "W_D",
-        seq(Assign("result", IEmptyList()),
-            LoopRegion("x", ILoadAll("roles"), body)),
-        outputs=("result",),
-    )
+    b = ProgramBuilder("W_D")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("roles"), var="x") as x:
+        s = b.let("s", 0.0)
+        tasks_of_role = q("tasks").where(col("t_role_id").eq(param("rid"))) \
+                                  .bind(rid=x.r_id)
+        with b.loop(tasks_of_role, var="y") as y:
+            b.let("s", s + y.t_hours)
+        b.add(result, s)
+    return b.build(outputs=(result,))
 
 
 def make_wilos_e() -> Program:
     """E: the same relation filtered differently across (recursive) calls —
     modeled as a loop over a worklist issuing per-key σ queries."""
-    inner_q = IQuery(Select(Cmp("==", Col("t_role_id"), Param("rid")), Scan("tasks")),
-                     (("rid", IVar("wid")),))
-    inner = LoopRegion("y", inner_q,
-                       BasicBlock(CollectionAdd("result",
-                                                IField(IVar("y"), "t_hours"))))
-    return Program(
-        "W_E",
-        seq(Assign("result", IEmptyList()),
-            LoopRegion("wid", IVar("worklist"), inner)),
-        outputs=("result",),
-        inputs=(("worklist", ()),),
-    )
+    b = ProgramBuilder("W_E")
+    worklist = b.input("worklist", ())
+    result = b.let("result", b.empty_list())
+    with b.loop(worklist, var="wid") as wid:
+        per_key = q("tasks").where(col("t_role_id").eq(param("rid"))) \
+                            .bind(rid=wid)
+        with b.loop(per_key, var="y") as y:
+            b.add(result, y.t_hours)
+    return b.build(outputs=(result,))
 
 
 def make_wilos_f() -> Program:
     """F: different column subsets of one relation used by different callees —
     two narrow queries vs. one prefetch of the whole relation."""
-    q1 = Project(("t_hours",), Scan("tasks"))
-    q2 = Project(("t_state",), Scan("tasks"))
-    l1 = LoopRegion("a", IQuery(q1),
-                    BasicBlock(Assign("hours", IBin("+", IVar("hours"),
-                                                    IField(IVar("a"), "t_hours")))))
-    l2 = LoopRegion("b", IQuery(q2),
-                    BasicBlock(Assign("states", IBin("+", IVar("states"),
-                                                     IField(IVar("b"), "t_state")))))
-    return Program(
-        "W_F",
-        seq(Assign("hours", IConst(0.0)), l1,
-            Assign("states", IConst(0)), l2),
-        outputs=("hours", "states"),
-    )
+    b = ProgramBuilder("W_F")
+    hours = b.let("hours", 0.0)
+    with b.loop(q("tasks").select("t_hours"), var="a") as a:
+        b.let("hours", hours + a.t_hours)
+    states = b.let("states", 0)
+    with b.loop(q("tasks").select("t_state"), var="b") as row:
+        b.let("states", states + row.t_state)
+    return b.build(outputs=(hours, states))
 
 
 WILOS_PROGRAMS = {

@@ -115,6 +115,7 @@ class DatabaseServer:
         self.tables = dict(tables)
         self.model = model
         self._stats: Dict[str, TableStats] = {}
+        self._stats_version = 0
         self.analyze()
 
     def table(self, name: str) -> Table:
@@ -123,11 +124,21 @@ class DatabaseServer:
     def add_table(self, t: Table) -> None:
         self.tables[t.name] = t
         self._stats[t.name] = self._compute_stats(t)
+        self._stats_version += 1
 
     # ----------------------------------------------------------- statistics
-    def analyze(self) -> None:
+    @property
+    def stats_version(self) -> int:
+        """Monotonic counter over statistics refreshes. Any change to the
+        stats a cost model may have consumed (``analyze()``, table
+        replacement) bumps it; plan caches key on it for invalidation."""
+        return self._stats_version
+
+    def analyze(self) -> int:
         for name, t in self.tables.items():
             self._stats[name] = self._compute_stats(t)
+        self._stats_version += 1
+        return self._stats_version
 
     def _compute_stats(self, t: Table) -> TableStats:
         distinct, minmax = {}, {}

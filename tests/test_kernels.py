@@ -32,6 +32,7 @@ ATTN_SWEEP = [
 ]
 
 
+@pytest.mark.slow  # full attention sweep; excluded from test-fast
 @pytest.mark.parametrize("B,H,KV,Tq,Tk,hd,dt,causal,window,chunk", ATTN_SWEEP)
 def test_flash_attention_matches_ref(B, H, KV, Tq, Tk, hd, dt, causal,
                                      window, chunk):
@@ -49,6 +50,7 @@ def test_flash_attention_matches_ref(B, H, KV, Tq, Tk, hd, dt, causal,
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_flash_attention_block_shape_independence():
     k1, k2, k3 = keys(3)
     q = jax.random.normal(k1, (1, 2, 128, 32))
@@ -74,6 +76,7 @@ RWKV_SWEEP = [
 ]
 
 
+@pytest.mark.slow  # full scan sweep; excluded from test-fast
 @pytest.mark.parametrize("B,H,T,K,V,chunk,dt", RWKV_SWEEP)
 def test_rwkv6_scan_matches_ref(B, H, T, K, V, chunk, dt):
     k1, k2, k3, k4, k5 = keys(5)

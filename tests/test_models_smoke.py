@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full arch sweep (~2 min); excluded from test-fast
+
 from repro.configs import ALL_ARCHS
 from repro.models import (forward, get_arch, init_params, loss_fn, make_caches)
 

@@ -1,0 +1,188 @@
+"""Compile-once/execute-many: the stats-versioned plan cache.
+
+Issue acceptance: a repeated ``compile()`` of the same program is served
+from the plan cache without re-running memo expansion, and ``db.analyze()``
+after a stats change invalidates it — with a possibly different winning
+plan under the new statistics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (CobraSession, OptimizerConfig, PlanCache, PlanCacheKey,
+                       program_fingerprint)
+from repro.core import CostCatalog
+from repro.programs import (make_m0, make_orders_customer_db, make_p0,
+                            make_sales_db)
+from repro.relational.database import SLOW_REMOTE
+
+
+def fresh_session(n_orders=100, n_cust=5000, **cfg):
+    db = make_orders_customer_db(n_orders, n_cust)
+    config = OptimizerConfig.preset("paper-exp1-3", **cfg) if cfg else \
+        OptimizerConfig.preset("paper-exp1-3")
+    return CobraSession(db, CostCatalog(SLOW_REMOTE), config=config)
+
+
+class TestCacheHits:
+    def test_second_compile_skips_memo_search(self):
+        session = fresh_session()
+        exe1 = session.compile(make_p0())
+        exe2 = session.compile(make_p0())
+        assert not exe1.from_cache and exe2.from_cache
+        # the memo search ran exactly once for two compiles
+        assert session.memo_runs == 1 and session.compile_calls == 2
+        assert session.plan_cache.hits == 1
+        # the cached executable carries the identical plan/program
+        assert exe2.result is exe1.result
+        assert exe2.program.body.key() == exe1.program.body.key()
+
+    def test_fingerprint_distinguishes_input_defaults(self):
+        """Same body, different declared input defaults -> different run()
+        semantics, so they must not share a cache entry."""
+        from repro.api import ProgramBuilder
+
+        def build(default):
+            b = ProgramBuilder("t")
+            w = b.input("w", default)
+            r = b.let("r", b.empty_list())
+            with b.loop(w, var="x") as x:
+                b.add(r, x)
+            return b.build(outputs=(r,))
+
+        assert program_fingerprint(build((1, 2))) != \
+            program_fingerprint(build((9, 9)))
+        assert program_fingerprint(build((1, 2))) == \
+            program_fingerprint(build((1, 2)))
+
+    def test_fingerprint_ignores_program_name(self):
+        """Two structurally identical programs share one cache entry."""
+        session = fresh_session()
+        session.compile(make_p0())
+        renamed = make_p0()
+        renamed = type(renamed)("P0_other_name", renamed.body,
+                                renamed.outputs, renamed.inputs)
+        assert program_fingerprint(renamed) == program_fingerprint(make_p0())
+        assert session.compile(renamed).from_cache
+
+    def test_cached_plan_still_runs(self):
+        session = fresh_session(500, 100)
+        out1 = session.compile(make_p0()).run()
+        out2 = session.compile(make_p0()).run()
+        a = np.sort(np.asarray(out1["result"], dtype=np.float64))
+        b = np.sort(np.asarray(out2["result"], dtype=np.float64))
+        assert np.allclose(a, b)
+
+    def test_distinct_configs_do_not_collide(self):
+        session = fresh_session()
+        exe_paper = session.compile(make_p0())
+        exe_full = session.compile(make_p0(),
+                                   config=OptimizerConfig.preset("full"))
+        assert not exe_full.from_cache          # different rule set: fresh run
+        assert session.memo_runs == 2
+        exe_full2 = session.compile(make_p0(),
+                                    config=OptimizerConfig.preset("full"))
+        assert exe_full2.from_cache
+        assert exe_paper.result is not exe_full.result
+
+    def test_distinct_catalogs_do_not_collide(self):
+        session = fresh_session()
+        session.compile(make_p0())
+        exe_af = session.compile(make_p0(),
+                                 catalog=CostCatalog(SLOW_REMOTE, af=50.0))
+        assert not exe_af.from_cache
+
+    def test_cache_opt_out(self):
+        session = fresh_session(use_plan_cache=False)
+        session.compile(make_p0())
+        session.compile(make_p0())
+        assert session.memo_runs == 2 and len(session.plan_cache) == 0
+
+
+class TestStatsVersionInvalidation:
+    def test_analyze_bumps_version_monotonically(self):
+        db = make_sales_db(100)
+        v0 = db.stats_version
+        v1 = db.analyze()
+        v2 = db.analyze()
+        assert v0 < v1 < v2
+
+    def test_analyze_invalidates_cached_plan(self):
+        session = fresh_session()
+        exe1 = session.compile(make_p0())
+        session.analyze()                       # stats refresh -> version bump
+        exe2 = session.compile(make_p0())
+        assert not exe2.from_cache and session.memo_runs == 2
+        assert session.plan_cache.invalidations >= 1
+
+    def test_data_change_flips_winning_plan(self):
+        """Issue acceptance: after the data (and thus statistics) change,
+        recompilation may pick a different winner — here P1 (join) at few
+        orders/many customers flips to P2 (prefetch) once the join result
+        dominates transfer."""
+        session = fresh_session(100, 5000)
+        exe1 = session.compile(make_p0())
+        assert "JOIN" in repr(exe1.program.body)
+
+        # replace the tables with a cardinality profile where the join
+        # output dominates, then refresh statistics
+        grown = make_orders_customer_db(4000, 500)
+        session.db.add_table(grown.table("orders"))
+        session.db.add_table(grown.table("customer"))
+        session.db.analyze()
+
+        exe2 = session.compile(make_p0())
+        assert not exe2.from_cache
+        assert "prefetch" in repr(exe2.program.body)
+        # and the new plan still computes the same answer as the original
+        base = session.execute(make_p0())
+        opt = exe2.run()
+        a = np.sort(np.asarray(base["result"], dtype=np.float64))
+        b = np.sort(np.asarray(opt["result"], dtype=np.float64))
+        assert np.allclose(a, b, rtol=1e-4)
+
+    def test_update_through_interpreter_bumps_version(self):
+        """Programs that UPDATE rows change table statistics; the version
+        must move so stale plans cannot be served afterwards."""
+        from repro.programs import make_wilos_a, make_wilos_db
+        from repro.relational.database import FAST_LOCAL
+        session = CobraSession(make_wilos_db(200), CostCatalog(FAST_LOCAL))
+        v0 = session.db.stats_version
+        session.compile(make_wilos_a()).run()
+        assert session.db.stats_version > v0
+
+
+class TestPlanCacheUnit:
+    def _key(self, fp, v):
+        return PlanCacheKey(fp, ("cat",), ("cfg",), v)
+
+    def test_lru_eviction(self):
+        c = PlanCache(max_entries=2)
+        c.put(self._key("a", 1), "A")
+        c.put(self._key("b", 1), "B")
+        assert c.get(self._key("a", 1)) == "A"   # refresh 'a'
+        c.put(self._key("c", 1), "C")            # evicts 'b' (LRU)
+        assert c.get(self._key("b", 1)) is None
+        assert c.get(self._key("a", 1)) == "A"
+        assert c.evictions == 1
+
+    def test_invalidation_counter_vs_cold_miss(self):
+        c = PlanCache()
+        assert c.get(self._key("a", 1)) is None
+        assert c.invalidations == 0              # cold miss, nothing stale
+        c.put(self._key("a", 1), "A")
+        assert c.get(self._key("a", 2)) is None  # stale sibling exists
+        assert c.invalidations == 1
+
+    def test_drop_stale(self):
+        c = PlanCache()
+        c.put(self._key("a", 1), "A")
+        c.put(self._key("b", 2), "B")
+        assert c.drop_stale(current_stats_version=2) == 1
+        assert len(c) == 1 and c.get(self._key("b", 2)) == "B"
+
+    def test_stats_shape(self):
+        c = PlanCache()
+        s = c.stats()
+        assert set(s) == {"entries", "hits", "misses", "evictions",
+                          "invalidations"}

@@ -10,6 +10,10 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install hypothesis) — see pyproject.toml")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CostCatalog, Interpreter, optimize

@@ -70,6 +70,7 @@ class TestPlanner:
         assert two["terms"]["compute_s"] < one["terms"]["compute_s"]
 
 
+@pytest.mark.slow  # spins up the batching server; excluded from test-fast
 class TestServing:
     def test_batched_generation_deterministic(self):
         from repro.launch.serve import ServeConfig, Server

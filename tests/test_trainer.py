@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end training runs; excluded from test-fast
+
 from repro.checkpoint import Checkpointer
 from repro.data import PipelineConfig, Prefetcher, SyntheticLM
 from repro.launch.train import TrainConfig, train
