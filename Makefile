@@ -15,7 +15,7 @@ test-fast:
 # (the drivers import and exercise the CobraSession/compile/run surface)
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m benchmarks.run --smoke \
-		exp_crossover exp_wilos exp_opt_time bench_planner
+		exp_crossover exp_wilos exp_opt_time bench_runtime bench_planner
 
 # full benchmark harness (all modules, paper-scale configurations)
 bench:
@@ -23,4 +23,5 @@ bench:
 
 examples:
 	$(PYTHON) examples/quickstart.py
+	$(PYTHON) examples/serve_programs.py
 	$(PYTHON) examples/plan_distributed.py

@@ -1,0 +1,118 @@
+"""Serving-runtime benchmark: batch size vs throughput crossover.
+
+For batch sizes 1/8/64, measures simulated serving throughput
+(requests per simulated second) of ``Executable.run_batch`` against the
+per-invocation baseline, on two workloads:
+
+  * ``P0`` (orders/customer, slow remote network) — round-trip dominated;
+    batching amortizes each query site's C_NRT across the batch, so
+    throughput climbs steeply with batch size;
+  * ``W_E`` (worklist-parameterized σ queries, fast local network) —
+    parameter-diverse; distinct bindings still fetch, only repeats amortize.
+
+Also reports the plan-store warm-start: wall-clock of a cold ``compile()``
+(memo search) vs a second session hitting the shared store directory.
+
+``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
+to ``BENCH_runtime.json``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.api import CobraSession, OptimizerConfig
+from repro.core import CostCatalog
+from repro.programs import (make_orders_customer_db, make_p0, make_wilos_db,
+                            make_wilos_e)
+from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
+
+BATCH_SIZES = (1, 8, 64)
+
+
+def _paper_session(db, network):
+    return CobraSession(db, CostCatalog(network),
+                        config=OptimizerConfig.preset("paper-exp1-3"))
+
+
+def _throughput(exe, param_sets):
+    batch = exe.run_batch(param_sets)
+    return len(param_sets) / batch.simulated_s, batch
+
+
+def main(emit):
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    n_orders, n_cust = (300, 600) if smoke else (4000, 8000)
+    n_tasks = 300 if smoke else 4000
+
+    traj = {"batch_sizes": list(BATCH_SIZES), "workloads": {}}
+
+    # ---------------------------------------------------------- P0 serving
+    session = _paper_session(make_orders_customer_db(n_orders, n_cust),
+                             SLOW_REMOTE)
+    exe = session.compile(make_p0())
+    base = exe.run()
+    unbatched_rps = 1.0 / base.simulated_s
+    curve = []
+    for bs in BATCH_SIZES:
+        t0 = time.perf_counter()
+        rps, batch = _throughput(exe, [{}] * bs)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        curve.append(rps)
+        emit(f"bench_runtime/P0/batch{bs}", wall_us,
+             f"rps={rps:.3f};round_trips={batch.n_round_trips};"
+             f"speedup_vs_unbatched={rps / unbatched_rps:.1f}x")
+    traj["workloads"]["P0"] = {"throughput_rps": curve,
+                               "unbatched_rps": unbatched_rps,
+                               "round_trips_per_site": 1}
+
+    # --------------------------------------------------- W_E (parameterized)
+    session_e = _paper_session(make_wilos_db(n_tasks, ratio=10), FAST_LOCAL)
+    exe_e = session_e.compile(make_wilos_e())
+    base_e = exe_e.run(worklist=[1])
+    unbatched_e = 1.0 / base_e.simulated_s
+    curve_e = []
+    for bs in BATCH_SIZES:
+        params = [{"worklist": [i % 5]} for i in range(bs)]
+        t0 = time.perf_counter()
+        rps, batch = _throughput(exe_e, params)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        curve_e.append(rps)
+        emit(f"bench_runtime/W_E/batch{bs}", wall_us,
+             f"rps={rps:.3f};site_hits={batch.site_hits}")
+    traj["workloads"]["W_E"] = {"throughput_rps": curve_e,
+                                "unbatched_rps": unbatched_e}
+
+    # ------------------------------------------------- plan-store warm start
+    with tempfile.TemporaryDirectory() as store_dir:
+        t0 = time.perf_counter()
+        cold = CobraSession(make_orders_customer_db(n_orders, n_cust),
+                            CostCatalog(SLOW_REMOTE),
+                            config=OptimizerConfig.preset("paper-exp1-3"),
+                            plan_store=store_dir)
+        cold.compile(make_p0())
+        cold_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        warm = CobraSession(make_orders_customer_db(n_orders, n_cust),
+                            CostCatalog(SLOW_REMOTE),
+                            config=OptimizerConfig.preset("paper-exp1-3"),
+                            plan_store=store_dir)
+        hit = warm.compile(make_p0())
+        warm_us = (time.perf_counter() - t0) * 1e6
+    emit("bench_runtime/store/cold_compile", cold_us, "memo_search=1")
+    emit("bench_runtime/store/warm_compile", warm_us,
+         f"from_store={hit.from_cache};"
+         f"speedup={cold_us / max(warm_us, 1e-3):.0f}x")
+    traj["store"] = {"cold_compile_us": cold_us, "warm_compile_us": warm_us}
+    return traj
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    sys.path.insert(0, "src")
+    out = main(lambda n, v, d="": print(f"{n},{v},{d}"))
+    print(json.dumps(out, indent=1))

@@ -3,6 +3,8 @@
   exp_crossover  Fig. 13 a/b/c  (P0/P1/P2 crossover + Cobra's choice)
   exp_wilos      Fig. 14/15     (Wilos patterns A–F, 4 bars each)
   exp_opt_time   Sec. VIII      (optimization time < 1 s + plan-cache hit)
+  bench_runtime  serving runtime: batch-size/throughput crossover +
+                 plan-store warm start (beyond-paper)
   bench_kernels  kernel tile/roofline analysis + CPU reference timings
   bench_roofline §Roofline table from dry-run artifacts
   bench_planner  planner-vs-XLA validation (beyond-paper)
@@ -16,9 +18,13 @@ shrinking every workload to a seconds-long configuration — the CI guard
 against API drift in the benchmark drivers (``make bench-smoke``). With no
 module arguments all modules run.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV. A module whose ``main(emit)``
+returns a dict additionally gets that trajectory written to
+``BENCH_<module>.json`` (e.g. ``BENCH_runtime.json`` with throughput at
+batch sizes 1/8/64).
 """
 
+import json
 import os
 import sys
 import time
@@ -34,9 +40,10 @@ def main() -> None:
         args.remove("--smoke")
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     from . import (bench_kernels, bench_planner, bench_roofline,
-                   exp_crossover, exp_opt_time, exp_wilos)
+                   bench_runtime, exp_crossover, exp_opt_time, exp_wilos)
     mods = {"exp_crossover": exp_crossover, "exp_wilos": exp_wilos,
-            "exp_opt_time": exp_opt_time, "bench_kernels": bench_kernels,
+            "exp_opt_time": exp_opt_time, "bench_runtime": bench_runtime,
+            "bench_kernels": bench_kernels,
             "bench_roofline": bench_roofline, "bench_planner": bench_planner}
     unknown = [a for a in args if a not in mods]
     if unknown:
@@ -50,8 +57,13 @@ def main() -> None:
         mod = mods[name]
         t0 = time.time()
         try:
-            mod.main(emit)
+            trajectory = mod.main(emit)
             emit(f"{name}/__total_s", (time.time() - t0) * 1e6, "harness")
+            if isinstance(trajectory, dict):
+                out = f"BENCH_{name.replace('bench_', '')}.json"
+                with open(out, "w") as f:
+                    json.dump(trajectory, f, indent=1, sort_keys=True)
+                emit(f"{name}/__trajectory", 0, out)
         except Exception as e:  # keep the harness going
             failures += 1
             emit(f"{name}/__error", 0, repr(e)[:120])

@@ -17,6 +17,21 @@ Migration note: the old free function ``repro.core.optimize(program, db,
 catalog)`` still works — it is now a thin shim that opens a throwaway
 session per call — but it re-runs the full memo search every time. Hold a
 ``CobraSession`` instead to compile once and execute many.
+
+Serving (see ``examples/serve_programs.py`` for the full walkthrough): for
+high-throughput workloads, execute a BATCH of parameter bindings in one
+call and persist plans across processes::
+
+    session = CobraSession(db, catalog, plan_store="plans/")  # disk-backed
+    exe = session.compile(p0)          # warm from plans/ if a prior session
+                                       # compiled the same program
+    batch = exe.run_batch([{}] * 64)   # one server round trip per query
+                                       # site per batch — not per request
+    batch[0].outputs                   # bit-identical to exe.run()
+
+``repro.runtime.ServingRuntime`` wraps this into a request loop that also
+watches observed-vs-estimated cardinalities and recompiles a program when
+its tables drift (feedback-driven re-optimization).
 """
 
 import sys

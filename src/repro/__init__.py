@@ -13,11 +13,18 @@ The public surface is the session API::
 
 Programs are written with the tracing ``ProgramBuilder`` (``with``-scoped
 loops, ``q()`` relational query handles, attribute/relationship navigation)
-instead of hand-assembled Region IR. Compiled plans live in a cache keyed by
-(program fingerprint, cost catalog, optimizer config, ``db.stats_version``);
-``db.analyze()`` bumps the stats version, invalidating plans whose cost
-estimates are stale. The same session fronts the distributed TPU planner
+or the ``session.trace()`` decorator. Compiled plans live in a cache keyed
+by (program fingerprint, cost catalog, optimizer config, per-table stats
+versions of the tables the program touches); ``db.analyze(table, ...)``
+bumps those versions, invalidating exactly the plans whose cost estimates
+went stale. The same session fronts the distributed TPU planner
 (``session.plan_step``) with a shared ``PlanReport`` result vocabulary.
+
+For production-shaped workloads, ``repro.runtime`` adds batched execution
+(``Executable.run_batch`` — one server round trip per query site per
+batch), a disk-backed cross-session ``PlanStore``, and a feedback-driven
+serving loop (``ServingRuntime``) that re-optimizes programs when observed
+cardinalities drift from the estimates their plans were costed on.
 
 Migration note: the legacy free function ``repro.core.optimize(program, db,
 catalog, choice, rules)`` remains supported as a thin shim that opens a
@@ -25,6 +32,7 @@ throwaway session per call — correct, but it re-runs the full memo search
 every time; hold a ``CobraSession`` for compile-once/execute-many.
 
   repro.api         — CobraSession, OptimizerConfig, ProgramBuilder, PlanCache
+  repro.runtime     — serving: run_batch, PlanStore, feedback re-optimization
   repro.core        — the paper: regions, F-IR, Region DAG, rules, search
   repro.core.planner — the technique applied to distributed execution
   repro.relational  — columnar JAX tables + simulated DB environment
@@ -33,4 +41,4 @@ every time; hold a ``CobraSession`` for compile-once/execute-many.
   repro.launch      — meshes, sharding, dry-run, train/serve drivers
 """
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"

@@ -12,7 +12,8 @@ See ``examples/quickstart.py`` for the end-to-end walkthrough and
 """
 
 from .builder import Expr, ProgramBuilder, Q, VarHandle, col, param, q
-from .cache import PlanCache, PlanCacheKey, program_fingerprint
+from .cache import (PlanCache, PlanCacheKey, program_fingerprint,
+                    program_tables, query_tables)
 from .config import OptimizerConfig, PRESETS
 from .session import CobraSession, Executable, ExecutionResult, PlanReport
 
@@ -20,5 +21,6 @@ __all__ = [
     "CobraSession", "Executable", "ExecutionResult", "PlanReport",
     "OptimizerConfig", "PRESETS",
     "ProgramBuilder", "Expr", "VarHandle", "Q", "q", "col", "param",
-    "PlanCache", "PlanCacheKey", "program_fingerprint",
+    "PlanCache", "PlanCacheKey", "program_fingerprint", "program_tables",
+    "query_tables",
 ]

@@ -1,14 +1,16 @@
 """Stats-versioned plan cache: compile once, execute many.
 
 Keyed by (program fingerprint, cost-catalog key, optimizer-config key,
-database stats version). The stats version is a monotonic counter on
-``DatabaseServer`` bumped whenever table statistics change (``analyze()``
-or table replacement), so a cached plan is automatically invalidated when
-the data the cost model saw is stale — the winning plan may legitimately
-flip (e.g. P1 join → P2 prefetch) after cardinalities shift.
+stats token). The stats token is the vector of PER-TABLE statistics
+versions for exactly the tables the program touches (``program_tables``),
+so a cached plan is invalidated when the statistics its cost model
+consumed go stale — the winning plan may legitimately flip (e.g. P1 join
+→ P2 prefetch) after cardinalities shift — while an ``analyze()`` of an
+unrelated table leaves it hot.
 
 Entries are LRU-evicted beyond ``max_entries``; hit/miss/eviction counters
-feed ``CobraSession.telemetry``.
+feed ``CobraSession.telemetry``. The disk-backed, cross-session variant
+lives in ``repro.runtime.store.PlanStore`` and shares this key vocabulary.
 """
 
 from __future__ import annotations
@@ -18,7 +20,8 @@ import hashlib
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
-__all__ = ["PlanCache", "PlanCacheKey", "program_fingerprint"]
+__all__ = ["PlanCache", "PlanCacheKey", "program_fingerprint",
+           "program_tables", "query_tables"]
 
 
 def program_fingerprint(program) -> str:
@@ -32,12 +35,90 @@ def program_fingerprint(program) -> str:
     return hashlib.sha256(repr(structural).encode()).hexdigest()[:32]
 
 
+def query_tables(q) -> Tuple[str, ...]:
+    """All base tables a relational ``Query`` tree scans."""
+    from ..relational.algebra import Scan
+    out = set()
+
+    def walk(node):
+        if isinstance(node, Scan):
+            out.add(node.table)
+        for c in node.children():
+            walk(c)
+
+    walk(q)
+    return tuple(sorted(out))
+
+
+def program_tables(program) -> Tuple[str, ...]:
+    """All base tables a Program touches (queries, ORM navigations, cache
+    lookups, prefetches, updates). The plan-cache key carries the stats
+    versions of exactly these tables."""
+    from ..core.regions import (BasicBlock, CondRegion, ICacheLookup, ILoadAll,
+                                INav, IExpr, LoopRegion, Prefetch, SeqRegion,
+                                UpdateRow)
+    out = set()
+
+    def from_expr(e):
+        if not isinstance(e, IExpr):
+            return
+        if isinstance(e, ILoadAll):
+            out.add(e.table)
+            return
+        if isinstance(e, INav):
+            out.add(e.target)
+        if isinstance(e, ICacheLookup):
+            out.add(e.table)
+        q = getattr(e, "query", None)
+        if q is not None:
+            out.update(query_tables(q))
+        for attr in ("base", "left", "right", "keyexpr"):
+            k = getattr(e, attr, None)
+            if k is not None:
+                from_expr(k)
+        for a in getattr(e, "args", ()):
+            from_expr(a)
+        for _, b in getattr(e, "bindings", ()):
+            from_expr(b)
+
+    def from_stmt(s):
+        if isinstance(s, Prefetch):
+            out.update(query_tables(s.query))
+            return
+        if isinstance(s, UpdateRow):
+            out.add(s.table)
+        for attr in ("expr", "val", "keyexpr", "valexpr"):
+            e = getattr(s, attr, None)
+            if e is not None:
+                from_expr(e)
+
+    def walk(r):
+        if isinstance(r, BasicBlock):
+            from_stmt(r.stmt)
+        elif isinstance(r, SeqRegion):
+            for p in r.parts:
+                walk(p)
+        elif isinstance(r, LoopRegion):
+            from_expr(r.source)
+            walk(r.body)
+        elif isinstance(r, CondRegion):
+            from_expr(r.pred)
+            walk(r.then_r)
+            if r.else_r is not None:
+                walk(r.else_r)
+
+    walk(program.body)
+    return tuple(sorted(out))
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanCacheKey:
     program_fp: str
     catalog_key: Tuple
     config_key: Tuple
-    stats_version: int
+    # per-table stats token ((table, version), ...) for the tables the
+    # program touches; any hashable works (unit tests use plain ints)
+    stats_version: object
 
 
 class PlanCache:

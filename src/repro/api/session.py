@@ -22,6 +22,7 @@ alternatives considered, and memo statistics.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
@@ -29,7 +30,7 @@ from ..core.cost import CostCatalog
 from ..core.regions import Interpreter, Program
 from ..core.search import OptimizationResult, run_search
 from ..relational.database import ClientEnv, DatabaseServer, NetworkProfile, SLOW_REMOTE
-from .cache import PlanCache, PlanCacheKey, program_fingerprint
+from .cache import PlanCache, PlanCacheKey, program_fingerprint, program_tables
 from .config import OptimizerConfig
 
 __all__ = ["CobraSession", "Executable", "ExecutionResult", "PlanReport"]
@@ -132,6 +133,24 @@ class Executable:
         return self.session.execute(self.program, network=network, mode=mode,
                                     **params)
 
+    def run_batch(self, param_sets: Sequence[Mapping[str, object]], *,
+                  network: Optional[NetworkProfile] = None,
+                  mode: str = "fast"):
+        """Execute the optimized program over a BATCH of parameter bindings.
+
+        The whole batch shares one client environment: each query site is
+        fetched from the server once per batch (a shared site cache plus a
+        bulk navigation fetch in the vectorized interpreter), amortizing
+        C_NRT across invocations exactly like the paper's batching
+        transformation. Returns a :class:`repro.runtime.batch.BatchResult`
+        whose per-invocation outputs match per-invocation :meth:`run`
+        bit-for-bit. Programs containing updates fall back to sequential
+        isolated execution (sharing fetched state across invocations would
+        be unsound once the data mutates)."""
+        from ..runtime.batch import run_batch
+        return run_batch(self.session, self.program, param_sets,
+                         network=network, mode=mode, executable=self)
+
     def run_baseline(self, *, network: Optional[NetworkProfile] = None,
                      mode: str = "fast", **params) -> ExecutionResult:
         """Execute the ORIGINAL (unoptimized) program for comparison."""
@@ -149,11 +168,17 @@ class CobraSession:
     def __init__(self, db: DatabaseServer,
                  catalog: Optional[CostCatalog] = None,
                  config: Optional[OptimizerConfig] = None,
-                 plan_cache_entries: int = 256):
+                 plan_cache_entries: int = 256,
+                 plan_store=None):
         self.db = db
         self.catalog = catalog if catalog is not None else CostCatalog(SLOW_REMOTE)
         self.config = config if config is not None else OptimizerConfig()
         self.plan_cache = PlanCache(plan_cache_entries)
+        # optional disk-backed cross-session store (a PlanStore or a dir path)
+        if plan_store is not None:
+            from ..runtime.store import PlanStore
+            plan_store = PlanStore.coerce(plan_store)
+        self.plan_store = plan_store
         self._step_cache: Dict[Tuple, PlanReport] = {}
         # telemetry counters
         self.compile_calls = 0
@@ -173,11 +198,13 @@ class CobraSession:
                           config.topk, config.max_combos, config.max_rounds)
         else:
             config_key = config.cache_key()
+        # per-table stats versions of exactly the tables the program touches:
+        # an analyze() on an unrelated table leaves this plan's entry hot
         return PlanCacheKey(
             program_fp=program_fingerprint(program),
             catalog_key=self._catalog_key(catalog),
             config_key=config_key,
-            stats_version=self.db.stats_version)
+            stats_version=self.db.stats_token(program_tables(program)))
 
     # ---------------------------------------------------------- compilation
     def compile(self, program: Program, *,
@@ -198,6 +225,17 @@ class CobraSession:
             cached = self.plan_cache.get(key)
             if cached is not None:
                 return Executable(self, program, cached, from_cache=True)
+            if self.plan_store is not None:
+                # store validity is judged by statistics CONTENT, so a
+                # restarted process (version counters back at zero) still
+                # warm-starts from byte-equal stats
+                stats_fp = self.db.stats_fingerprint(program_tables(program))
+                stored = self.plan_store.get(key, stats_fp=stats_fp)
+                if stored is not None:
+                    # warmed from disk: promote into the in-memory LRU so
+                    # repeated compiles in this session stay O(1)
+                    self.plan_cache.put(key, stored)
+                    return Executable(self, program, stored, from_cache=True)
 
         rule_objs = list(rules) if rules is not None else cfg.resolve_rules()
         result = run_search(program, self.db, cat, choice=cfg.choice,
@@ -207,6 +245,10 @@ class CobraSession:
         self.memo_runs += 1
         if cfg.use_plan_cache:
             self.plan_cache.put(key, result)
+            if self.plan_store is not None:
+                self.plan_store.put(
+                    key, result,
+                    stats_fp=self.db.stats_fingerprint(program_tables(program)))
         return Executable(self, program, result, from_cache=False)
 
     # ------------------------------------------------------------ execution
@@ -243,7 +285,12 @@ class CobraSession:
             from ..models.arch import get_arch
             cfg = get_arch(arch)
         name = f"{getattr(cfg, 'name', arch)}/{kind}/T{seq_len}/B{global_batch}"
-        key = (name, tuple(mesh), top_k)
+        # the hardware profile is a memo-key component like the catalog is
+        # for program plans: an HW-table override (e.g. a different chip's
+        # peak FLOPs) must not be served a plan costed for the old hardware
+        from ..analysis.roofline import HW
+        hw_key = tuple(sorted(HW.items()))
+        key = (name, tuple(mesh), top_k, hw_key)
         cached = self._step_cache.get(key)
         if cached is not None:
             return cached
@@ -267,11 +314,53 @@ class CobraSession:
         self._step_cache[key] = report
         return report
 
+    # ------------------------------------------------------- tracing frontend
+    def trace(self, fn=None, *, name: Optional[str] = None):
+        """Decorator: turn a plain Python function into a compiled program.
+
+        The function receives a :class:`~repro.api.builder.ProgramBuilder`
+        as its first argument; every remaining parameter becomes a declared
+        program input (its Python default is the input default). Whatever
+        the function returns (a handle or tuple of handles) becomes the
+        program outputs. The decorated name binds to an :class:`Executable`
+        compiled by this session — plan-cache/store backed like any other
+        ``compile()``::
+
+            @session.trace
+            def hours(b, worklist=()):
+                out = b.let("out", b.empty_list())
+                with b.loop(worklist, var="wid") as wid:
+                    ...
+                return out
+
+            hours.run(worklist=[1, 2])
+        """
+        from .builder import ProgramBuilder
+
+        def decorate(f):
+            b = ProgramBuilder(name or f.__name__)
+            handles = []
+            params = list(inspect.signature(f).parameters.items())
+            for pname, p in params[1:]:
+                default = () if p.default is inspect.Parameter.empty else p.default
+                handles.append(b.input(pname, default))
+            out = f(b, *handles)
+            if out is None:
+                outputs: Tuple = ()
+            elif isinstance(out, (tuple, list)):
+                outputs = tuple(out)
+            else:
+                outputs = (out,)
+            return self.compile(b.build(outputs=outputs))
+
+        return decorate(fn) if fn is not None else decorate
+
     # ------------------------------------------------------------- telemetry
-    def analyze(self) -> int:
-        """Refresh table statistics (bumps the stats version, invalidating
-        cached plans); returns the new version."""
-        self.db.analyze()
+    def analyze(self, *tables: str) -> int:
+        """Refresh table statistics (bumps the named tables' stats versions,
+        or every table's when none are named, invalidating exactly the
+        cached plans that touch them); returns the new global version."""
+        self.db.analyze(*tables)
         return self.db.stats_version
 
     @property
@@ -281,4 +370,7 @@ class CobraSession:
              "executions": self.executions,
              "stats_version": self.db.stats_version}
         t.update({f"cache_{k}": v for k, v in self.plan_cache.stats().items()})
+        if self.plan_store is not None:
+            t.update({f"store_{k}": v
+                      for k, v in self.plan_store.stats().items()})
         return t

@@ -43,6 +43,7 @@ __all__ = [
     "FSelLookupE", "FCacheLookupE", "FCacheLookupAllE", "FQueryE", "FFoldE",
     "FSeqE", "FPrefetchE", "loop_to_fir", "FIRConversionError", "eval_fir",
     "fir_to_region", "fir_children", "fir_rebuild", "fir_map", "fold_to_loop",
+    "NameGen",
 ]
 
 
@@ -423,12 +424,14 @@ class FIRConversionError(Exception):
     pass
 
 
-_row_counter = [0]
+def _row_name_for(loop_var: str) -> str:
+    """Deterministic F-IR row name for a cursor loop.
 
-
-def _fresh_row_name() -> str:
-    _row_counter[0] += 1
-    return f"t{_row_counter[0]}"
+    Derived from the loop variable (unique within a lexical scope) instead of
+    a global counter, so converting the same program twice — in one process
+    or across sessions — yields byte-identical F-IR. Content-stable names are
+    what lets the disk-backed plan store dedupe compiled programs."""
+    return f"t_{loop_var}"
 
 
 def _iexpr_to_fir(e: IExpr, subst: Dict[str, FExpr], row_names: Dict[str, str]) -> FExpr:
@@ -507,7 +510,7 @@ def _source_to_fir(src: IExpr, subst, row_names) -> FExpr:
 def _convert_loop(loop: LoopRegion, subst: Dict[str, FExpr],
                   row_names: Dict[str, str]) -> FFoldE:
     source = _source_to_fir(loop.source, subst, row_names)
-    row_name = _fresh_row_name()
+    row_name = _row_name_for(loop.var)
     row_names = {**row_names, loop.var: row_name}
 
     parts = _body_parts(loop.body)
@@ -724,17 +727,33 @@ def eval_fir(e: FExpr, env, state: Mapping[str, object],
 # Code generation: F-IR → imperative regions
 # --------------------------------------------------------------------------
 
-_gensym_n = [0]
+class NameGen:
+    """Alpha-normalized codegen names.
+
+    One instance is created per code-generation run (``plan_to_region`` /
+    ``fir_to_region`` entry), numbering each prefix from 1 in tree-walk
+    order. Because the walk over a chosen plan is deterministic, two
+    searches of the same program — even in different processes — emit
+    byte-identical imperative IR, which lets the cross-session plan store
+    dedupe compiled programs (previously a global counter made every run's
+    gensyms unique and alpha-equivalence had to be normalized away in
+    tests)."""
+
+    def __init__(self):
+        self._n: Dict[str, int] = {}
+
+    def fresh(self, prefix: str = "tmp") -> str:
+        n = self._n.get(prefix, 0) + 1
+        self._n[prefix] = n
+        return f"__{prefix}{n}"
 
 
-def _gensym(prefix: str = "tmp") -> str:
-    _gensym_n[0] += 1
-    return f"__{prefix}{_gensym_n[0]}"
-
-
-def _val_to_iexpr(e: FExpr, row_vars: Dict[str, str], pre: List[Region]) -> IExpr:
+def _val_to_iexpr(e: FExpr, row_vars: Dict[str, str], pre: List[Region],
+                  names: Optional[NameGen] = None) -> IExpr:
     """Translate a value-producing F-IR expr to an imperative expr. `pre`
     collects statements (cache/nav lookups into temporaries)."""
+    if names is None:
+        names = NameGen()
     if isinstance(e, FConst):
         return IEmptyList() if e.value == () else IConst(e.value)
     if isinstance(e, FVarRef):
@@ -744,15 +763,16 @@ def _val_to_iexpr(e: FExpr, row_vars: Dict[str, str], pre: List[Region]) -> IExp
     if isinstance(e, FRow):
         return IVar(row_vars[e.name])
     if isinstance(e, FField):
-        return IField(_val_to_iexpr(e.base, row_vars, pre), e.col)
+        return IField(_val_to_iexpr(e.base, row_vars, pre, names), e.col)
     if isinstance(e, FBin):
-        return IBin(e.op, _val_to_iexpr(e.left, row_vars, pre),
-                    _val_to_iexpr(e.right, row_vars, pre))
+        return IBin(e.op, _val_to_iexpr(e.left, row_vars, pre, names),
+                    _val_to_iexpr(e.right, row_vars, pre, names))
     if isinstance(e, FCall):
-        return ICall(e.func, tuple(_val_to_iexpr(a, row_vars, pre) for a in e.args))
+        return ICall(e.func, tuple(_val_to_iexpr(a, row_vars, pre, names)
+                                   for a in e.args))
     if isinstance(e, FPointLookup):
-        tmp = _gensym("nav")
-        base_key = _val_to_iexpr(e.keyexpr, row_vars, pre)
+        tmp = names.fresh("nav")
+        base_key = _val_to_iexpr(e.keyexpr, row_vars, pre, names)
         if isinstance(base_key, IField) and isinstance(base_key.base, IVar):
             pre.append(BasicBlock(Assign(tmp, INav(base_key.base, base_key.field,
                                                    e.table, e.key_col))))
@@ -762,37 +782,41 @@ def _val_to_iexpr(e: FExpr, row_vars: Dict[str, str], pre: List[Region]) -> IExp
                 (("k", base_key),)))))
         return IVar(tmp)
     if isinstance(e, FCacheLookupE):
-        tmp = _gensym("lkp")
+        tmp = names.fresh("lkp")
         pre.append(BasicBlock(Assign(tmp, ICacheLookup(
-            e.table, e.key_col, _val_to_iexpr(e.keyexpr, row_vars, pre)))))
+            e.table, e.key_col, _val_to_iexpr(e.keyexpr, row_vars, pre, names)))))
         return IVar(tmp)
     if isinstance(e, FQueryE):
         return IQuery(e.query)
     raise TypeError(f"cannot codegen value {e!r}")
 
 
-def _source_to_iexpr(src: FExpr, row_vars: Dict[str, str], pre: List[Region]) -> IExpr:
+def _source_to_iexpr(src: FExpr, row_vars: Dict[str, str], pre: List[Region],
+                     names: NameGen) -> IExpr:
     if isinstance(src, FQueryE):
         return IQuery(src.query)
     if isinstance(src, FSelLookupE):
-        key = _val_to_iexpr(src.keyexpr, row_vars, pre)
+        key = _val_to_iexpr(src.keyexpr, row_vars, pre, names)
         return IQuery(Select(Cmp("==", Col(src.key_col), Param("k")), Scan(src.table)),
                       (("k", key),))
     if isinstance(src, FCacheLookupAllE):
-        key = _val_to_iexpr(src.keyexpr, row_vars, pre)
+        key = _val_to_iexpr(src.keyexpr, row_vars, pre, names)
         return ICacheLookup(src.table, src.key_col, key, all_matches=True)
     raise TypeError(f"cannot codegen source {src!r}")
 
 
 def fold_to_loop(fold: FFoldE, slots: Optional[Sequence[int]] = None,
-                 row_vars: Optional[Dict[str, str]] = None) -> Region:
+                 row_vars: Optional[Dict[str, str]] = None,
+                 names: Optional[NameGen] = None) -> Region:
     """Generate a loop for (a subset of slots of) a fold.
 
     ``slots=None`` keeps all slots. A kept slot that references another
     accumulator transitively forces that slot to stay (dependency closure)."""
     assert isinstance(fold.func, FTupleE)
+    if names is None:
+        names = NameGen()
     row_vars = dict(row_vars or {})
-    loop_var = _gensym("r")
+    loop_var = names.fresh("r")
     row_vars[fold.row_name] = loop_var
 
     keep = set(range(len(fold.acc_names))) if slots is None else set(slots)
@@ -809,11 +833,12 @@ def fold_to_loop(fold: FFoldE, slots: Optional[Sequence[int]] = None,
                     changed = True
 
     pre_src: List[Region] = []
-    src_expr = _source_to_iexpr(fold.source, row_vars, pre_src)
+    src_expr = _source_to_iexpr(fold.source, row_vars, pre_src, names)
 
     body: List[Region] = []
     for i in sorted(keep):
-        body.extend(_update_to_parts(fold.func.items[i], fold.acc_names[i], row_vars))
+        body.extend(_update_to_parts(fold.func.items[i], fold.acc_names[i],
+                                     row_vars, names))
     inner: Region = SeqRegion(tuple(body)) if len(body) != 1 else body[0]
     loop = LoopRegion(loop_var, src_expr, inner)
     if pre_src:
@@ -821,40 +846,44 @@ def fold_to_loop(fold: FFoldE, slots: Optional[Sequence[int]] = None,
     return loop
 
 
-def _update_to_parts(upd: FExpr, name: str, row_vars: Dict[str, str]) -> List[Region]:
+def _update_to_parts(upd: FExpr, name: str, row_vars: Dict[str, str],
+                     names: NameGen) -> List[Region]:
     pre: List[Region] = []
     if isinstance(upd, FCondE):
-        pred = _val_to_iexpr(upd.pred, row_vars, pre)
-        inner = _update_to_parts(upd.then, name, row_vars)
+        pred = _val_to_iexpr(upd.pred, row_vars, pre, names)
+        inner = _update_to_parts(upd.then, name, row_vars, names)
         body: Region = SeqRegion(tuple(inner)) if len(inner) != 1 else inner[0]
         return pre + [CondRegion(pred, body)]
     if isinstance(upd, FFoldE):
         # nested fold accumulating into `name`
         assert upd.acc_names == (name,)
-        return pre + [fold_to_loop(upd, row_vars=row_vars)]
+        return pre + [fold_to_loop(upd, row_vars=row_vars, names=names)]
     if isinstance(upd, FProjectE) and isinstance(upd.base, FFoldE):
-        return _update_to_parts(upd.base, name, row_vars)
+        return _update_to_parts(upd.base, name, row_vars, names)
     if isinstance(upd, FInsert):
-        val = _val_to_iexpr(upd.val, row_vars, pre)
+        val = _val_to_iexpr(upd.val, row_vars, pre, names)
         return pre + [BasicBlock(CollectionAdd(name, val))]
     if isinstance(upd, FMapPutE):
-        k = _val_to_iexpr(upd.mkey, row_vars, pre)
-        v = _val_to_iexpr(upd.val, row_vars, pre)
+        k = _val_to_iexpr(upd.mkey, row_vars, pre, names)
+        v = _val_to_iexpr(upd.val, row_vars, pre, names)
         return pre + [BasicBlock(MapPut(name, k, v))]
-    val = _val_to_iexpr(upd, row_vars, pre)
+    val = _val_to_iexpr(upd, row_vars, pre, names)
     return pre + [BasicBlock(Assign(name, val))]
 
 
-def fir_to_region(e: FExpr, slots: Optional[Sequence[int]] = None) -> Region:
+def fir_to_region(e: FExpr, slots: Optional[Sequence[int]] = None,
+                  names: Optional[NameGen] = None) -> Region:
     """Generate an imperative region computing `e` (a fold/seq alternative)."""
+    if names is None:
+        names = NameGen()
     if isinstance(e, FSeqE):
         parts: List[Region] = []
         for p in e.parts[:-1]:
-            parts.append(fir_to_region(p))
-        parts.append(fir_to_region(e.parts[-1], slots))
+            parts.append(fir_to_region(p, names=names))
+        parts.append(fir_to_region(e.parts[-1], slots, names=names))
         return SeqRegion(tuple(parts))
     if isinstance(e, FPrefetchE):
         return BasicBlock(Prefetch(e.query, e.col))
     if isinstance(e, FFoldE):
-        return fold_to_loop(e, slots)
+        return fold_to_loop(e, slots, names=names)
     raise TypeError(f"cannot codegen region for {e!r}")

@@ -27,7 +27,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..relational.algebra import Query, Scan
 from .cost import CostCatalog, CostModel
 from .dag import AndNode, Memo, expand
-from .fir import (FExpr, FFoldE, FPrefetchE, FSeqE, fir_to_region, fold_to_loop)
+from .fir import (FExpr, FFoldE, FPrefetchE, FSeqE, NameGen, fir_to_region,
+                  fold_to_loop)
 from .regions import (Assign, BasicBlock, CondRegion, IBin, IQuery,
                       IQueryValues, IScalarQuery, IVar, LoopRegion, Program,
                       Region, SeqRegion)
@@ -223,30 +224,36 @@ def _sql_push_score(p: Plan) -> int:
 # Code generation from a chosen plan
 # --------------------------------------------------------------------------
 
-def plan_to_region(plan: Plan, emitted_prefetch: Optional[set] = None) -> Region:
+def plan_to_region(plan: Plan, emitted_prefetch: Optional[set] = None,
+                   names: Optional[NameGen] = None) -> Region:
     if emitted_prefetch is None:
         emitted_prefetch = set()
+    if names is None:
+        # one alpha-normalized name source per codegen run: identical plans
+        # emit byte-identical IR (see fir.NameGen)
+        names = NameGen()
     if plan.op == "block":
         return BasicBlock(plan.payload)
     if plan.op == "seq":
-        return SeqRegion(tuple(plan_to_region(c, emitted_prefetch)
+        return SeqRegion(tuple(plan_to_region(c, emitted_prefetch, names)
                                for c in plan.children))
     if plan.op == "cond":
         pred = plan.payload
-        then = plan_to_region(plan.children[0], emitted_prefetch)
-        els = plan_to_region(plan.children[1], emitted_prefetch) \
+        then = plan_to_region(plan.children[0], emitted_prefetch, names)
+        els = plan_to_region(plan.children[1], emitted_prefetch, names) \
             if len(plan.children) > 1 else None
         return CondRegion(pred, then, els)
     if plan.op == "loop":
         var, source = plan.payload
         return LoopRegion(var, source, plan_to_region(plan.children[0],
-                                                      emitted_prefetch))
+                                                      emitted_prefetch, names))
     if plan.op == "assemble":
-        return _assemble_to_region(plan, emitted_prefetch)
+        return _assemble_to_region(plan, emitted_prefetch, names)
     raise TypeError(f"cannot codegen {plan.op}")
 
 
-def _assemble_to_region(plan: Plan, emitted_prefetch: set) -> Region:
+def _assemble_to_region(plan: Plan, emitted_prefetch: set,
+                        names: NameGen) -> Region:
     from .regions import Prefetch
 
     parts: List[Region] = []
@@ -278,7 +285,7 @@ def _assemble_to_region(plan: Plan, emitted_prefetch: set) -> Region:
                 if key not in emitted_prefetch:
                     emitted_prefetch.add(key)
                     parts.append(BasicBlock(Prefetch(p.query, p.col)))
-        region = fold_to_loop(fold, slots=slots)
+        region = fold_to_loop(fold, slots=slots, names=names)
         loops.append(region)
         covered.update(_loop_assigned_vars(region))
 
@@ -290,7 +297,7 @@ def _assemble_to_region(plan: Plan, emitted_prefetch: set) -> Region:
             bindings = ()
             if binding is not None:
                 from .fir import _val_to_iexpr
-                bindings = (("k", _val_to_iexpr(binding, {}, [])),)
+                bindings = (("k", _val_to_iexpr(binding, {}, [], names)),)
             parts.append(BasicBlock(Assign(
                 var, IBin(op, IVar(var), IScalarQuery(q, col, bindings)))))
         else:

@@ -291,10 +291,19 @@ def _vec_nav(env, ce: _ColEnv, target: str, e: INav, n: int) -> None:
     n_hits = n - n_misses
     env.charge_statement(n_hits)
     m = env.db.model
-    for _ in range(n_misses):
-        env._charge_query(1, t.row_bytes,
-                          m.startup_s + m.index_lookup_s,
-                          m.startup_s + m.index_lookup_s + 1 / m.emit_rows_per_s)
+    # A batching client env (runtime.batch.BatchClientEnv) combines all
+    # missing keys into ONE bulk fetch — a single round trip per navigation
+    # site instead of one per distinct key, amortizing C_NRT exactly like the
+    # paper's batching transformation. The plain serving path keeps the
+    # faithful N+1 accounting.
+    bulk = getattr(env, "bulk_nav_charge", None)
+    if bulk is not None and n_misses:
+        bulk(t, n_misses)
+    else:
+        for _ in range(n_misses):
+            env._charge_query(1, t.row_bytes,
+                              m.startup_s + m.index_lookup_s,
+                              m.startup_s + m.index_lookup_s + 1 / m.emit_rows_per_s)
     if env.orm_cache_enabled and n_misses:
         tk_order = np.searchsorted(tkeys[order], np.asarray(new_keys))
         rows_idx = order[tk_order]

@@ -116,15 +116,26 @@ class DatabaseServer:
         self.model = model
         self._stats: Dict[str, TableStats] = {}
         self._stats_version = 0
+        self._table_versions: Dict[str, int] = {}
         self.analyze()
 
     def table(self, name: str) -> Table:
         return self.tables[name]
 
     def add_table(self, t: Table) -> None:
+        """Install (or replace) a table AND refresh its statistics."""
         self.tables[t.name] = t
         self._stats[t.name] = self._compute_stats(t)
         self._stats_version += 1
+        self._table_versions[t.name] = self._table_versions.get(t.name, 0) + 1
+
+    def replace_table(self, t: Table) -> None:
+        """Replace a table's DATA without refreshing statistics — like a bulk
+        load on a real server before anyone runs ANALYZE. Estimates go stale
+        (``estimate()`` keeps consulting the old stats) while ``run()`` sees
+        the new rows; the serving runtime's feedback controller exists to
+        detect exactly this drift and trigger a re-analyze."""
+        self.tables[t.name] = t
 
     # ----------------------------------------------------------- statistics
     @property
@@ -134,9 +145,41 @@ class DatabaseServer:
         replacement) bumps it; plan caches key on it for invalidation."""
         return self._stats_version
 
-    def analyze(self) -> int:
-        for name, t in self.tables.items():
-            self._stats[name] = self._compute_stats(t)
+    def table_version(self, name: str) -> int:
+        """Per-table stats version. Plan caches key compiled programs on the
+        versions of only the tables they touch, so refreshing an unrelated
+        table's statistics leaves those plans hot."""
+        return self._table_versions.get(name, 0)
+
+    def stats_token(self, tables) -> Tuple[Tuple[str, int], ...]:
+        """Cache-key component: (table, stats version) for each named table."""
+        return tuple((t, self.table_version(t)) for t in sorted(set(tables)))
+
+    def stats_fingerprint(self, tables) -> Tuple[Tuple[str, str], ...]:
+        """CONTENT hash of the named tables' current statistics.
+
+        Version counters are process-local (a restarted server re-analyzes
+        from zero), so the cross-session plan store compares this instead:
+        a stored plan stays warm across restarts as long as the statistics
+        it was costed on are byte-equal, regardless of how many ``analyze()``
+        calls either process has issued."""
+        import hashlib
+        out = []
+        for t in sorted(set(tables)):
+            st = self._stats.get(t)
+            digest = ("missing" if st is None else
+                      hashlib.sha256(repr(st).encode()).hexdigest()[:16])
+            out.append((t, digest))
+        return tuple(out)
+
+    def analyze(self, *tables: str) -> int:
+        """Refresh table statistics. With no arguments every table is
+        re-analyzed (the legacy behaviour); naming tables refreshes only
+        those, bumping only their per-table versions."""
+        names = tables or tuple(self.tables)
+        for name in names:
+            self._stats[name] = self._compute_stats(self.tables[name])
+            self._table_versions[name] = self._table_versions.get(name, 0) + 1
         self._stats_version += 1
         return self._stats_version
 

@@ -1,0 +1,30 @@
+"""Serving runtime: batched execution, persistent plans, feedback re-planning.
+
+The subsystem that fronts :class:`~repro.api.session.CobraSession` for
+production-shaped workloads:
+
+  * :mod:`repro.runtime.batch` — ``run_batch`` / ``BatchClientEnv``: one
+    server round trip per query site per batch of parameter bindings
+    (``C_NRT`` amortization, the paper's batching transformation applied at
+    the serving layer);
+  * :mod:`repro.runtime.store` — ``PlanStore``: disk-backed,
+    content-addressed plan cache shared across sessions/processes;
+  * :mod:`repro.runtime.feedback` — ``FeedbackController``: observed-vs-
+    estimated cardinality drift triggers per-table re-analyze + recompile;
+  * :mod:`repro.runtime.serving` — ``ServingRuntime`` / ``serve()``: the
+    request loop wiring the three together.
+
+See ``examples/serve_programs.py`` for the end-to-end walkthrough and
+``benchmarks/bench_runtime.py`` for the batch-size/throughput crossover.
+"""
+
+from .batch import BatchClientEnv, BatchResult, program_has_updates, run_batch
+from .feedback import DriftEvent, FeedbackController
+from .serving import ServingRuntime, serve
+from .store import PlanStore
+
+__all__ = [
+    "BatchClientEnv", "BatchResult", "run_batch", "program_has_updates",
+    "PlanStore", "DriftEvent", "FeedbackController",
+    "ServingRuntime", "serve",
+]

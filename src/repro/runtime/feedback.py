@@ -1,0 +1,106 @@
+"""Feedback-driven re-optimization: close the loop from observed runtimes
+back into the cost model.
+
+Cobra's premise is that the best rewrite depends on runtime parameters —
+and those drift. A plan compiled when ``orders`` had 100 rows keeps being
+served long after a bulk load grew it to 4000, because the optimizer only
+ever consults table *statistics*, not the data. The controller watches the
+serving path's true executions (``DatabaseServer.run()`` cardinalities and
+wall-clock, logged by :class:`~repro.runtime.batch.BatchClientEnv`),
+compares each against ``DatabaseServer.estimate()`` — the same numbers the
+cost model consumed at compile time — and, when the ratio exceeds a
+configurable threshold, re-analyzes exactly the drifted tables. Per-table
+stats versions then invalidate exactly the plans that touch those tables;
+everything else stays hot. The serving runtime recompiles the affected
+executables, and the memo search may pick a different winner (e.g. P1 join
+→ P2 prefetch) under the fresh statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from ..api.cache import query_tables
+
+__all__ = ["DriftEvent", "FeedbackController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One query site whose observed cardinality left the trusted band."""
+
+    sql: str
+    tables: Tuple[str, ...]
+    est_rows: float
+    observed_rows: float
+    ratio: float
+
+    def describe(self) -> str:
+        return (f"{self.sql!r}: est {self.est_rows:.0f} rows, observed "
+                f"{self.observed_rows:.0f} ({self.ratio:.1f}x drift) "
+                f"-> tables {list(self.tables)}")
+
+
+class FeedbackController:
+    """Observes served executions; decides when statistics must be refreshed."""
+
+    def __init__(self, session, drift_threshold: float = 3.0):
+        if drift_threshold <= 1.0:
+            raise ValueError("drift_threshold must be > 1 (a ratio)")
+        self.session = session
+        self.drift_threshold = drift_threshold
+        self.events: List[DriftEvent] = []
+        self.refreshes = 0
+        self.observed_queries = 0
+        self.observed_wall_s = 0.0
+        # per-site aggregates: sql -> [count, total rows, total wall-clock]
+        self._sites: Dict[str, List[float]] = {}
+
+    # ------------------------------------------------------------- observing
+    def observe(self, observations: Sequence[Tuple[object, int, float]]
+                ) -> List[str]:
+        """Compare observed (query, rows, wall_s) against current estimates;
+        return the sorted list of tables whose estimates have drifted."""
+        db = self.session.db
+        drifted = set()
+        for q, n_rows, wall_s in observations:
+            self.observed_queries += 1
+            self.observed_wall_s += wall_s or 0.0
+            sql = q.sql()
+            agg = self._sites.setdefault(sql, [0, 0.0, 0.0])
+            agg[0] += 1
+            agg[1] += n_rows
+            agg[2] += wall_s or 0.0
+            est = db.estimate(q).n_rows
+            # +1 smoothing keeps empty results from dividing by zero while
+            # still flagging est≈0 vs observed≫0
+            ratio = max((n_rows + 1.0) / (est + 1.0), (est + 1.0) / (n_rows + 1.0))
+            if ratio > self.drift_threshold:
+                tables = query_tables(q)
+                drifted.update(tables)
+                self.events.append(DriftEvent(
+                    sql=sql, tables=tables, est_rows=est,
+                    observed_rows=float(n_rows), ratio=float(ratio)))
+        return sorted(drifted)
+
+    # -------------------------------------------------------------- reacting
+    def refresh(self, tables: Sequence[str]) -> None:
+        """Re-analyze the drifted tables only: their stats versions bump, so
+        exactly the plans touching them fall out of the caches."""
+        if not tables:
+            return
+        self.session.db.analyze(*tables)
+        self.refreshes += 1
+
+    # ------------------------------------------------------------- telemetry
+    def telemetry(self) -> Dict[str, object]:
+        return {
+            "observed_queries": self.observed_queries,
+            "observed_wall_s": self.observed_wall_s,
+            "drift_events": len(self.events),
+            "stats_refreshes": self.refreshes,
+            "sites": {sql: {"n": int(n), "avg_rows": rows / max(n, 1),
+                            "wall_s": wall}
+                      for sql, (n, rows, wall) in self._sites.items()},
+        }

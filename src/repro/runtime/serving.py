@@ -1,0 +1,146 @@
+"""The serving request loop: batch, execute, observe, re-optimize.
+
+``ServingRuntime`` fronts a :class:`~repro.api.session.CobraSession` for
+high-throughput workloads::
+
+    rt = ServingRuntime(session, store="plans/", batch_size=32)
+    rt.register(make_p0())
+    responses = rt.serve([("P0", {}), ("P0", {}), ("W_E", {"worklist": [1]})])
+
+Request processing per cycle:
+
+  1. requests are grouped by program and chunked into batches of at most
+     ``batch_size``;
+  2. each batch executes through :func:`repro.runtime.batch.run_batch` —
+     one server round trip per query site per batch;
+  3. the batch's observation log feeds the
+     :class:`~repro.runtime.feedback.FeedbackController`; if observed
+     cardinalities drifted past the threshold, the drifted tables are
+     re-analyzed (per-table stats versions bump) and every registered
+     program touching them is recompiled before the next batch — the memo
+     search may pick a different winner under the fresh statistics;
+  4. responses are returned in the original request order.
+
+The module-level :func:`serve` is the one-call convenience wrapper used by
+``examples/serve_programs.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from ..api.cache import program_tables
+from ..core.regions import Program
+from .feedback import FeedbackController
+
+__all__ = ["ServingRuntime", "serve"]
+
+
+class ServingRuntime:
+    def __init__(self, session, *, store=None, batch_size: int = 16,
+                 drift_threshold: float = 3.0, feedback: bool = True):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.session = session
+        if store is not None:
+            from .store import PlanStore
+            session.plan_store = PlanStore.coerce(store)
+        self.batch_size = batch_size
+        self.feedback: Optional[FeedbackController] = (
+            FeedbackController(session, drift_threshold) if feedback else None)
+        self._programs: Dict[str, Program] = {}
+        self._executables: Dict[str, object] = {}
+        # telemetry
+        self.requests_served = 0
+        self.batches_run = 0
+        self.recompiles = 0
+        self.simulated_s = 0.0
+        self.n_round_trips = 0
+
+    # ---------------------------------------------------------- registration
+    def register(self, program: Program, name: Optional[str] = None):
+        """Register (and compile) a program for serving; returns its
+        Executable. Compilation goes through the session, so the plan
+        cache/store make repeated registration cheap."""
+        name = name or program.name
+        self._programs[name] = program
+        self._executables[name] = self.session.compile(program)
+        return self._executables[name]
+
+    def executable(self, name: str):
+        exe = self._executables.get(name)
+        if exe is None:
+            raise KeyError(f"no program registered as {name!r}; "
+                           f"known: {sorted(self._programs)}")
+        return exe
+
+    # --------------------------------------------------------------- serving
+    def serve(self, requests: Iterable[Tuple[str, Mapping[str, object]]]
+              ) -> List[object]:
+        """Process a request stream; returns one ExecutionResult per request,
+        in request order."""
+        todo = list(requests)
+        responses: List[Optional[object]] = [None] * len(todo)
+        # group by program, preserving each request's original position
+        by_program: Dict[str, List[int]] = {}
+        for i, (name, _params) in enumerate(todo):
+            self.executable(name)  # fail fast on unknown programs
+            by_program.setdefault(name, []).append(i)
+
+        for name, indices in by_program.items():
+            for lo in range(0, len(indices), self.batch_size):
+                chunk = indices[lo:lo + self.batch_size]
+                exe = self._executables[name]
+                batch = exe.run_batch([todo[i][1] for i in chunk])
+                for i, result in zip(chunk, batch.results):
+                    responses[i] = result
+                self.requests_served += len(chunk)
+                self.batches_run += 1
+                self.simulated_s += batch.simulated_s
+                self.n_round_trips += batch.n_round_trips
+                self._after_batch(batch)
+        return responses
+
+    def _after_batch(self, batch) -> None:
+        if self.feedback is None or not batch.observations:
+            return
+        drifted = self.feedback.observe(batch.observations)
+        if not drifted:
+            return
+        self.feedback.refresh(drifted)
+        self._recompile_touching(drifted)
+
+    def _recompile_touching(self, tables: Sequence[str]) -> None:
+        """Recompile registered programs whose table set intersects
+        ``tables``; per-table stats versions keep the others' plans hot."""
+        drifted = set(tables)
+        for name, program in self._programs.items():
+            if drifted & set(program_tables(program)):
+                self._executables[name] = self.session.compile(program)
+                self.recompiles += 1
+
+    # ------------------------------------------------------------- telemetry
+    def telemetry(self) -> Dict[str, object]:
+        t = {"requests_served": self.requests_served,
+             "batches_run": self.batches_run,
+             "recompiles": self.recompiles,
+             "simulated_s": self.simulated_s,
+             "round_trips": self.n_round_trips,
+             "programs": sorted(self._programs)}
+        t.update({f"session_{k}": v for k, v in self.session.telemetry.items()})
+        if self.feedback is not None:
+            fb = self.feedback.telemetry()
+            fb.pop("sites", None)  # keep the summary flat
+            t.update({f"feedback_{k}": v for k, v in fb.items()})
+        return t
+
+
+def serve(session, programs: Sequence[Program],
+          requests: Iterable[Tuple[str, Mapping[str, object]]],
+          **runtime_kw) -> Tuple[List[object], ServingRuntime]:
+    """One-call serving loop: register ``programs``, process ``requests``,
+    return (responses, runtime) so callers can inspect telemetry."""
+    rt = ServingRuntime(session, **runtime_kw)
+    for p in programs:
+        rt.register(p)
+    return rt.serve(requests), rt

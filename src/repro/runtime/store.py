@@ -1,0 +1,171 @@
+"""Disk-backed, content-addressed plan store: reuse plans ACROSS sessions.
+
+The in-memory :class:`repro.api.cache.PlanCache` dies with its session; a
+serving deployment re-pays the memo search on every process start. The
+``PlanStore`` persists compiled :class:`~repro.core.search.OptimizationResult`
+objects under a directory, addressed by the same content-stable key
+vocabulary the in-memory cache uses:
+
+  * **logical key** — SHA-256 of (program fingerprint, cost-catalog key,
+    optimizer-config key). One file per logical key: a new compilation of
+    the same program under fresh statistics supersedes the stale entry.
+  * **stats fingerprint** — a CONTENT hash of the per-table statistics the
+    plan was costed against, stored WITH the entry. A lookup whose
+    fingerprint differs is a *stale* hit (counted separately from cold
+    misses): the data moved, the plan must be recompiled. Content hashes —
+    not the in-memory cache's process-local version counters — are what let
+    a restarted server (whose counters reset) still warm-start from the
+    store when its statistics are byte-equal.
+
+Entries are pickled (plans embed Region/F-IR/Query trees); a human-readable
+``index.json`` sidecar carries per-entry metadata (fingerprint, estimated
+cost, stats token) for inspection and the example scripts. Writes are
+atomic (tempfile + ``os.replace``) so concurrent sessions sharing a store
+directory never observe torn entries.
+
+Codegen alpha-normalization (``core.fir.NameGen``) is what makes this
+dedupe possible: two sessions compiling the same program emit byte-identical
+IR, so the stored artifact is canonical rather than run-specific.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import tempfile
+from typing import Dict, Optional
+
+__all__ = ["PlanStore"]
+
+_FORMAT_VERSION = 1
+
+
+class PlanStore:
+    """A directory of compiled plans shared by many sessions."""
+
+    def __init__(self, root: str):
+        self.root = os.fspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.stale = 0
+        self.puts = 0
+        self.errors = 0
+
+    # ----------------------------------------------------------- addressing
+    @staticmethod
+    def logical_key(key) -> str:
+        """Content hash of the plan's identity minus its stats token."""
+        ident = (key.program_fp, key.catalog_key, key.config_key)
+        return hashlib.sha256(repr(ident).encode()).hexdigest()[:32]
+
+    def _path(self, lk: str) -> str:
+        return os.path.join(self.root, f"{lk}.plan")
+
+    @classmethod
+    def coerce(cls, store) -> "PlanStore":
+        """Accept a PlanStore instance or a directory path (the shared
+        coercion used by CobraSession and ServingRuntime)."""
+        return store if isinstance(store, cls) else cls(store)
+
+    # -------------------------------------------------------------- get/put
+    def get(self, key, stats_fp=None) -> Optional[object]:
+        """Return the stored OptimizationResult for ``key``, or None.
+
+        ``stats_fp`` is the content fingerprint of the caller's CURRENT
+        statistics for the plan's tables; when provided, entry validity is
+        judged by it (restart-stable). Without it, the key's version token
+        is compared instead. Misses distinguish *cold* (no entry for the
+        program at all) from *stale* (an entry exists but was compiled
+        against different table statistics)."""
+        path = self._path(self.logical_key(key))
+        if not os.path.exists(path):
+            self.misses += 1
+            return None
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+        except Exception:
+            self.errors += 1
+            return None
+        if payload.get("format") != _FORMAT_VERSION:
+            self.errors += 1
+            return None
+        if stats_fp is not None:
+            valid = payload.get("stats_fp") == stats_fp
+        else:
+            valid = payload["stats_token"] == key.stats_version
+        if not valid:
+            self.stale += 1
+            return None
+        self.hits += 1
+        return payload["result"]
+
+    def put(self, key, result, stats_fp=None) -> None:
+        lk = self.logical_key(key)
+        payload = {
+            "format": _FORMAT_VERSION,
+            "program_fp": key.program_fp,
+            "stats_token": key.stats_version,
+            "stats_fp": stats_fp,
+            "result": result,
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, self._path(lk))
+        except Exception:
+            self.errors += 1
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            return
+        self.puts += 1
+        try:
+            # best-effort metadata sidecar: concurrent writers may lose an
+            # index record to the read-modify-write race, but never a plan —
+            # entry validity comes from the .plan payload alone
+            self._index_add(lk, key, result)
+        except Exception:
+            self.errors += 1
+
+    # ----------------------------------------------------------- inspection
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "index.json")
+
+    def _index_add(self, lk: str, key, result) -> None:
+        index = self.index()
+        index[lk] = {
+            "program_fp": key.program_fp,
+            "stats_token": [list(tv) for tv in key.stats_version]
+            if isinstance(key.stats_version, tuple) else key.stats_version,
+            "est_cost_s": float(getattr(result, "est_cost", 0.0)),
+            "program": getattr(getattr(result, "program", None), "name", "?"),
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(index, f, indent=1, sort_keys=True)
+        os.replace(tmp, self._index_path())
+
+    def index(self) -> Dict[str, Dict]:
+        try:
+            with open(self._index_path()) as f:
+                return json.load(f)
+        except Exception:
+            return {}
+
+    def __len__(self) -> int:
+        return sum(1 for n in os.listdir(self.root) if n.endswith(".plan"))
+
+    def clear(self) -> None:
+        for n in os.listdir(self.root):
+            if n.endswith(".plan") or n == "index.json":
+                os.unlink(os.path.join(self.root, n))
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self), "hits": self.hits,
+                "misses": self.misses, "stale": self.stale,
+                "puts": self.puts, "errors": self.errors}

@@ -182,15 +182,10 @@ class TestSessionEndToEnd:
                                config=OptimizerConfig.preset("paper-exp1-3"))
         exe = session.compile(make_p0())
         assert expect in repr(exe.program.body)
-        # same chosen plan and simulated cost as the legacy entry point
-        # (codegen gensym counters differ between runs -> compare
-        # alpha-normalized structure)
-        import re
-
-        def normalized(p):
-            return re.sub(r"__[a-z]+\d+", "__g", repr(p.body.key()))
-
-        assert normalized(exe.program) == normalized(legacy.program)
+        # same chosen plan and simulated cost as the legacy entry point —
+        # codegen names are alpha-normalized per run, so two searches of the
+        # same program emit byte-identical IR
+        assert exe.program.body.key() == legacy.program.body.key()
         assert exe.est_cost_s == pytest.approx(legacy.est_cost)
 
     def test_run_is_semantics_preserving_and_faster(self):
@@ -243,6 +238,80 @@ class TestSessionEndToEnd:
         assert rep.alternatives >= 1 and rep.est_cost_s > 0
         assert "P0" in rep.describe()
 
+    def test_codegen_alpha_normalized_across_sessions(self):
+        """Two independent sessions compiling the same program emit
+        byte-identical rewritten IR (content-stable codegen names) — the
+        property the cross-session plan store's dedupe rests on."""
+        exes = []
+        for _ in range(2):
+            db = make_orders_customer_db(4000, 500)
+            session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                                   config=OptimizerConfig.preset("paper-exp1-3"))
+            exes.append(session.compile(make_p0()))
+        assert exes[0].program.body.key() == exes[1].program.body.key()
+
+
+# --------------------------------------------------------------------------
+# session.trace() decorator
+# --------------------------------------------------------------------------
+
+class TestTraceDecorator:
+    def _session(self):
+        return CobraSession(make_wilos_db(300, ratio=10),
+                            CostCatalog(FAST_LOCAL))
+
+    def test_trace_turns_function_into_executable(self):
+        session = self._session()
+
+        @session.trace
+        def task_hours(b, worklist=()):
+            out = b.let("out", b.empty_list())
+            with b.loop(worklist, var="wid") as wid:
+                per_key = q("tasks").where(col("t_role_id").eq(param("rid"))) \
+                                    .bind(rid=wid)
+                with b.loop(per_key, var="y") as y:
+                    b.add(out, y.t_hours)
+            return out
+
+        assert isinstance(task_hours, Executable)
+        # the traced program matches the hand-built equivalent (make_wilos_e)
+        from repro.api import program_fingerprint
+        src = task_hours.source
+        assert src.inputs == (("worklist", ()),)
+        r1 = task_hours.run(worklist=[1, 3])
+        r2 = session.compile(make_wilos_e()).run(worklist=[1, 3])
+        assert sorted(r1["out"]) == sorted(r2["result"])
+
+    def test_trace_with_name_and_multiple_outputs(self):
+        session = self._session()
+
+        @session.trace(name="two_aggs")
+        def f(b):
+            n = b.let("n", 0)
+            hours = b.let("hours", 0.0)
+            with b.loop(b.load_all("tasks"), var="t") as t:
+                b.let("n", n + 1)
+                b.let("hours", hours + t.t_hours)
+            return n, hours
+
+        assert f.source.name == "two_aggs"
+        out = f.run()
+        assert out["n"] == session.db.table("tasks").nrows
+        assert out["hours"] > 0
+
+    def test_trace_hits_plan_cache(self):
+        session = self._session()
+
+        def body(b):
+            total = b.let("total", 0.0)
+            with b.loop(b.load_all("tasks"), var="t") as t:
+                b.let("total", total + t.t_hours)
+            return total
+
+        exe1 = session.trace(body, name="agg")
+        exe2 = session.trace(body, name="agg")
+        assert not exe1.from_cache and exe2.from_cache
+
 
 # --------------------------------------------------------------------------
 # Distributed-planner facade (shared vocabulary)
@@ -259,6 +328,24 @@ class TestPlannerFacade:
         assert rep.choice == raw["choice"]
         assert rep.est_cost_s == pytest.approx(raw["cost_s"])
         assert rep.alternatives == raw["n_alternatives"]
+
+    def test_plan_step_keyed_on_hardware_profile(self):
+        """An HW-table override is part of the step-plan memo key, like the
+        cost catalog is for program plans: the same cell re-planned on
+        different hardware must not be served the stale report."""
+        from repro.analysis.roofline import HW
+        session = CobraSession(make_orders_customer_db(10, 10))
+        r1 = session.plan_step("rwkv6-3b", 1024, 4, "decode")
+        old = HW["hbm_bw"]
+        try:
+            HW["hbm_bw"] = old / 4
+            r2 = session.plan_step("rwkv6-3b", 1024, 4, "decode")
+            assert r2 is not r1          # fresh planning pass, not the memo
+            r3 = session.plan_step("rwkv6-3b", 1024, 4, "decode")
+            assert r3 is r2              # memoized under the NEW profile
+        finally:
+            HW["hbm_bw"] = old
+        assert session.plan_step("rwkv6-3b", 1024, 4, "decode") is r1
 
     def test_plan_step_memoized_and_topk(self):
         session = CobraSession(make_orders_customer_db(10, 10))

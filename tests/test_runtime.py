@@ -1,0 +1,374 @@
+"""The serving runtime: batched execution, persistent plan store, feedback.
+
+Issue acceptance:
+  * ``run_batch`` over N parameter sets issues ONE server round trip per
+    query site per batch (round-trip counter) and matches per-invocation
+    ``run()`` results bit-for-bit;
+  * a second ``CobraSession`` pointed at the same ``PlanStore`` directory
+    reports a cache hit without running the memo search;
+  * per-table stats versions: ``analyze()`` of an unrelated table keeps
+    plans alive, the touched table invalidates;
+  * feedback-triggered recompilation picks a different winner after the
+    data drifts.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (CobraSession, OptimizerConfig, program_tables,
+                       query_tables)
+from repro.core import CostCatalog
+from repro.programs import (make_m0, make_orders_customer_db, make_p0,
+                            make_sales_db, make_wilos_a, make_wilos_b,
+                            make_wilos_db, make_wilos_e, make_wilos_f)
+from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
+from repro.runtime import (BatchResult, FeedbackController, PlanStore,
+                           ServingRuntime, program_has_updates, run_batch,
+                           serve)
+
+
+def paper_session(db, network=SLOW_REMOTE):
+    return CobraSession(db, CostCatalog(network),
+                        config=OptimizerConfig.preset("paper-exp1-3"))
+
+
+# --------------------------------------------------------------------------
+# run_batch
+# --------------------------------------------------------------------------
+
+class TestRunBatch:
+    def test_batch_matches_per_invocation_bit_for_bit(self):
+        session = paper_session(make_orders_customer_db(500, 100))
+        exe = session.compile(make_p0())
+        single = exe.run()
+        batch = exe.run_batch([{}] * 6)
+        assert batch.batched and len(batch) == 6
+        for r in batch.results:
+            assert r.outputs == single.outputs       # exact, not approx
+
+    def test_batch_with_varying_params_matches_run(self):
+        session = paper_session(make_wilos_db(400, ratio=10), FAST_LOCAL)
+        exe = session.compile(make_wilos_e())
+        param_sets = [{"worklist": [1, 3]}, {"worklist": [2]},
+                      {"worklist": [1, 3]}, {"worklist": []}]
+        batch = exe.run_batch(param_sets)
+        for p, r in zip(param_sets, batch.results):
+            assert r.outputs == exe.run(**p).outputs
+
+    def test_one_round_trip_per_query_site_per_batch(self):
+        """The acceptance counter: N invocations share each query site's
+        single server round trip."""
+        n = 8
+        session = paper_session(make_orders_customer_db(500, 100))
+        exe = session.compile(make_p0())
+        sites = exe.run().n_round_trips          # sites fetched by ONE run
+        batch = exe.run_batch([{}] * n)
+        assert batch.n_round_trips == sites      # not n * sites
+        assert batch.site_hits == (n - 1) * sites
+        # two independent query sites (W_F: two narrow scans) -> two trips
+        sf = paper_session(make_wilos_db(300), FAST_LOCAL)
+        exe_f = sf.compile(make_wilos_f())
+        bf = exe_f.run_batch([{}] * 5)
+        assert bf.n_round_trips == exe_f.run().n_round_trips
+
+    def test_distinct_bindings_fetch_distinct_sites(self):
+        """A query site bound to different parameters is a different fetch;
+        identical bindings reuse the batch's site cache. (The UNOPTIMIZED
+        W_E issues one σ query per worklist key — the optimized form
+        prefetches the whole relation into a single site.)"""
+        session = paper_session(make_wilos_db(400, ratio=10), FAST_LOCAL)
+        batch = run_batch(session, make_wilos_e(),
+                          [{"worklist": [1]}, {"worklist": [2]},
+                           {"worklist": [1]}])
+        per_worklist = session.execute(make_wilos_e(),
+                                       worklist=[1]).n_round_trips
+        # keys 1 and 2 each fetched once; the repeated worklist [1] is a
+        # pure site-cache reuse
+        assert batch.n_round_trips == 2 * per_worklist
+        assert batch.site_hits >= 1
+        # and the optimized form collapses to ONE site for the whole batch
+        exe = session.compile(make_wilos_e())
+        opt = exe.run_batch([{"worklist": [1]}, {"worklist": [2]}])
+        assert opt.n_round_trips == 1
+
+    def test_bulk_navigation_single_round_trip(self):
+        """The vectorize.py extension: the UNOPTIMIZED N+1 program's
+        navigation site fetches all missing keys in one combined trip."""
+        db = make_orders_customer_db(400, 80)
+        session = paper_session(db)
+        exact = session.execute(make_p0())       # N+1: one trip per miss
+        batch = run_batch(session, make_p0(), [{}] * 3)
+        assert exact.n_round_trips > 50
+        # loadAll(orders) + one bulk navigation fetch for the whole batch
+        assert batch.n_round_trips == 2
+        assert batch.results[0].outputs == exact.outputs
+        assert batch.simulated_s < exact.simulated_s
+
+    def test_update_program_falls_back_to_sequential(self):
+        session = paper_session(make_wilos_db(200), FAST_LOCAL)
+        assert program_has_updates(make_wilos_a())
+        exe = session.compile(make_wilos_a())
+        batch = exe.run_batch([{}] * 2)
+        assert not batch.batched and len(batch) == 2
+
+    def test_unknown_param_rejected(self):
+        session = paper_session(make_orders_customer_db(50, 50))
+        exe = session.compile(make_p0())
+        with pytest.raises(TypeError, match="unknown program input"):
+            exe.run_batch([{"nope": 1}])
+
+    def test_site_cache_key_is_full_content(self):
+        """Array-valued bindings are keyed by full content (repr truncates
+        large arrays and would collide); unrepresentable values bypass the
+        cache instead of risking a stale hit."""
+        from repro.runtime.batch import _Uncacheable, _param_key
+        a = np.arange(2000)
+        b = a.copy()
+        b[1000] = -1
+        assert repr(a) == repr(b)                       # the trap
+        assert _param_key({"k": a}) != _param_key({"k": b})
+        assert _param_key({"k": a}) == _param_key({"k": a.copy()})
+        with pytest.raises(_Uncacheable):
+            _param_key({"k": object()})
+
+    def test_batch_result_telemetry_sums(self):
+        session = paper_session(make_orders_customer_db(200, 100))
+        batch = session.compile(make_p0()).run_batch([{}] * 4)
+        assert isinstance(batch, BatchResult)
+        assert batch.simulated_s == pytest.approx(
+            sum(r.simulated_s for r in batch.results))
+        assert batch.n_round_trips == sum(r.n_round_trips for r in batch.results)
+        assert "batched" in batch.describe()
+
+
+# --------------------------------------------------------------------------
+# PlanStore
+# --------------------------------------------------------------------------
+
+class TestPlanStore:
+    def test_cross_session_hit_skips_memo_search(self, tmp_path):
+        """Acceptance: session B on the same store dir compiles without a
+        memo run and reports the hit through telemetry."""
+        store_dir = str(tmp_path / "plans")
+        sa = CobraSession(make_orders_customer_db(100, 5000),
+                          CostCatalog(SLOW_REMOTE),
+                          config=OptimizerConfig.preset("paper-exp1-3"),
+                          plan_store=store_dir)
+        ea = sa.compile(make_p0())
+        assert not ea.from_cache and sa.memo_runs == 1
+        assert sa.telemetry["store_puts"] == 1
+
+        sb = CobraSession(make_orders_customer_db(100, 5000),
+                          CostCatalog(SLOW_REMOTE),
+                          config=OptimizerConfig.preset("paper-exp1-3"),
+                          plan_store=store_dir)
+        eb = sb.compile(make_p0())
+        assert eb.from_cache and sb.memo_runs == 0
+        assert sb.telemetry["store_hits"] == 1
+        # identical plan artifact: same winner, same cost, same emitted IR
+        assert eb.est_cost_s == ea.est_cost_s
+        assert eb.program.body.key() == ea.program.body.key()
+        # and the restored plan actually executes
+        out = eb.run()
+        base = sb.compile(make_p0()).run()
+        assert out.outputs == base.outputs
+
+    def test_stale_entry_not_served_after_data_change(self, tmp_path):
+        """Store validity is judged by statistics CONTENT: a session whose
+        stats genuinely differ (data changed + analyzed) must not be served
+        the old plan."""
+        store_dir = str(tmp_path / "plans")
+        sa = CobraSession(make_orders_customer_db(100, 500),
+                          CostCatalog(SLOW_REMOTE), plan_store=store_dir)
+        sa.compile(make_p0())
+        sb = CobraSession(make_orders_customer_db(100, 500),
+                          CostCatalog(SLOW_REMOTE), plan_store=store_dir)
+        grown = make_orders_customer_db(4000, 500)
+        sb.db.add_table(grown.table("orders"))    # new data + fresh stats
+        eb = sb.compile(make_p0())
+        assert not eb.from_cache and sb.memo_runs == 1
+        assert sb.plan_store.stale >= 1
+
+    def test_restart_with_extra_analyzes_still_warm(self, tmp_path):
+        """Version counters are process-local; a 'restarted' session whose
+        counters diverge (extra analyze() calls on byte-equal data) still
+        warm-starts, because the store compares stats content."""
+        store_dir = str(tmp_path / "plans")
+        sa = CobraSession(make_orders_customer_db(100, 500),
+                          CostCatalog(SLOW_REMOTE), plan_store=store_dir)
+        sa.analyze()                              # counters out of sync
+        sa.analyze()
+        sa.compile(make_p0())
+        sb = CobraSession(make_orders_customer_db(100, 500),
+                          CostCatalog(SLOW_REMOTE), plan_store=store_dir)
+        eb = sb.compile(make_p0())                # same stats content
+        assert eb.from_cache and sb.memo_runs == 0
+
+    def test_distinct_configs_distinct_entries(self, tmp_path):
+        store = PlanStore(str(tmp_path / "plans"))
+        s = CobraSession(make_orders_customer_db(100, 500),
+                         CostCatalog(SLOW_REMOTE),
+                         config=OptimizerConfig.preset("paper-exp1-3"),
+                         plan_store=store)
+        s.compile(make_p0())
+        s.compile(make_p0(), config=OptimizerConfig.preset("full"))
+        assert len(store) == 2
+        assert len(store.index()) == 2
+
+    def test_corrupt_entry_degrades_to_miss(self, tmp_path):
+        import os
+        store = PlanStore(str(tmp_path / "plans"))
+        s = CobraSession(make_sales_db(200), CostCatalog(SLOW_REMOTE),
+                         plan_store=store)
+        s.compile(make_m0())
+        (plan_file,) = [n for n in os.listdir(store.root)
+                        if n.endswith(".plan")]
+        with open(os.path.join(store.root, plan_file), "wb") as f:
+            f.write(b"not a pickle")
+        s2 = CobraSession(make_sales_db(200), CostCatalog(SLOW_REMOTE),
+                          plan_store=store)
+        exe = s2.compile(make_m0())              # recovers by recompiling
+        assert not exe.from_cache and store.errors >= 1
+
+    def test_clear_and_stats_shape(self, tmp_path):
+        store = PlanStore(str(tmp_path / "plans"))
+        assert set(store.stats()) == {"entries", "hits", "misses", "stale",
+                                      "puts", "errors"}
+        s = CobraSession(make_sales_db(100), CostCatalog(SLOW_REMOTE),
+                         plan_store=store)
+        s.compile(make_m0())
+        assert len(store) == 1
+        store.clear()
+        assert len(store) == 0
+
+
+# --------------------------------------------------------------------------
+# Per-table stats versions
+# --------------------------------------------------------------------------
+
+class TestPerTableStatsVersions:
+    def test_unrelated_analyze_keeps_plan_alive(self):
+        """W_B touches only `tasks`; re-analyzing `roles` must not evict it."""
+        session = paper_session(make_wilos_db(400), FAST_LOCAL)
+        assert program_tables(make_wilos_b()) == ("tasks",)
+        session.compile(make_wilos_b())
+        session.analyze("roles")
+        assert session.compile(make_wilos_b()).from_cache
+        session.analyze("tasks")
+        exe = session.compile(make_wilos_b())
+        assert not exe.from_cache and session.memo_runs == 2
+
+    def test_global_analyze_still_invalidates(self):
+        session = paper_session(make_orders_customer_db(100, 500))
+        session.compile(make_p0())
+        session.analyze()
+        assert not session.compile(make_p0()).from_cache
+
+    def test_table_versions_move_independently(self):
+        db = make_wilos_db(100)
+        v_roles, v_tasks = db.table_version("roles"), db.table_version("tasks")
+        db.analyze("roles")
+        assert db.table_version("roles") == v_roles + 1
+        assert db.table_version("tasks") == v_tasks
+        assert db.stats_token(["roles", "tasks"]) == (
+            ("roles", v_roles + 1), ("tasks", v_tasks))
+
+    def test_replace_table_leaves_stats_stale(self):
+        db = make_orders_customer_db(100, 100)
+        v = db.table_version("orders")
+        est_before = db.stats("orders").nrows
+        db.replace_table(make_orders_customer_db(4000, 100).table("orders"))
+        assert db.table_version("orders") == v       # no ANALYZE ran
+        assert db.stats("orders").nrows == est_before
+        assert db.table("orders").nrows == 4000      # but the data moved
+
+
+# --------------------------------------------------------------------------
+# Feedback-driven re-optimization
+# --------------------------------------------------------------------------
+
+class TestFeedback:
+    def _drifted_session(self):
+        """Compile against 100 orders / 5000 customers, then bulk-load the
+        4000/500 profile WITHOUT analyze — estimates are now badly stale."""
+        db = make_orders_customer_db(100, 5000)
+        session = paper_session(db)
+        grown = make_orders_customer_db(4000, 500)
+        return session, grown
+
+    def test_controller_detects_cardinality_drift(self):
+        session, grown = self._drifted_session()
+        exe = session.compile(make_p0())
+        session.db.replace_table(grown.table("orders"))
+        session.db.replace_table(grown.table("customer"))
+        batch = exe.run_batch([{}] * 2)
+        fb = FeedbackController(session, drift_threshold=3.0)
+        drifted = fb.observe(batch.observations)
+        assert "orders" in drifted
+        assert fb.events and fb.events[0].ratio > 3.0
+        assert fb.telemetry()["drift_events"] >= 1
+
+    def test_serving_recompile_picks_different_winner(self):
+        """Acceptance: drift -> re-analyze -> recompile flips P1 join to
+        P2 prefetch, mid-stream, without touching unrelated plans."""
+        session, grown = self._drifted_session()
+        rt = ServingRuntime(session, batch_size=4, drift_threshold=3.0)
+        rt.register(make_p0())
+        assert "JOIN" in repr(rt.executable("P0").program.body)
+
+        session.db.replace_table(grown.table("orders"))
+        session.db.replace_table(grown.table("customer"))
+        responses = rt.serve([("P0", {})] * 8)
+        assert all(r is not None for r in responses)
+        assert rt.recompiles >= 1
+        assert "prefetch" in repr(rt.executable("P0").program.body)
+        # the recompiled plan still computes the right answer
+        base = session.execute(make_p0())
+        final = rt.executable("P0").run()
+        assert (np.sort(np.asarray(final["result"], dtype=np.float64))
+                == pytest.approx(np.sort(np.asarray(base["result"],
+                                                    dtype=np.float64)),
+                                 rel=1e-4))
+
+    def test_no_drift_no_recompile(self):
+        session = paper_session(make_orders_customer_db(200, 100))
+        rt = ServingRuntime(session, batch_size=4)
+        rt.register(make_p0())
+        rt.serve([("P0", {})] * 8)
+        assert rt.recompiles == 0 and rt.feedback.refreshes == 0
+
+    def test_unrelated_program_stays_hot_through_drift(self):
+        """M0 (sales) keeps its cached plan while orders/customer drift."""
+        db = make_orders_customer_db(100, 5000)
+        sales = make_sales_db(300)
+        db.add_table(sales.table("sales"))
+        session = paper_session(db)
+        rt = ServingRuntime(session, batch_size=4, drift_threshold=3.0)
+        rt.register(make_p0())
+        rt.register(make_m0())
+        memo_after_register = session.memo_runs
+
+        grown = make_orders_customer_db(4000, 500)
+        session.db.replace_table(grown.table("orders"))
+        session.db.replace_table(grown.table("customer"))
+        rt.serve([("P0", {}), ("M0", {})] * 3)
+        assert rt.recompiles >= 1
+        # only P0 recompiled; M0's plan (sales only) never re-ran the memo
+        assert session.memo_runs == memo_after_register + rt.recompiles
+        assert session.compile(make_m0()).from_cache
+
+    def test_serve_preserves_request_order_across_programs(self):
+        db = make_orders_customer_db(100, 50)
+        db.add_table(make_sales_db(100).table("sales"))
+        session = paper_session(db)
+        responses, rt = serve(session, [make_p0(), make_m0()],
+                              [("P0", {}), ("M0", {}), ("P0", {})],
+                              batch_size=2)
+        assert len(responses) == 3
+        assert "result" in responses[0] and "total" in responses[1]
+        assert rt.requests_served == 3
+
+    def test_query_tables_helper(self):
+        from repro.api import q
+        h = q("orders").join("customer", "o_customer_sk", "c_customer_sk")
+        assert query_tables(h.query) == ("customer", "orders")
