@@ -1,7 +1,7 @@
 PYTHON ?= python
 PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke bench examples
+.PHONY: test test-fast lint bench-smoke bench examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -10,6 +10,10 @@ test:
 # sub-60s inner loop: everything not marked slow
 test-fast:
 	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m pytest -x -q -m "not slow"
+
+# static checks (pyflakes: undefined names, unused imports, shadowing)
+lint:
+	$(PYTHON) -m pyflakes src/repro tests benchmarks examples
 
 # tiny-configuration pass over the benchmark drivers — catches API drift
 # (the drivers import and exercise the CobraSession/compile/run surface)

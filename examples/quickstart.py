@@ -1,22 +1,25 @@
-"""Quickstart: the `CobraSession` API on the Fig. 3 ORM program.
+"""Quickstart: point Cobra at plain Python code (the Fig. 3 ORM program).
 
     PYTHONPATH=src python examples/quickstart.py
 
 Walkthrough:
 
-  1. Trace P0 (the Hibernate N+1 program) with ``ProgramBuilder`` — no
-     hand-assembled Region IR.
-  2. Open a ``CobraSession`` and ``compile()`` the program: the memo search
-     runs once and the chosen plan lands in a stats-versioned plan cache.
-  3. ``Executable.run()`` executes the rewritten program (execute-many).
-  4. Re-compiling the same program is a cache hit; ``db.analyze()`` after a
-     data change bumps the stats version and forces a fresh compilation —
-     whose winning plan may flip (join ↔ prefetch) with the new stats.
+  1. Write P0 (the Hibernate N+1 program) as an **ordinary Python
+     function** — real ``for`` loops and attribute navigation, no builder
+     calls — and hand it to ``session.trace``: the AST lifter compiles it
+     to Region IR and the memo search picks the cheapest rewrite.
+  2. ``Executable.run()`` executes the rewritten program (execute-many);
+     ``run_baseline()`` runs the original for comparison.
+  3. Re-compiling the same program is a plan-cache hit; after a data
+     change, ``db.analyze()`` bumps the stats version and forces a fresh
+     compilation — whose winning plan may flip (join ↔ prefetch).
+  4. ``while`` + ``break`` (the paper's Sec. V limitations) lift too: the
+     SCAN program keeps its guarded loop imperative while the aggregation
+     inside it still moves into SQL.
 
-Migration note: the old free function ``repro.core.optimize(program, db,
-catalog)`` still works — it is now a thin shim that opens a throwaway
-session per call — but it re-runs the full memo search every time. Hold a
-``CobraSession`` instead to compile once and execute many.
+Escape hatch: a traced function whose first parameter is named ``b`` gets
+a ``ProgramBuilder`` instead (the lifter's own lowering target) — see
+``repro.api.builder`` for that vocabulary.
 
 Serving (see ``examples/serve_programs.py`` for the full walkthrough): for
 high-throughput workloads, execute a BATCH of parameter bindings in one
@@ -28,37 +31,47 @@ call and persist plans across processes::
     batch = exe.run_batch([{}] * 64)   # one server round trip per query
                                        # site per batch — not per request
     batch[0].outputs                   # bit-identical to exe.run()
-
-``repro.runtime.ServingRuntime`` wraps this into a request loop that also
-watches observed-vs-estimated cardinalities and recompiles a program when
-its tables drift (feedback-driven re-optimization).
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.api import CobraSession, OptimizerConfig, ProgramBuilder
+from repro.api import CobraSession, OptimizerConfig, load_all, q, col, param
 from repro.core import CostCatalog
-from repro.programs import make_orders_customer_db
+from repro.core.regions import get_function
+from repro.programs import make_orders_customer_db, make_wilos_db
 from repro.relational.database import SLOW_REMOTE
 
+myFunc = get_function("myFunc")
 
-def trace_p0():
-    """Fig. 3a, written as straight-line traced code."""
-    b = ProgramBuilder("P0")
-    b.relate("orders", "o_customer_sk", "customer", "c_customer_sk",
-             name="customer")
-    result = b.let("result", b.empty_list())
-    with b.loop(b.load_all("orders"), var="o") as o:
-        cust = b.let("cust", o.customer)          # ORM navigation → N+1
-        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
-        b.add(result, val)
-    return b.build(outputs=(result,))
+
+def p0():
+    """Fig. 3a as the application would actually write it."""
+    result = []
+    for o in load_all("orders"):
+        cust = o.customer                     # ORM navigation → N+1
+        val = myFunc(o.o_id, cust.c_birth_year)
+        result.append(val)
+    return result
+
+
+def scan(threshold=100.0, max_state=5):
+    """While + early exit: per-state triage until the threshold is hit."""
+    state = 0
+    total = 0.0
+    while state < max_state:
+        s = 0.0
+        for t in q("tasks").where(col("t_state").eq(param("k"))).bind(k=state):
+            s = s + t.t_hours
+        total = total + s
+        state = state + 1
+        if total > threshold:
+            break
+    return total, state
 
 
 def main():
-    p0 = trace_p0()
     for n_orders, n_cust, label in [(200, 7300, "few orders, many customers"),
                                     (20000, 1000, "many orders, few customers")]:
         db = make_orders_customer_db(n_orders, n_cust)
@@ -67,11 +80,13 @@ def main():
         print(f"\n=== {label}: orders={n_orders} customers={n_cust} "
               f"(slow remote network) ===")
 
-        baseline = session.execute(p0)
+        exe = session.trace(p0, name="P0", relations=[
+            ("orders", "o_customer_sk", "customer", "c_customer_sk",
+             "customer")])
+        baseline = exe.run_baseline()
         print(f"original P0 (N+1 selects):      {baseline.simulated_s:8.2f}s "
               f"simulated, {baseline.n_queries} queries")
 
-        exe = session.compile(p0)
         opt = exe.run()
         kind = "P2 (prefetch)" if "prefetch" in repr(exe.program.body) \
             else "P1 (SQL join)"
@@ -80,12 +95,13 @@ def main():
               f"{exe.result.opt_time_s*1e3:.0f}ms)")
 
         # full rule set (beyond-paper T3∘T4j projection-pushed join)
-        exe_full = session.compile(p0, config=OptimizerConfig.preset("full"))
+        exe_full = session.compile(exe.source,
+                                   config=OptimizerConfig.preset("full"))
         full = exe_full.run()
         print(f"Cobra, full rule set (T3∘T4j):  {full.simulated_s:8.2f}s")
 
         # compile-once / execute-many: second compile is a cache hit
-        again = session.compile(p0)
+        again = session.compile(exe.source)
         assert again.from_cache, "repeated compile must hit the plan cache"
         t = session.telemetry
         print(f"plan cache: {t['cache_hits']} hit(s), "
@@ -97,6 +113,20 @@ def main():
               f"({len(baseline['result'])} rows) — speedup "
               f"{baseline.simulated_s/opt.simulated_s:.0f}x / "
               f"{baseline.simulated_s/full.simulated_s:.0f}x")
+
+    # ---- while + early exit (beyond the paper's builder coverage) ---------
+    print("\n=== while + break: per-state SCAN over tasks ===")
+    session = CobraSession(make_wilos_db(3000), CostCatalog(SLOW_REMOTE))
+    exe = session.trace(scan, name="SCAN")
+    base = exe.run_baseline(threshold=20000.0)
+    opt = exe.run(threshold=20000.0)
+    assert "scalarQuery" in repr(exe.program.body), \
+        "the aggregation inside the while body should move into SQL"
+    print(f"original (row-at-a-time σ loops): {base.simulated_s:6.2f}s, "
+          f"stopped after {base['state']} state(s)")
+    print(f"rewritten (correlated SELECT SUM): {opt.simulated_s:6.2f}s — "
+          f"{exe.report.describe()}")
+    assert base["state"] == opt["state"]
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@ Three acts:
   2. **Batched serving.** A ``ServingRuntime`` processes a mixed request
      stream; each batch pays one server round trip per query site instead
      of one per request, so simulated throughput scales with batch size.
+     The stream includes SCAN — a while/early-exit program lifted from
+     plain Python — whose per-request ``threshold`` parameter makes each
+     invocation stop after a different number of rounds, even mid-batch.
   3. **Drift + re-optimization.** A bulk load grows ``orders`` 40x without
      ANALYZE. The feedback controller notices observed cardinalities
      leaving the estimated band, re-analyzes only the drifted tables, and
@@ -26,14 +29,19 @@ sys.path.insert(0, "src")
 from repro.api import CobraSession, OptimizerConfig
 from repro.core import CostCatalog
 from repro.programs import (make_m0, make_orders_customer_db, make_p0,
-                            make_sales_db)
+                            make_sales_db, make_scan, make_wilos_db)
 from repro.relational.database import SLOW_REMOTE
 from repro.runtime import PlanStore, ServingRuntime
 
 
 def make_db():
+    # all served programs are plain Python functions lifted to Region IR
+    # (repro.programs) — one simulated server hosts every table they touch
     db = make_orders_customer_db(100, 5000)
     db.add_table(make_sales_db(800).table("sales"))
+    wilos = make_wilos_db(2000)
+    db.add_table(wilos.table("tasks"))
+    db.add_table(wilos.table("roles"))
     return db
 
 
@@ -67,6 +75,7 @@ def main():
     rt = ServingRuntime(session_b, batch_size=16, drift_threshold=3.0)
     rt.register(make_p0())
     rt.register(make_m0())
+    rt.register(make_scan())
 
     single = rt.executable("P0").run()
     batch = rt.executable("P0").run_batch([{}] * 16)
@@ -81,6 +90,15 @@ def main():
     responses = rt.serve([("P0", {}), ("M0", {})] * 8)
     print(f"served {len(responses)} mixed requests in {rt.batches_run} "
           f"batch(es), {rt.n_round_trips} round trips")
+
+    # SCAN is a while/early-exit program (plain Python `while` + `break`);
+    # each request's threshold stops it after a different number of rounds,
+    # respected per invocation even inside one shared batch
+    scans = rt.serve([("SCAN", {"threshold": th})
+                      for th in (100.0, 2e4, 1e9) * 2])
+    rounds = sorted({r["state"] for r in scans})
+    print(f"SCAN requests stopped after {rounds} round(s) "
+          f"(per-invocation early exit inside a shared batch)")
 
     # ---- act 3: drift-driven re-optimization ------------------------------
     print(f"\n=== bulk load: orders 100 -> 4000 rows, no ANALYZE ===")

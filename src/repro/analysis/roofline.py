@@ -21,7 +21,6 @@ from __future__ import annotations
 import re
 from typing import Dict
 
-import numpy as np
 
 __all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms"]
 

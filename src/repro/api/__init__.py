@@ -15,12 +15,18 @@ from .builder import Expr, ProgramBuilder, Q, VarHandle, col, param, q
 from .cache import (PlanCache, PlanCacheKey, program_fingerprint,
                     program_tables, query_tables)
 from .config import OptimizerConfig, PRESETS
+from .lift import (LiftError, cache_by_column, cache_lookup, lift_program,
+                   lift_source, load_all, noop, prefetch, query_values,
+                   scalar_query, update_row)
 from .session import CobraSession, Executable, ExecutionResult, PlanReport
 
 __all__ = [
     "CobraSession", "Executable", "ExecutionResult", "PlanReport",
     "OptimizerConfig", "PRESETS",
     "ProgramBuilder", "Expr", "VarHandle", "Q", "q", "col", "param",
+    "LiftError", "lift_program", "lift_source",
+    "load_all", "cache_lookup", "scalar_query", "query_values",
+    "prefetch", "update_row", "cache_by_column", "noop",
     "PlanCache", "PlanCacheKey", "program_fingerprint", "program_tables",
     "query_tables",
 ]

@@ -1,10 +1,12 @@
-"""Tracing program frontend: build Region IR without hand-assembling trees.
+"""Tracing program builder: the lowering target of the Region IR frontends.
 
-Before this module, every Cobra input program was written by nesting
-``LoopRegion``/``SeqRegion``/``BasicBlock`` constructors by hand (the old
-``repro.programs``). The builder records statements as straight-line code
-inside ``with``-scoped loops and conditionals and produces the identical
-Region IR::
+The primary way into Cobra is a **plain Python function** handed to
+``session.trace`` / ``repro.api.lift``: the AST lifter lowers real
+``for``/``if``/``while`` code onto THIS builder, which is the single
+emission path for Region IR. Use the builder directly as the **escape
+hatch** — programs outside the liftable subset (or tooling that constructs
+programs programmatically) record statements as straight-line code inside
+``with``-scoped loops and conditionals and produce the identical IR::
 
     b = ProgramBuilder("P0")
     b.relate("orders", "o_customer_sk", "customer", "c_customer_sk",
@@ -15,6 +17,10 @@ Region IR::
         val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
         b.add(result, val)
     p0 = b.build(outputs=(result,))
+
+Control flow covers everything the lifter emits: ``loop``/``when``/
+``otherwise`` plus ``while_`` guarded loops and the early-exit statements
+``brk``/``cont``/``ret`` (break / continue / early return).
 
 Three kinds of handles flow through user code:
 
@@ -33,19 +39,20 @@ a ``SeqRegion``; the program top level is always a ``SeqRegion``.
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..relational.algebra import (AggSpec, Aggregate, Col, Join, Limit,
                                   OrderBy, Param, Project, Query, Scalar,
                                   Scan, Select)
-from ..core.regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
-                            CondRegion, IBin, ICacheLookup, ICall, IConst,
-                            IEmptyList, IEmptyMap, IExpr, IField, ILen,
-                            ILoadAll, INav, IQuery, IQueryValues, IScalarQuery,
-                            IVar, LoopRegion, MapPut, NoOp, Prefetch, Program,
-                            Region, SeqRegion, Stmt, UpdateRow)
+from ..core.regions import (Assign, BasicBlock, BreakStmt, CacheByColumn,
+                            CollectionAdd, CondRegion, ContinueStmt, IBin,
+                            ICacheLookup, ICall, IConst, IEmptyList, IEmptyMap,
+                            IExpr, IField, ILen, ILoadAll, INav, IQuery,
+                            IQueryValues, IScalarQuery, IVar, LoopRegion,
+                            MapPut, NoOp, Prefetch, Program, Region,
+                            ReturnStmt, SeqRegion, Stmt, UpdateRow,
+                            WhileRegion)
 
 __all__ = ["ProgramBuilder", "Expr", "VarHandle", "Q", "q", "col", "param"]
 
@@ -374,6 +381,29 @@ class ProgramBuilder:
         finally:
             body = self._close_scope(self._scopes.pop())
             self._emit(LoopRegion(name, src_ir, body, label))
+
+    @contextlib.contextmanager
+    def while_(self, pred, label: str = ""):
+        """Guarded loop ``while pred { ... }`` (a :class:`WhileRegion`)."""
+        self._scopes.append([])
+        try:
+            yield
+        finally:
+            body = self._close_scope(self._scopes.pop())
+            self._emit(WhileRegion(_ir(pred), body, label))
+
+    def brk(self) -> None:
+        """``break`` — exit the nearest enclosing loop."""
+        self._stmt(BreakStmt())
+
+    def cont(self) -> None:
+        """``continue`` — skip to the next iteration of the nearest loop."""
+        self._stmt(ContinueStmt())
+
+    def ret(self) -> None:
+        """Early ``return`` — exit the program; outputs keep their current
+        values (assign them before calling this)."""
+        self._stmt(ReturnStmt())
 
     @contextlib.contextmanager
     def when(self, pred):

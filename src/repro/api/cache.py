@@ -56,7 +56,7 @@ def program_tables(program) -> Tuple[str, ...]:
     versions of exactly these tables."""
     from ..core.regions import (BasicBlock, CondRegion, ICacheLookup, ILoadAll,
                                 INav, IExpr, LoopRegion, Prefetch, SeqRegion,
-                                UpdateRow)
+                                UpdateRow, WhileRegion)
     out = set()
 
     def from_expr(e):
@@ -106,6 +106,9 @@ def program_tables(program) -> Tuple[str, ...]:
             walk(r.then_r)
             if r.else_r is not None:
                 walk(r.else_r)
+        elif isinstance(r, WhileRegion):
+            from_expr(r.pred)
+            walk(r.body)
 
     walk(program.body)
     return tuple(sorted(out))

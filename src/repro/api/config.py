@@ -27,7 +27,7 @@ its plan cache on it.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 __all__ = ["OptimizerConfig", "PRESETS"]
 

@@ -244,11 +244,14 @@ class CobraSession:
                             max_rounds=cfg.max_rounds)
         self.memo_runs += 1
         if cfg.use_plan_cache:
-            self.plan_cache.put(key, result)
             if self.plan_store is not None:
-                self.plan_store.put(
+                # first-writer-wins: if another session compiled the same
+                # cold program concurrently, serve ITS stored plan so every
+                # session converges on the one canonical artifact
+                result = self.plan_store.put(
                     key, result,
                     stats_fp=self.db.stats_fingerprint(program_tables(program)))
+            self.plan_cache.put(key, result)
         return Executable(self, program, result, from_cache=False)
 
     # ------------------------------------------------------------ execution
@@ -315,43 +318,61 @@ class CobraSession:
         return report
 
     # ------------------------------------------------------- tracing frontend
-    def trace(self, fn=None, *, name: Optional[str] = None):
-        """Decorator: turn a plain Python function into a compiled program.
+    def trace(self, fn=None, *, name: Optional[str] = None,
+              relations: Sequence[Tuple] = ()):
+        """Decorator: compile a **plain Python function** into an
+        :class:`Executable` via AST lifting (``repro.api.lift``).
 
-        The function receives a :class:`~repro.api.builder.ProgramBuilder`
-        as its first argument; every remaining parameter becomes a declared
-        program input (its Python default is the input default). Whatever
-        the function returns (a handle or tuple of handles) becomes the
-        program outputs. The decorated name binds to an :class:`Executable`
-        compiled by this session — plan-cache/store backed like any other
-        ``compile()``::
+        Every parameter becomes a declared program input (its Python default
+        is the input default); real ``for``/``if``/``while`` +
+        ``break``/``continue`` and early ``return`` lower to Region IR; the
+        returned value(s) become the program outputs. ``relations`` registers
+        ORM FK relationships (``(table, fk_field, target, target_key[,
+        attr])``) so ``row.<attr>`` traces to navigation. The decorated name
+        binds to an Executable compiled by this session — plan-cache/store
+        backed like any other ``compile()``::
+
+            from repro.api import q, col, param
 
             @session.trace
-            def hours(b, worklist=()):
-                out = b.let("out", b.empty_list())
-                with b.loop(worklist, var="wid") as wid:
-                    ...
+            def hours(worklist=()):
+                out = []
+                for wid in worklist:
+                    for y in q("tasks").where(col("t_role_id")
+                                              .eq(param("r"))).bind(r=wid):
+                        out.append(y.t_hours)
                 return out
 
             hours.run(worklist=[1, 2])
+
+        **Builder escape hatch**: a function whose first parameter is named
+        ``b`` or ``builder`` is instead called with a
+        :class:`~repro.api.builder.ProgramBuilder` (the lifter's own
+        lowering target) and may use the full builder vocabulary directly —
+        for programs outside the liftable subset.
         """
         from .builder import ProgramBuilder
 
         def decorate(f):
-            b = ProgramBuilder(name or f.__name__)
-            handles = []
             params = list(inspect.signature(f).parameters.items())
-            for pname, p in params[1:]:
-                default = () if p.default is inspect.Parameter.empty else p.default
-                handles.append(b.input(pname, default))
-            out = f(b, *handles)
-            if out is None:
-                outputs: Tuple = ()
-            elif isinstance(out, (tuple, list)):
-                outputs = tuple(out)
-            else:
-                outputs = (out,)
-            return self.compile(b.build(outputs=outputs))
+            if params and params[0][0] in ("b", "builder"):
+                b = ProgramBuilder(name or f.__name__)
+                handles = []
+                for pname, p in params[1:]:
+                    default = () if p.default is inspect.Parameter.empty \
+                        else p.default
+                    handles.append(b.input(pname, default))
+                out = f(b, *handles)
+                if out is None:
+                    outputs: Tuple = ()
+                elif isinstance(out, (tuple, list)):
+                    outputs = tuple(out)
+                else:
+                    outputs = (out,)
+                return self.compile(b.build(outputs=outputs))
+            from .lift import lift_program
+            return self.compile(lift_program(f, name=name or f.__name__,
+                                             relations=relations))
 
         return decorate(fn) if fn is not None else decorate
 

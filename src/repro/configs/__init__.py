@@ -6,6 +6,15 @@ from . import (h2o_danube_1_8b, internlm2_20b, kimi_k2_1t_a32b,
                seamless_m4t_large_v2, stablelm_12b, zamba2_1_2b)
 from ..models.arch import get_arch, list_archs
 
+# the submodule imports above are side-effecting (each registers its arch);
+# re-export them so the bindings are part of the package surface
+__all__ = [
+    "h2o_danube_1_8b", "internlm2_20b", "kimi_k2_1t_a32b",
+    "llama4_scout_17b_a16e", "minicpm3_4b", "qwen2_vl_72b", "rwkv6_3b",
+    "seamless_m4t_large_v2", "stablelm_12b", "zamba2_1_2b",
+    "get_arch", "list_archs", "ALL_ARCHS",
+]
+
 ALL_ARCHS = [
     "stablelm-12b", "minicpm3-4b", "h2o-danube-1.8b", "internlm2-20b",
     "rwkv6-3b", "zamba2-1.2b", "qwen2-vl-72b", "seamless-m4t-large-v2",

@@ -4,12 +4,13 @@ The paper's primary contribution — cost-based rewriting of database
 applications via a Volcano/Cascades memo over program regions.
 """
 
-from .regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
-                      CondRegion, IBin, ICacheLookup, ICall, IConst,
-                      IEmptyList, IEmptyMap, IField, ILoadAll, INav,
-                      Interpreter, IQuery, IQueryValues, IScalarQuery, IVar,
-                      LoopRegion, MapPut, NoOp, Prefetch, Program, Region,
-                      SeqRegion, UpdateRow, register_function, seq)
+from .regions import (Assign, BasicBlock, BreakStmt, CacheByColumn,
+                      CollectionAdd, CondRegion, ContinueStmt, IBin,
+                      ICacheLookup, ICall, IConst, IEmptyList, IEmptyMap,
+                      IField, ILoadAll, INav, Interpreter, IQuery,
+                      IQueryValues, IScalarQuery, IVar, LoopRegion, MapPut,
+                      NoOp, Prefetch, Program, Region, ReturnStmt, SeqRegion,
+                      UpdateRow, WhileRegion, register_function, seq)
 from .fir import (FIRConversionError, eval_fir, fir_to_region, loop_to_fir)
 from .dag import AndNode, Memo, Rule, expand
 from .rules import RuleContext, build_memo, default_rules
@@ -17,11 +18,12 @@ from .cost import CostCatalog, CostModel
 from .search import OptimizationResult, Plan, optimize, run_search
 
 __all__ = [
-    "Assign", "BasicBlock", "CacheByColumn", "CollectionAdd", "CondRegion",
-    "IBin", "ICacheLookup", "ICall", "IConst", "IEmptyList", "IEmptyMap",
-    "IField", "ILoadAll", "INav", "Interpreter", "IQuery", "IQueryValues",
-    "IScalarQuery", "IVar", "LoopRegion", "MapPut", "NoOp", "Prefetch",
-    "Program", "Region", "SeqRegion", "UpdateRow", "register_function", "seq",
+    "Assign", "BasicBlock", "BreakStmt", "CacheByColumn", "CollectionAdd",
+    "CondRegion", "ContinueStmt", "IBin", "ICacheLookup", "ICall", "IConst",
+    "IEmptyList", "IEmptyMap", "IField", "ILoadAll", "INav", "Interpreter",
+    "IQuery", "IQueryValues", "IScalarQuery", "IVar", "LoopRegion", "MapPut",
+    "NoOp", "Prefetch", "Program", "Region", "ReturnStmt", "SeqRegion",
+    "UpdateRow", "WhileRegion", "register_function", "seq",
     "FIRConversionError", "eval_fir", "fir_to_region", "loop_to_fir",
     "AndNode", "Memo", "Rule", "expand", "RuleContext", "build_memo",
     "default_rules", "CostCatalog", "CostModel", "OptimizationResult", "Plan",

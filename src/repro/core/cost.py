@@ -19,14 +19,12 @@ is a round trip, the rest are local hits.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 from ..relational.algebra import Cmp, Col, Param, Query, Scan, Select
 from ..relational.database import DatabaseServer, NetworkProfile
-from .fir import (FAcc, FBin, FCacheLookupAllE, FCacheLookupE, FCall, FCondE,
-                  FConst, FExpr, FField, FFoldE, FInsert, FMapPutE,
-                  FPointLookup, FProjectE, FQueryE, FRow, FSelLookupE, FSeqE,
-                  FTupleE, FVarRef, fir_children)
+from .fir import (FCacheLookupAllE, FCacheLookupE, FCondE, FExpr, FFoldE,
+                  FPointLookup, FQueryE, FSelLookupE, FTupleE, fir_children)
 
 __all__ = ["CostCatalog", "CostModel"]
 
@@ -41,6 +39,7 @@ class CostCatalog:
     af: float = 1.0             # amortization factor AF_Q
     loop_iters_default: float = 1000.0
     cond_prob_default: float = 0.5
+    while_iters_default: float = 8.0  # K for guarded (while) loops
 
 
 class CostModel:
@@ -147,8 +146,8 @@ class CostModel:
     # --------------------------------------------------------- region costs
     def block_cost(self, stmt) -> float:
         """Imperative statement cost: C_Z + any embedded query costs."""
-        from .regions import (Assign, CacheByColumn, CollectionAdd, ILoadAll,
-                              INav, IQuery, MapPut, Prefetch, UpdateRow)
+        from .regions import (CacheByColumn, ILoadAll, INav, IQuery, Prefetch,
+                              UpdateRow)
         c = self.cat.c_z
         if isinstance(stmt, Prefetch):
             return self.prefetch_cost(stmt.query)
@@ -166,7 +165,7 @@ class CostModel:
         return c
 
     def _iexpr_cost(self, e) -> float:
-        from .regions import IBin, ICacheLookup, ICall, IField, ILoadAll, INav, IQuery
+        from .regions import ICacheLookup, ILoadAll, INav, IQuery
         if isinstance(e, IQuery):
             return self.query_cost(e.query)
         if isinstance(e, ILoadAll):
@@ -186,7 +185,7 @@ class CostModel:
 
     def loop_iters(self, source) -> float:
         """K for non-fold loops."""
-        from .regions import ILoadAll, IQuery, IVar
+        from .regions import ILoadAll, IQuery
         if isinstance(source, IQuery):
             return self.query_rows(source.query)
         if isinstance(source, ILoadAll):

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 __all__ = ["AndNode", "Memo", "Rule", "GroupId", "AndId"]
 

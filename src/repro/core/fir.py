@@ -27,15 +27,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-import numpy as np
 
 from ..relational.algebra import Cmp, Col, Param, Query, Scan, Select
 from ..relational.table import Table
-from .regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
-                      CondRegion, IBin, ICacheLookup, ICall, IConst, IEmptyList,
-                      IEmptyMap, IExpr, IField, INav, IQuery, IVar, LoopRegion,
-                      MapPut, NoOp, Prefetch, Region, SeqRegion, Stmt,
-                      _BIN_OPS, _FUNCTIONS)
+from .regions import (Assign, BasicBlock, CollectionAdd, CondRegion, IBin,
+                      ICacheLookup, ICall, IConst, IEmptyList, IEmptyMap,
+                      IExpr, IField, INav, IQuery, IVar, LoopRegion, MapPut,
+                      NoOp, Prefetch, Region, SeqRegion, Stmt, _BIN_OPS,
+                      _FUNCTIONS)
 
 __all__ = [
     "FExpr", "FConst", "FVarRef", "FAcc", "FRow", "FField", "FBin", "FCall",

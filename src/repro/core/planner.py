@@ -24,12 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from ..analysis.roofline import HW
 from ..models.arch import ArchConfig
-from .dag import AndNode, Memo, Rule, expand
+from .dag import AndNode, Memo
 
 __all__ = ["PlanChoice", "TPUCostModel", "plan", "enumerate_plans"]
 

@@ -6,6 +6,14 @@ A program is a tree of regions:
     SeqRegion    — ordered children
     LoopRegion   — cursor loop ``for (t : <source>) { body }``
     CondRegion   — if/else
+    WhileRegion  — guarded loop ``while (pred) { body }``
+
+Early-exit statements (``BreakStmt``/``ContinueStmt``/``ReturnStmt``) cover
+the imperative constructs the paper's Sec. V limitations call out: the
+interpreters execute them faithfully (as non-local exits), while the
+rewriting layers stay conservative — a cursor loop containing an exit is
+never converted to F-IR or vectorized, and a ``while`` body participates in
+rewrites only through the ordinary loops nested inside it.
 
 Regions are *state transitions* ``R : X0 → X1`` (Sec. IV-A); the state is the
 environment of program variables. Two interpreters execute regions against a
@@ -26,12 +34,12 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..relational.algebra import Param, Query, Scan, Select
+from ..relational.algebra import Query, Scan
 from ..relational.database import ClientEnv
 from ..relational.table import Table
 
@@ -42,9 +50,10 @@ __all__ = [
     "IQueryValues",
     # statements
     "Stmt", "Assign", "CollectionAdd", "MapPut", "Prefetch", "CacheByColumn",
-    "UpdateRow", "NoOp",
+    "UpdateRow", "NoOp", "BreakStmt", "ContinueStmt", "ReturnStmt",
     # regions
-    "Region", "BasicBlock", "SeqRegion", "LoopRegion", "CondRegion", "Program",
+    "Region", "BasicBlock", "SeqRegion", "LoopRegion", "CondRegion",
+    "WhileRegion", "Program",
     "Interpreter", "register_function", "get_function",
 ]
 
@@ -467,6 +476,42 @@ class NoOp(Stmt):
         return f"noop({self.note})"
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class BreakStmt(Stmt):
+    """Exit the nearest enclosing loop (``break``)."""
+
+    def key(self):
+        return ("break",)
+
+    def __repr__(self):
+        return "break"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ContinueStmt(Stmt):
+    """Skip to the next iteration of the nearest enclosing loop."""
+
+    def key(self):
+        return ("continue",)
+
+    def __repr__(self):
+        return "continue"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ReturnStmt(Stmt):
+    """Early exit from the whole program body.
+
+    Program outputs stay the declared variable names; a return site assigns
+    them first (the frontend lowers ``return e`` that way), then exits."""
+
+    def key(self):
+        return ("return",)
+
+    def __repr__(self):
+        return "return"
+
+
 # --------------------------------------------------------------------------
 # Regions
 # --------------------------------------------------------------------------
@@ -556,6 +601,26 @@ class CondRegion(Region):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class WhileRegion(Region):
+    """Guarded loop ``while (pred) body`` — iteration count is data-dependent,
+    so the region itself is never folded to F-IR; loops nested in its body
+    still participate in rewrites individually."""
+
+    pred: IExpr
+    body: Region
+    label: str = ""
+
+    def key(self):
+        return ("W", self.pred.key(), self.body.key())
+
+    def children(self):
+        return (self.body,)
+
+    def __repr__(self):
+        return f"W[while {self.pred!r} {{ {self.body!r} }}]"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class Program:
     """Outermost region + the variables whose final values are the output state."""
 
@@ -581,6 +646,23 @@ class _Row(dict):
     """A row value; dict with attribute-ish access by field name."""
 
 
+class _BreakSignal(Exception):
+    """Raised by BreakStmt; caught by the nearest enclosing loop."""
+
+
+class _ContinueSignal(Exception):
+    """Raised by ContinueStmt; caught by the nearest enclosing loop."""
+
+
+class _ReturnSignal(Exception):
+    """Raised by ReturnStmt; caught at Program level (Interpreter.run)."""
+
+
+# runaway-while backstop: a genuine program never gets close, a bad guard
+# fails loudly instead of hanging the test suite
+MAX_WHILE_ITERS = 1_000_000
+
+
 class Interpreter:
     """Executes regions against a ClientEnv; accumulates simulated time there."""
 
@@ -595,7 +677,10 @@ class Interpreter:
         state: Dict[str, object] = dict(program.inputs)
         if init_state:
             state.update(init_state)
-        self.exec_region(program.body, state)
+        try:
+            self.exec_region(program.body, state)
+        except _ReturnSignal:
+            pass  # early `return`: outputs are the state at the exit point
         return {v: state.get(v) for v in program.outputs}
 
     # ---------------------------------------------------------------- exprs
@@ -683,6 +768,15 @@ class Interpreter:
                 env.db.add_table(t.with_column(t.schema.field(s.set_col), col))
         elif isinstance(s, NoOp):
             env.charge_statement()
+        elif isinstance(s, BreakStmt):
+            env.charge_statement()
+            raise _BreakSignal()
+        elif isinstance(s, ContinueStmt):
+            env.charge_statement()
+            raise _ContinueSignal()
+        elif isinstance(s, ReturnStmt):
+            env.charge_statement()
+            raise _ReturnSignal()
         else:
             raise TypeError(f"cannot exec {s!r}")
 
@@ -706,6 +800,23 @@ class Interpreter:
                 if try_exec_loop_fast(self, r, src, state):
                     return
             self._exec_loop_exact(r, src, state)
+        elif isinstance(r, WhileRegion):
+            iters = 0
+            while True:
+                self.env.charge_statement()  # guard evaluation
+                if not bool(self.eval(r.pred, state)):
+                    break
+                iters += 1
+                if iters > MAX_WHILE_ITERS:
+                    raise RuntimeError(
+                        f"while loop exceeded {MAX_WHILE_ITERS} iterations "
+                        f"(guard {r.pred!r} never became false)")
+                try:
+                    self.exec_region(r.body, state)
+                except _ContinueSignal:
+                    continue
+                except _BreakSignal:
+                    break
         else:
             raise TypeError(f"cannot exec region {r!r}")
 
@@ -720,7 +831,12 @@ class Interpreter:
         for row in rows:
             self.env.charge_statement()  # loop header/advance
             state[r.var] = _Row(row) if isinstance(row, dict) else row
-            self.exec_region(r.body, state)
+            try:
+                self.exec_region(r.body, state)
+            except _ContinueSignal:
+                continue
+            except _BreakSignal:
+                break
         state.pop(r.var, None)
 
 

@@ -26,12 +26,13 @@ from ..relational.algebra import (AggSpec, Aggregate, Arith, Cmp, Col, Func,
                                   Scan, Select)
 from .dag import AndNode, Memo, Rule
 from .fir import (FAcc, FBin, FCacheLookupAllE, FCacheLookupE, FCall, FCondE,
-                  FConst, FExpr, FField, FFoldE, FInsert, FMapPutE,
-                  FPointLookup, FProjectE, FQueryE, FRow, FSelLookupE, FSeqE,
-                  FTupleE, FVarRef, FIRConversionError, FPrefetchE,
-                  fir_children, fir_contains, fir_map, loop_to_fir)
+                  FConst, FExpr, FField, FFoldE, FInsert, FPointLookup,
+                  FProjectE, FQueryE, FRow, FSelLookupE, FSeqE, FTupleE,
+                  FVarRef, FIRConversionError, FPrefetchE, fir_children,
+                  fir_contains, fir_map, loop_to_fir)
 from .regions import (Assign, BasicBlock, CondRegion, IConst, IEmptyList,
-                      IEmptyMap, LoopRegion, Program, Region, SeqRegion)
+                      IEmptyMap, LoopRegion, Program, Region, SeqRegion,
+                      WhileRegion)
 
 __all__ = ["RuleContext", "build_memo", "default_rules"]
 
@@ -83,6 +84,14 @@ def _insert_region(memo: Memo, r: Region, ctx: RuleContext,
         ctx.loop_regions[a] = r
         ctx.empty_at_loop[a] = known_empty
         return g
+    if isinstance(r, WhileRegion):
+        # the while itself has no F-IR form (iteration count is data
+        # dependent), but its body is inserted like any region: cursor loops
+        # nested inside still grow their own alternatives (T1/T3/T5, ...).
+        # known_empty resets — the body re-executes, so nothing stays fresh.
+        bg = _insert_region(memo, r.body, ctx, frozenset())
+        g, _ = memo.insert(AndNode("while", (bg,), r.pred))
+        return g
     raise TypeError(f"cannot insert region {r!r}")
 
 
@@ -95,11 +104,11 @@ def _track_empties(r: Region, empty: set) -> None:
             empty.add(r.stmt.target)
         else:
             empty.discard(r.stmt.target)
-    elif isinstance(r, (SeqRegion, CondRegion, LoopRegion)):
+    elif isinstance(r, (SeqRegion, CondRegion, LoopRegion, WhileRegion)):
         # conservative: any nested def invalidates
         for p in r.children():
             _track_empties(p, empty)
-        if isinstance(r, LoopRegion):
+        if isinstance(r, (LoopRegion, WhileRegion)):
             empty.clear()
 
 

@@ -27,11 +27,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..relational.algebra import Query, Scan
 from .cost import CostCatalog, CostModel
 from .dag import AndNode, Memo, expand
-from .fir import (FExpr, FFoldE, FPrefetchE, FSeqE, NameGen, fir_to_region,
-                  fold_to_loop)
+from .fir import FExpr, FPrefetchE, NameGen, fold_to_loop
 from .regions import (Assign, BasicBlock, CondRegion, IBin, IQuery,
                       IQueryValues, IScalarQuery, IVar, LoopRegion, Program,
-                      Region, SeqRegion)
+                      Region, SeqRegion, WhileRegion)
 from .rules import RuleContext, _get_parts, build_memo, default_rules
 
 __all__ = ["optimize", "run_search", "OptimizationResult", "Plan",
@@ -157,6 +156,17 @@ class Searcher:
                                  if key[0] != "fold")
             base = k * (per_exec + cat.c_z) + cm._iexpr_cost(source)
             return base, prefetch_res
+        if node.op == "while":
+            # guarded loop: iteration count is data dependent, so charge a
+            # catalog-estimated K. EVERY body resource is multiplied (a
+            # prefetch inside a while body re-executes each iteration and is
+            # never hoisted across the guard), so nothing escapes upward as
+            # a shared resource — conservative by construction.
+            k = cat.while_iters_default
+            body = children[0]
+            per_exec = body.base + sum(c for _, c in body.resources)
+            base = k * (per_exec + cat.c_z) + cat.c_z
+            return base, ()
         if node.op == "assemble":
             base = sum(p.base for p in children)
             return base, _merge_resources(*[p.resources for p in children])
@@ -247,6 +257,12 @@ def plan_to_region(plan: Plan, emitted_prefetch: Optional[set] = None,
         var, source = plan.payload
         return LoopRegion(var, source, plan_to_region(plan.children[0],
                                                       emitted_prefetch, names))
+    if plan.op == "while":
+        # a prefetch chosen inside the body must also be emitted there (the
+        # guard may skip every iteration), so the body codegens with a FRESH
+        # dedup set — nothing is considered already-emitted across the guard
+        body = plan_to_region(plan.children[0], set(), names)
+        return WhileRegion(plan.payload, body)
     if plan.op == "assemble":
         return _assemble_to_region(plan, emitted_prefetch, names)
     raise TypeError(f"cannot codegen {plan.op}")
@@ -366,8 +382,9 @@ def hoist_prefetches(region: Region) -> Region:
             if body is None:
                 body = BasicBlock(NoOp("hoisted"))
             return LoopRegion(r.var, r.source, body, r.label)
-        if isinstance(r, CondRegion):
-            # prefetch under a condition is not unconditionally hoistable
+        if isinstance(r, (CondRegion, WhileRegion)):
+            # prefetch under a condition/guard is not unconditionally
+            # hoistable (the branch or while body may never execute)
             return r
         return r
 

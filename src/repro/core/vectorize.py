@@ -15,17 +15,17 @@ back to exact mode — equivalence is never compromised for speed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..relational.table import Table
-from .regions import (Assign, BasicBlock, CacheByColumn, CollectionAdd,
-                      CondRegion, IBin, ICacheLookup, ICall, IConst, IEmptyList,
-                      IEmptyMap, IField, ILen, INav, IQuery, IVar, LoopRegion,
-                      MapPut, NoOp, Region, SeqRegion, Stmt, UpdateRow,
-                      _BIN_OPS, _FUNCTIONS)
+from .regions import (Assign, BasicBlock, BreakStmt, CollectionAdd, CondRegion,
+                      ContinueStmt, IBin, ICacheLookup, ICall, IConst, IField,
+                      ILen, INav, IVar, LoopRegion, MapPut, NoOp, Region,
+                      ReturnStmt, SeqRegion, Stmt, UpdateRow, _BIN_OPS,
+                      _FUNCTIONS)
 
 __all__ = ["analyze_loop", "try_exec_loop_fast"]
 
@@ -85,11 +85,32 @@ def analyze_loop(r: LoopRegion, invariants: Dict[str, object]) -> Optional[LoopP
     rowtmps: set = set()
     scalartmps: set = set()
     accs: List[str] = []
+    # Soundness rule for cross-iteration state: a statement may reference a
+    # body-ASSIGNED variable only after its defining statement in body order
+    # (then its per-row column — including an accumulator's running value —
+    # is available). Referencing it BEFORE its definition means reading the
+    # previous iteration's value, which has no columnar form outside the
+    # matched `acc = acc <op> x` shape; those loops run exact.
+    body_defs = {s.target for s, _ in flat
+                 if isinstance(s, Assign)}
+    defined: set = set()
+
+    def refs_ok(e) -> bool:
+        return all(nm not in body_defs or nm in defined
+                   for nm in e.free_vars())
+
     for stmt, guard in flat:
         if isinstance(stmt, tuple) and stmt[0] == "__guard__":
-            if not _is_pure_vec(stmt[1], rowvars, rowtmps, scalartmps):
+            if not (_is_pure_vec(stmt[1], rowvars, rowtmps, scalartmps)
+                    and refs_ok(stmt[1])):
                 return None
             continue
+        if isinstance(stmt, (BreakStmt, ContinueStmt, ReturnStmt)):
+            # early exit makes iteration order observable: which rows ran
+            # depends on per-row state, so columnar execution is unsound —
+            # every invocation (batched ones included) falls back to the
+            # exact row-at-a-time interpreter, which honors the exit point
+            return None
         if isinstance(stmt, Assign):
             e = stmt.expr
             if isinstance(e, INav):
@@ -98,40 +119,52 @@ def analyze_loop(r: LoopRegion, invariants: Dict[str, object]) -> Optional[LoopP
                 if guard is not None:
                     return None  # guarded nav: cache-state depends on mask order; exact only
                 rowtmps.add(stmt.target)
+                defined.add(stmt.target)
                 continue
             if isinstance(e, ICacheLookup) and not e.all_matches:
-                if not _is_pure_vec(e.keyexpr, rowvars, rowtmps, scalartmps):
+                if not (_is_pure_vec(e.keyexpr, rowvars, rowtmps, scalartmps)
+                        and refs_ok(e.keyexpr)):
                     return None
                 rowtmps.add(stmt.target)
+                defined.add(stmt.target)
                 continue
             # scalar accumulator: acc = acc <op> expr | expr <op> acc
-            if isinstance(e, IBin) and e.op in _ACC_OPS:
+            if isinstance(e, IBin) and e.op in _ACC_OPS \
+                    and stmt.target not in defined:
                 l_is_acc = isinstance(e.left, IVar) and e.left.name == stmt.target
                 r_is_acc = isinstance(e.right, IVar) and e.right.name == stmt.target
                 if l_is_acc != r_is_acc:
                     other = e.right if l_is_acc else e.left
-                    if _is_pure_vec(other, rowvars, rowtmps, scalartmps):
+                    if _is_pure_vec(other, rowvars, rowtmps, scalartmps) \
+                            and refs_ok(other):
                         if stmt.target not in accs:
                             accs.append(stmt.target)
                         scalartmps.add(stmt.target)
+                        defined.add(stmt.target)
                         continue
                     return None
-            if _is_pure_vec(e, rowvars, rowtmps, scalartmps):
+            if _is_pure_vec(e, rowvars, rowtmps, scalartmps) and refs_ok(e):
                 scalartmps.add(stmt.target)
+                defined.add(stmt.target)
                 continue
             return None
         if isinstance(stmt, CollectionAdd):
-            if not _is_pure_vec(stmt.expr, rowvars, rowtmps, scalartmps):
+            if not (_is_pure_vec(stmt.expr, rowvars, rowtmps, scalartmps)
+                    and refs_ok(stmt.expr)):
                 return None
             continue
         if isinstance(stmt, MapPut):
             if not (_is_pure_vec(stmt.keyexpr, rowvars, rowtmps, scalartmps)
-                    and _is_pure_vec(stmt.valexpr, rowvars, rowtmps, scalartmps)):
+                    and refs_ok(stmt.keyexpr)
+                    and _is_pure_vec(stmt.valexpr, rowvars, rowtmps, scalartmps)
+                    and refs_ok(stmt.valexpr)):
                 return None
             continue
         if isinstance(stmt, UpdateRow):
             if not (_is_pure_vec(stmt.val, rowvars, rowtmps, scalartmps)
-                    and _is_pure_vec(stmt.keyexpr, rowvars, rowtmps, scalartmps)):
+                    and refs_ok(stmt.val)
+                    and _is_pure_vec(stmt.keyexpr, rowvars, rowtmps, scalartmps)
+                    and refs_ok(stmt.keyexpr)):
                 return None
             continue
         if isinstance(stmt, NoOp):

@@ -7,7 +7,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def flash_attention_ref(q, k, v, causal: bool = True,

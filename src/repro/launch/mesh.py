@@ -8,8 +8,7 @@ and smoke tests must keep seeing 1 device.
 
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

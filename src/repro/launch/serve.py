@@ -14,7 +14,7 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

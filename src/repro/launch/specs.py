@@ -6,14 +6,10 @@ dry-run lowers.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import SHAPES
 from ..models import forward, init_params, loss_fn, make_caches

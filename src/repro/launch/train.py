@@ -20,13 +20,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import Checkpointer
 from ..data import PipelineConfig, Prefetcher, SyntheticLM

@@ -10,7 +10,7 @@ hybrids, MoE (top-1 and top-k), enc-dec, and modality-frontend stubs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 __all__ = ["ArchConfig", "register_arch", "get_arch", "list_archs"]
 
@@ -185,10 +185,12 @@ def register_arch(cfg: ArchConfig) -> ArchConfig:
 
 def get_arch(name: str) -> ArchConfig:
     if name not in _REGISTRY:
-        import repro.configs  # noqa: F401  (registers all assigned archs)
+        import importlib
+        importlib.import_module("repro.configs")  # registers all assigned archs
     return _REGISTRY[name]
 
 
 def list_archs():
-    import repro.configs  # noqa: F401
+    import importlib
+    importlib.import_module("repro.configs")  # registers all assigned archs
     return sorted(_REGISTRY)

@@ -21,14 +21,11 @@ distributed planner emits these policies.
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .arch import ArchConfig
 

@@ -19,19 +19,16 @@ as precomputed patch/frame embeddings of shape (B, T, d_model).
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .arch import ArchConfig
 from .layers import (NULL_POLICY, attention_gqa, attention_mla, embed,
                      init_attention, init_embed, init_mlp, init_moe,
-                     init_mamba2, init_rwkv6, mamba2_block, mlp, moe,
-                     rms_norm, rwkv6_block, unembed, init_rms, dense_init)
+                     init_mamba2, init_rwkv6, mamba2_block, mlp, moe, rms_norm,
+                     rwkv6_block, unembed, init_rms)
 
 Params = Dict[str, Any]
 
@@ -356,7 +353,6 @@ def _forward_encdec(params, cfg, h_dec, positions, caches, idx, pol, enc_inputs)
 
         def enc_body(carry, bp):
             hh = carry
-            from .layers import attention_gqa as ag
             x = rms_norm(hh, bp["ln1"], cfg.norm_eps)
             B, T, d = x.shape
             H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd

@@ -1,44 +1,60 @@
-"""The paper's example programs and workloads, via the tracing frontend.
+"""The paper's example programs and workloads, as plain Python functions.
 
   * ``make_p0 / make_p1 / make_p2`` — Fig. 3 (Hibernate N+1 / SQL join /
     prefetch) over TPC-DS-sized ``orders`` / ``customer`` tables.
   * ``make_m0`` — Fig. 7 (dependent aggregations: sum + cumulative sum).
   * ``make_wilos_<X>`` — one representative program per Wilos pattern A–F
     (Fig. 14), matching the paper's descriptions.
+  * ``make_scan`` — a while/early-exit worklist program (beyond the paper's
+    Sec. V limitations): state-by-state triage with a data-dependent stop.
   * data generators with configurable cardinalities, many-to-one ratio and
     predicate selectivity (Sec. VIII experiment setup).
 
-All programs are written against ``repro.api.ProgramBuilder`` — straight-line
-code with ``with``-scoped loops and conditionals — instead of hand-assembled
-``LoopRegion``/``SeqRegion`` trees. The builder emits byte-identical Region
-IR to the previous hand-built versions (asserted in tests/test_api.py).
+Every program is ordinary imperative Python — real ``for``/``if``/``while``
+loops, ``break``, early ``return``, ``list.append`` — compiled to Region IR
+by the AST lifter (``repro.api.lift``). The lifter lowers onto
+``repro.api.ProgramBuilder`` (the documented escape hatch for programs
+outside the liftable subset) and emits byte-identical IR to hand-built
+region trees (asserted in tests/test_lift.py and tests/test_api.py).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import numpy as np
 
-from .api.builder import ProgramBuilder, col, param, q
-from .core.regions import Program
+from .api.builder import col, param, q
+from .api.lift import (cache_lookup, lift_program, load_all, prefetch,
+                       update_row)
+from .core.regions import Program, get_function
 from .relational.database import DatabaseServer
 from .relational.table import Field, Schema, Table
 
 __all__ = [
     "make_orders_customer_db", "make_sales_db", "make_wilos_db",
-    "make_p0", "make_p1", "make_p2", "make_m0",
+    "make_p0", "make_p1", "make_p2", "make_m0", "make_scan",
     "make_wilos_a", "make_wilos_b", "make_wilos_c", "make_wilos_d",
     "make_wilos_e", "make_wilos_f", "WILOS_PROGRAMS",
 ]
 
 # make the programs' pure functions available to relational computed columns
-# (rule T4 translates imperative calls into projected scalar expressions)
+# (rule T4 translates imperative calls into projected scalar expressions);
+# the module-level names also let the plain-Python programs below run as
+# ordinary Python and are how the lifter traces the calls (by registry name)
 from .relational.algebra import register_scalar_func as _reg
-from .core.regions import get_function as _getf
+
+myFunc = get_function("myFunc")
+combine = get_function("combine")
+scale = get_function("scale")
 
 for _name in ("myFunc", "combine", "scale"):
-    _reg(_name, _getf(_name))
+    _reg(_name, get_function(_name))
+
+# ORM entity mapping for the Fig. 3 programs — the Hibernate-style
+# relationship metadata that in a real application lives in annotations,
+# passed to the lifter so ``o.customer`` traces to navigation
+ORDERS_CUSTOMER_REL = ("orders", "o_customer_sk",
+                       "customer", "c_customer_sk", "customer")
 
 
 # --------------------------------------------------------------------------
@@ -120,39 +136,42 @@ def make_wilos_db(n_big: int, ratio: int = 10, seed: int = 2) -> DatabaseServer:
 
 def make_p0() -> Program:
     """Hibernate ORM program: per-order navigation → N+1 selects."""
-    b = ProgramBuilder("P0")
-    b.relate("orders", "o_customer_sk", "customer", "c_customer_sk",
-             name="customer")
-    result = b.let("result", b.empty_list())
-    with b.loop(b.load_all("orders"), var="o", label="L3-7") as o:
-        cust = b.let("cust", o.customer)  # lazy relationship → point query
-        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
-        b.add(result, val)
-    return b.build(outputs=(result,))
+    def P0():
+        result = []
+        for o in load_all("orders"):
+            cust = o.customer  # lazy relationship → point query
+            val = myFunc(o.o_id, cust.c_birth_year)
+            result.append(val)
+        return result
+
+    return lift_program(P0, relations=[ORDERS_CUSTOMER_REL])
 
 
 def make_p1() -> Program:
     """Rewritten to a single SQL join (Fig. 3b)."""
-    b = ProgramBuilder("P1")
-    join = q("orders").join("customer", "o_customer_sk", "c_customer_sk")
-    result = b.let("result", b.empty_list())
-    with b.loop(join, var="r") as r:
-        val = b.let("val", b.call("myFunc", r.o_id, r.c_birth_year))
-        b.add(result, val)
-    return b.build(outputs=(result,))
+    def P1():
+        result = []
+        for r in q("orders").join("customer", "o_customer_sk",
+                                  "c_customer_sk"):
+            val = myFunc(r.o_id, r.c_birth_year)
+            result.append(val)
+        return result
+
+    return lift_program(P1)
 
 
 def make_p2() -> Program:
     """Rewritten to prefetch + local cache lookups (Fig. 3c)."""
-    b = ProgramBuilder("P2")
-    result = b.let("result", b.empty_list())
-    b.prefetch("customer", by="c_customer_sk")
-    with b.loop(b.load_all("orders"), var="o") as o:
-        cust = b.let("cust", b.cache_lookup("customer", "c_customer_sk",
-                                            o.o_customer_sk))
-        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
-        b.add(result, val)
-    return b.build(outputs=(result,))
+    def P2():
+        result = []
+        prefetch("customer", by="c_customer_sk")
+        for o in load_all("orders"):
+            cust = cache_lookup("customer", "c_customer_sk", o.o_customer_sk)
+            val = myFunc(o.o_id, cust.c_birth_year)
+            result.append(val)
+        return result
+
+    return lift_program(P2)
 
 
 # --------------------------------------------------------------------------
@@ -160,14 +179,16 @@ def make_p2() -> Program:
 # --------------------------------------------------------------------------
 
 def make_m0() -> Program:
-    b = ProgramBuilder("M0")
-    monthly = q("sales").select("month", "sale_amt").order_by("month")
-    total = b.let("total", 0.0)
-    csum = b.let("cSum", b.empty_map())
-    with b.loop(monthly, var="t") as t:
-        b.let("total", total + t.sale_amt)
-        b.put(csum, t.month, total)
-    return b.build(outputs=(total, csum))
+    def M0():
+        monthly = q("sales").select("month", "sale_amt").order_by("month")
+        total = 0.0
+        cSum = {}
+        for t in monthly:
+            total = total + t.sale_amt
+            cSum[t.month] = total
+        return total, cSum
+
+    return lift_program(M0)
 
 
 # --------------------------------------------------------------------------
@@ -178,82 +199,123 @@ def make_wilos_a() -> Program:
     """A: nested loops with intermittent updates. The inner loop filters an
     inner relation imperatively; the outer loop issues DB updates, so only
     the inner loop can move to SQL — or be prefetched (Cobra's choice)."""
-    b = ProgramBuilder("W_A")
-    with b.loop(b.load_all("roles"), var="x") as x:
-        cnt = b.let("cnt", 0)
-        with b.loop(b.load_all("tasks"), var="y") as y:
-            with b.when(y.t_role_id == x.r_id):
-                b.let("cnt", cnt + 1)
-        b.update_row("roles", "r_rank", cnt, "r_id", x.r_id)
-    return b.build(outputs=())
+    def W_A():
+        for x in load_all("roles"):
+            cnt = 0
+            for y in load_all("tasks"):
+                if y.t_role_id == x.r_id:
+                    cnt = cnt + 1
+            update_row("roles", "r_rank", cnt, "r_id", x.r_id)
+
+    return lift_program(W_A)
 
 
 def make_wilos_b() -> Program:
     """B: multiple aggregations in one loop — a scalar count plus a collection
     touching every row. Extracting the count to SQL adds a query (heuristic);
     Cobra keeps the original single query."""
-    b = ProgramBuilder("W_B")
-    n = b.let("n", 0)
-    items = b.let("items", b.empty_list())
-    with b.loop(b.load_all("tasks"), var="t") as t:
-        b.let("n", n + 1)
-        b.add(items, b.call("scale", t.t_hours))
-    return b.build(outputs=(n, items))
+    def W_B():
+        n = 0
+        items = []
+        for t in load_all("tasks"):
+            n = n + 1
+            items.append(scale(t.t_hours))
+        return n, items
+
+    return lift_program(W_B)
 
 
 def make_wilos_c() -> Program:
     """C: nested-loops join implemented imperatively."""
-    b = ProgramBuilder("W_C")
-    result = b.let("result", b.empty_list())
-    with b.loop(b.load_all("tasks"), var="x") as x:
-        with b.loop(b.load_all("roles"), var="y") as y:
-            with b.when(y.r_id == x.t_role_id):
-                b.add(result, b.call("combine", x.t_hours, y.r_rank))
-    return b.build(outputs=(result,))
+    def W_C():
+        result = []
+        for x in load_all("tasks"):
+            for y in load_all("roles"):
+                if y.r_id == x.t_role_id:
+                    result.append(combine(x.t_hours, y.r_rank))
+        return result
+
+    return lift_program(W_C)
 
 
 def make_wilos_d() -> Program:
     """D: a per-row 'function' (inlined) aggregating a correlated query."""
-    b = ProgramBuilder("W_D")
-    result = b.let("result", b.empty_list())
-    with b.loop(b.load_all("roles"), var="x") as x:
-        s = b.let("s", 0.0)
-        tasks_of_role = q("tasks").where(col("t_role_id").eq(param("rid"))) \
-                                  .bind(rid=x.r_id)
-        with b.loop(tasks_of_role, var="y") as y:
-            b.let("s", s + y.t_hours)
-        b.add(result, s)
-    return b.build(outputs=(result,))
+    def W_D():
+        result = []
+        for x in load_all("roles"):
+            s = 0.0
+            tasks_of_role = q("tasks").where(col("t_role_id")
+                                             .eq(param("rid"))).bind(rid=x.r_id)
+            for y in tasks_of_role:
+                s = s + y.t_hours
+            result.append(s)
+        return result
+
+    return lift_program(W_D)
 
 
 def make_wilos_e() -> Program:
     """E: the same relation filtered differently across (recursive) calls —
     modeled as a loop over a worklist issuing per-key σ queries."""
-    b = ProgramBuilder("W_E")
-    worklist = b.input("worklist", ())
-    result = b.let("result", b.empty_list())
-    with b.loop(worklist, var="wid") as wid:
-        per_key = q("tasks").where(col("t_role_id").eq(param("rid"))) \
-                            .bind(rid=wid)
-        with b.loop(per_key, var="y") as y:
-            b.add(result, y.t_hours)
-    return b.build(outputs=(result,))
+    def W_E(worklist=()):
+        result = []
+        for wid in worklist:
+            per_key = q("tasks").where(col("t_role_id")
+                                       .eq(param("rid"))).bind(rid=wid)
+            for y in per_key:
+                result.append(y.t_hours)
+        return result
+
+    return lift_program(W_E)
 
 
 def make_wilos_f() -> Program:
     """F: different column subsets of one relation used by different callees —
     two narrow queries vs. one prefetch of the whole relation."""
-    b = ProgramBuilder("W_F")
-    hours = b.let("hours", 0.0)
-    with b.loop(q("tasks").select("t_hours"), var="a") as a:
-        b.let("hours", hours + a.t_hours)
-    states = b.let("states", 0)
-    with b.loop(q("tasks").select("t_state"), var="b") as row:
-        b.let("states", states + row.t_state)
-    return b.build(outputs=(hours, states))
+    def W_F():
+        hours = 0.0
+        for a in q("tasks").select("t_hours"):
+            hours = hours + a.t_hours
+        states = 0
+        for b in q("tasks").select("t_state"):
+            states = states + b.t_state
+        return hours, states
+
+    return lift_program(W_F)
 
 
 WILOS_PROGRAMS = {
     "A": make_wilos_a, "B": make_wilos_b, "C": make_wilos_c,
     "D": make_wilos_d, "E": make_wilos_e, "F": make_wilos_f,
 }
+
+
+# --------------------------------------------------------------------------
+# SCAN — while + early exit (beyond the paper's Sec. V limitations)
+# --------------------------------------------------------------------------
+
+def make_scan() -> Program:
+    """While-loop triage with a data-dependent stop: walk task states in
+    priority order, accumulating per-state hours via a correlated query,
+    until the running total crosses the threshold (``break``).
+
+    The ``while`` itself and the early exit stay imperative — no F-IR form
+    exists for a guard whose iteration count is data dependent — but the
+    inner aggregation loop is still rewritten by T5 into a correlated
+    ``SELECT SUM(t_hours) WHERE t_state = :k`` whose binding re-evaluates
+    each round, so the cost-based win survives inside the guarded region."""
+    def SCAN(threshold=100.0, max_state=5):
+        state = 0
+        total = 0.0
+        while state < max_state:
+            s = 0.0
+            for t in q("tasks").where(col("t_state").eq(param("k"))) \
+                               .bind(k=state):
+                s = s + t.t_hours
+            total = total + s
+            state = state + 1
+            if total > threshold:
+                break
+        return total, state
+
+    return lift_program(SCAN)

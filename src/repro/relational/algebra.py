@@ -15,8 +15,7 @@ combinators, ``Func``) evaluate column-vectorized over a table.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

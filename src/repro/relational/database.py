@@ -27,7 +27,6 @@ client-side prefetch cache (``cacheByColumn`` / ``lookup``, footnote 3).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
@@ -315,7 +314,7 @@ class DatabaseServer:
                              first_row_s=min(blocking, total), last_row_s=total)
 
     def _selectivity(self, node: Select) -> float:
-        from .algebra import Cmp, Col, Lit, Param, BoolOp
+        from .algebra import Cmp, Col, BoolOp
         p = node.pred
         if isinstance(p, BoolOp):
             l = self._selectivity(Select(p.left, node.child))

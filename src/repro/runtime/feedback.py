@@ -14,12 +14,23 @@ stats versions then invalidate exactly the plans that touch those tables;
 everything else stays hot. The serving runtime recompiles the affected
 executables, and the memo search may pick a different winner (e.g. P1 join
 → P2 prefetch) under the fresh statistics.
+
+Two drift signals per query site:
+
+  * **cardinality** (``kind="rows"``) — observed vs estimated row count;
+  * **wall-clock** (``kind="wall_clock"``) — observed execution time vs the
+    cost the planner would charge this query NOW (``CostModel.query_cost``).
+    This catches shifts that leave row counts stable — wider payloads,
+    selectivity moving between columns, server-side regressions — which the
+    row signal is blind to. Wall-clock is noisier, so its threshold
+    (``cost_drift_threshold``) defaults looser, and it only fires where the
+    row signal did not (no double-counted events per site).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..api.cache import query_tables
 
@@ -28,15 +39,22 @@ __all__ = ["DriftEvent", "FeedbackController"]
 
 @dataclasses.dataclass(frozen=True)
 class DriftEvent:
-    """One query site whose observed cardinality left the trusted band."""
+    """One query site whose observed behaviour left the trusted band."""
 
     sql: str
     tables: Tuple[str, ...]
     est_rows: float
     observed_rows: float
     ratio: float
+    kind: str = "rows"          # "rows" | "wall_clock"
+    est_s: float = 0.0          # wall_clock events: modeled query cost
+    observed_s: float = 0.0     # wall_clock events: observed execution time
 
     def describe(self) -> str:
+        if self.kind == "wall_clock":
+            return (f"{self.sql!r}: est {self.est_s:.4g}s, observed "
+                    f"{self.observed_s:.4g}s ({self.ratio:.1f}x wall-clock "
+                    f"drift) -> tables {list(self.tables)}")
         return (f"{self.sql!r}: est {self.est_rows:.0f} rows, observed "
                 f"{self.observed_rows:.0f} ({self.ratio:.1f}x drift) "
                 f"-> tables {list(self.tables)}")
@@ -45,11 +63,16 @@ class DriftEvent:
 class FeedbackController:
     """Observes served executions; decides when statistics must be refreshed."""
 
-    def __init__(self, session, drift_threshold: float = 3.0):
+    def __init__(self, session, drift_threshold: float = 3.0,
+                 cost_drift_threshold: Optional[float] = 10.0):
         if drift_threshold <= 1.0:
             raise ValueError("drift_threshold must be > 1 (a ratio)")
+        if cost_drift_threshold is not None and cost_drift_threshold <= 1.0:
+            raise ValueError("cost_drift_threshold must be > 1 (a ratio) "
+                             "or None to disable wall-clock drift")
         self.session = session
         self.drift_threshold = drift_threshold
+        self.cost_drift_threshold = cost_drift_threshold
         self.events: List[DriftEvent] = []
         self.refreshes = 0
         self.observed_queries = 0
@@ -58,6 +81,12 @@ class FeedbackController:
         self._sites: Dict[str, List[float]] = {}
 
     # ------------------------------------------------------------- observing
+    def _estimated_cost_s(self, q) -> float:
+        """What the cost model would charge this query under CURRENT stats —
+        the planner's promise the observed wall-clock is held against."""
+        from ..core.cost import CostModel
+        return CostModel(self.session.db, self.session.catalog).query_cost(q)
+
     def observe(self, observations: Sequence[Tuple[object, int, float]]
                 ) -> List[str]:
         """Compare observed (query, rows, wall_s) against current estimates;
@@ -82,6 +111,21 @@ class FeedbackController:
                 self.events.append(DriftEvent(
                     sql=sql, tables=tables, est_rows=est,
                     observed_rows=float(n_rows), ratio=float(ratio)))
+                continue  # the row signal already flagged this site
+            if self.cost_drift_threshold is None or not wall_s:
+                continue
+            est_s = self._estimated_cost_s(q)
+            if est_s <= 0:
+                continue
+            cratio = max(wall_s / est_s, est_s / wall_s)
+            if cratio > self.cost_drift_threshold:
+                tables = query_tables(q)
+                drifted.update(tables)
+                self.events.append(DriftEvent(
+                    sql=sql, tables=tables, est_rows=est,
+                    observed_rows=float(n_rows), ratio=float(cratio),
+                    kind="wall_clock", est_s=float(est_s),
+                    observed_s=float(wall_s)))
         return sorted(drifted)
 
     # -------------------------------------------------------------- reacting
@@ -99,6 +143,8 @@ class FeedbackController:
             "observed_queries": self.observed_queries,
             "observed_wall_s": self.observed_wall_s,
             "drift_events": len(self.events),
+            "drift_events_wall_clock": sum(
+                1 for e in self.events if e.kind == "wall_clock"),
             "stats_refreshes": self.refreshes,
             "sites": {sql: {"n": int(n), "avg_rows": rows / max(n, 1),
                             "wall_s": wall}

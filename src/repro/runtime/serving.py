@@ -38,7 +38,9 @@ __all__ = ["ServingRuntime", "serve"]
 
 class ServingRuntime:
     def __init__(self, session, *, store=None, batch_size: int = 16,
-                 drift_threshold: float = 3.0, feedback: bool = True):
+                 drift_threshold: float = 3.0,
+                 cost_drift_threshold: Optional[float] = 10.0,
+                 feedback: bool = True):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.session = session
@@ -47,7 +49,9 @@ class ServingRuntime:
             session.plan_store = PlanStore.coerce(store)
         self.batch_size = batch_size
         self.feedback: Optional[FeedbackController] = (
-            FeedbackController(session, drift_threshold) if feedback else None)
+            FeedbackController(session, drift_threshold,
+                               cost_drift_threshold=cost_drift_threshold)
+            if feedback else None)
         self._programs: Dict[str, Program] = {}
         self._executables: Dict[str, object] = {}
         # telemetry

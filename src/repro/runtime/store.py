@@ -23,14 +23,23 @@ cost, stats token) for inspection and the example scripts. Writes are
 atomic (tempfile + ``os.replace``) so concurrent sessions sharing a store
 directory never observe torn entries.
 
-Codegen alpha-normalization (``core.fir.NameGen``) is what makes this
-dedupe possible: two sessions compiling the same program emit byte-identical
-IR, so the stored artifact is canonical rather than run-specific.
+**Cold-compile races** resolve first-writer-wins: two sessions compiling
+the same cold program both run the memo search, but :meth:`put` re-reads
+before writing — when a valid entry for the same statistics already landed,
+the second writer DISCARDS its own result and returns the stored one, so
+every session serves the one canonical plan (``races`` counts these). A
+racer that slips between the re-read and the replace merely overwrites with
+an equivalent artifact: alpha-normalized codegen (``core.fir.NameGen``)
+makes two compilations of the same program under the same statistics
+byte-identical, which is also what makes the dedupe meaningful at all.
+
+``max_entries`` bounds the directory: stores past the bound GC their
+least-recently-used plans (access order approximated by file mtime, which
+:meth:`get` refreshes on every hit).
 """
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os
@@ -43,16 +52,28 @@ __all__ = ["PlanStore"]
 _FORMAT_VERSION = 1
 
 
+class _Corrupt:
+    """Sentinel: an entry file exists but cannot be trusted."""
+
+
+_CORRUPT = _Corrupt()
+
+
 class PlanStore:
     """A directory of compiled plans shared by many sessions."""
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1 (or None: unbounded)")
         self.root = os.fspath(root)
         os.makedirs(self.root, exist_ok=True)
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
         self.stale = 0
         self.puts = 0
+        self.races = 0
+        self.gc_evictions = 0
         self.errors = 0
 
     # ----------------------------------------------------------- addressing
@@ -82,30 +103,60 @@ class PlanStore:
         program at all) from *stale* (an entry exists but was compiled
         against different table statistics)."""
         path = self._path(self.logical_key(key))
-        if not os.path.exists(path):
+        payload = self._load(path)
+        if payload is None:
             self.misses += 1
+            return None
+        if payload is _CORRUPT:
+            self.errors += 1
+            return None
+        if not self._valid(payload, key, stats_fp):
+            self.stale += 1
+            return None
+        self.hits += 1
+        try:
+            os.utime(path)  # refresh LRU recency for the GC bound
+        except OSError:
+            pass
+        return payload["result"]
+
+    def _load(self, path: str):
+        """None = no entry; _CORRUPT = unreadable/wrong format."""
+        if not os.path.exists(path):
             return None
         try:
             with open(path, "rb") as f:
                 payload = pickle.load(f)
+        except FileNotFoundError:
+            return None  # GC'd between the exists check and the open
         except Exception:
-            self.errors += 1
-            return None
-        if payload.get("format") != _FORMAT_VERSION:
-            self.errors += 1
-            return None
-        if stats_fp is not None:
-            valid = payload.get("stats_fp") == stats_fp
-        else:
-            valid = payload["stats_token"] == key.stats_version
-        if not valid:
-            self.stale += 1
-            return None
-        self.hits += 1
-        return payload["result"]
+            return _CORRUPT
+        if not isinstance(payload, dict) \
+                or payload.get("format") != _FORMAT_VERSION:
+            return _CORRUPT
+        return payload
 
-    def put(self, key, result, stats_fp=None) -> None:
+    @staticmethod
+    def _valid(payload, key, stats_fp) -> bool:
+        if stats_fp is not None:
+            return payload.get("stats_fp") == stats_fp
+        return payload["stats_token"] == key.stats_version
+
+    def put(self, key, result, stats_fp=None):
+        """Persist ``result``; returns the CANONICAL stored result.
+
+        First-writer-wins with re-read: when another session already stored
+        a plan for this key that is valid for the same statistics, this
+        session's freshly-compiled result is discarded and the stored one
+        returned — callers should serve the return value, so racing
+        sessions converge on one canonical plan. A stale existing entry
+        (different statistics) is superseded as before."""
         lk = self.logical_key(key)
+        path = self._path(lk)
+        existing = self._load(path)
+        if isinstance(existing, dict) and self._valid(existing, key, stats_fp):
+            self.races += 1
+            return existing["result"]
         payload = {
             "format": _FORMAT_VERSION,
             "program_fp": key.program_fp,
@@ -117,18 +168,52 @@ class PlanStore:
         try:
             with os.fdopen(fd, "wb") as f:
                 pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
-            os.replace(tmp, self._path(lk))
+            os.replace(tmp, path)
         except Exception:
             self.errors += 1
             if os.path.exists(tmp):
                 os.unlink(tmp)
-            return
+            return result
         self.puts += 1
         try:
             # best-effort metadata sidecar: concurrent writers may lose an
             # index record to the read-modify-write race, but never a plan —
             # entry validity comes from the .plan payload alone
             self._index_add(lk, key, result)
+        except Exception:
+            self.errors += 1
+        self._gc()
+        return result
+
+    # -------------------------------------------------------------------- GC
+    def _gc(self) -> None:
+        """Drop least-recently-used plans beyond ``max_entries``."""
+        if self.max_entries is None:
+            return
+        try:
+            entries = []
+            for n in os.listdir(self.root):
+                if not n.endswith(".plan"):
+                    continue
+                p = os.path.join(self.root, n)
+                try:
+                    entries.append((os.path.getmtime(p), p, n[:-5]))
+                except OSError:
+                    continue  # concurrently removed
+            excess = len(entries) - self.max_entries
+            if excess <= 0:
+                return
+            entries.sort()  # oldest mtime (= least recently used) first
+            dropped = []
+            for _, p, lk in entries[:excess]:
+                try:
+                    os.unlink(p)
+                    dropped.append(lk)
+                    self.gc_evictions += 1
+                except OSError:
+                    pass
+            if dropped:
+                self._index_drop(dropped)
         except Exception:
             self.errors += 1
 
@@ -150,6 +235,18 @@ class PlanStore:
             json.dump(index, f, indent=1, sort_keys=True)
         os.replace(tmp, self._index_path())
 
+    def _index_drop(self, keys) -> None:
+        try:
+            index = self.index()
+            for lk in keys:
+                index.pop(lk, None)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(index, f, indent=1, sort_keys=True)
+            os.replace(tmp, self._index_path())
+        except Exception:
+            pass  # sidecar only; the .plan files are the source of truth
+
     def index(self) -> Dict[str, Dict]:
         try:
             with open(self._index_path()) as f:
@@ -168,4 +265,5 @@ class PlanStore:
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self), "hits": self.hits,
                 "misses": self.misses, "stale": self.stale,
-                "puts": self.puts, "errors": self.errors}
+                "puts": self.puts, "races": self.races,
+                "gc_evictions": self.gc_evictions, "errors": self.errors}

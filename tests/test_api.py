@@ -275,7 +275,6 @@ class TestTraceDecorator:
 
         assert isinstance(task_hours, Executable)
         # the traced program matches the hand-built equivalent (make_wilos_e)
-        from repro.api import program_fingerprint
         src = task_hours.source
         assert src.inputs == (("worklist", ()),)
         r1 = task_hours.run(worklist=[1, 3])

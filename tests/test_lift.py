@@ -1,0 +1,829 @@
+"""The plain-Python frontend: AST lifting, while/early-exit regions.
+
+Issue acceptance:
+  * every paper program in ``repro.programs``, written as a plain Python
+    function, lifts to Region IR **byte-identical** (same ``Program.key()``
+    and fingerprint) to the hand-built region trees;
+  * a while/early-exit program (SCAN) compiles, executes correctly under
+    both ``run()`` and ``run_batch()`` (per-invocation early exit), and
+    shows a cost-based rewrite win in its PlanReport;
+  * rendering a generated builder program as plain Python and lifting it
+    round-trips to identical IR keys (property test, hypothesis-gated);
+  * unsupported constructs raise ``LiftError`` diagnostics that point at
+    the offending source line.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (CobraSession, Executable, LiftError, ProgramBuilder,
+                       col, lift_program, lift_source, load_all, param,
+                       prefetch, program_fingerprint, q)
+from repro.core import CostCatalog
+from repro.core.regions import (BasicBlock, CondRegion, IBin, IConst, IField,
+                                IVar, Program, WhileRegion, get_function)
+from repro.programs import (ORDERS_CUSTOMER_REL, make_m0,
+                            make_orders_customer_db, make_p0, make_p1, make_p2,
+                            make_scan, make_wilos_a, make_wilos_b,
+                            make_wilos_c, make_wilos_d, make_wilos_db,
+                            make_wilos_e, make_wilos_f)
+from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
+
+myFunc = get_function("myFunc")
+combine = get_function("combine")
+scale = get_function("scale")
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # optional dev dependency (see pyproject.toml)
+    HAS_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------------
+# Byte-identical: plain-Python programs == builder-built trees
+# --------------------------------------------------------------------------
+# The builder versions below are the pre-lifter renditions of every paper
+# program (the exact code that used to live in repro.programs); the lifted
+# plain-Python versions must emit the same Region IR byte for byte.
+
+def builder_p0() -> Program:
+    b = ProgramBuilder("P0")
+    b.relate("orders", "o_customer_sk", "customer", "c_customer_sk",
+             name="customer")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("orders"), var="o") as o:
+        cust = b.let("cust", o.customer)
+        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
+
+
+def builder_p1() -> Program:
+    b = ProgramBuilder("P1")
+    join = q("orders").join("customer", "o_customer_sk", "c_customer_sk")
+    result = b.let("result", b.empty_list())
+    with b.loop(join, var="r") as r:
+        val = b.let("val", b.call("myFunc", r.o_id, r.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
+
+
+def builder_p2() -> Program:
+    b = ProgramBuilder("P2")
+    result = b.let("result", b.empty_list())
+    b.prefetch("customer", by="c_customer_sk")
+    with b.loop(b.load_all("orders"), var="o") as o:
+        cust = b.let("cust", b.cache_lookup("customer", "c_customer_sk",
+                                            o.o_customer_sk))
+        val = b.let("val", b.call("myFunc", o.o_id, cust.c_birth_year))
+        b.add(result, val)
+    return b.build(outputs=(result,))
+
+
+def builder_m0() -> Program:
+    b = ProgramBuilder("M0")
+    monthly = q("sales").select("month", "sale_amt").order_by("month")
+    total = b.let("total", 0.0)
+    csum = b.let("cSum", b.empty_map())
+    with b.loop(monthly, var="t") as t:
+        b.let("total", total + t.sale_amt)
+        b.put(csum, t.month, total)
+    return b.build(outputs=(total, csum))
+
+
+def builder_wilos_a() -> Program:
+    b = ProgramBuilder("W_A")
+    with b.loop(b.load_all("roles"), var="x") as x:
+        cnt = b.let("cnt", 0)
+        with b.loop(b.load_all("tasks"), var="y") as y:
+            with b.when(y.t_role_id == x.r_id):
+                b.let("cnt", cnt + 1)
+        b.update_row("roles", "r_rank", cnt, "r_id", x.r_id)
+    return b.build(outputs=())
+
+
+def builder_wilos_b() -> Program:
+    b = ProgramBuilder("W_B")
+    n = b.let("n", 0)
+    items = b.let("items", b.empty_list())
+    with b.loop(b.load_all("tasks"), var="t") as t:
+        b.let("n", n + 1)
+        b.add(items, b.call("scale", t.t_hours))
+    return b.build(outputs=(n, items))
+
+
+def builder_wilos_c() -> Program:
+    b = ProgramBuilder("W_C")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("tasks"), var="x") as x:
+        with b.loop(b.load_all("roles"), var="y") as y:
+            with b.when(y.r_id == x.t_role_id):
+                b.add(result, b.call("combine", x.t_hours, y.r_rank))
+    return b.build(outputs=(result,))
+
+
+def builder_wilos_d() -> Program:
+    b = ProgramBuilder("W_D")
+    result = b.let("result", b.empty_list())
+    with b.loop(b.load_all("roles"), var="x") as x:
+        s = b.let("s", 0.0)
+        tasks_of_role = q("tasks").where(col("t_role_id").eq(param("rid"))) \
+                                  .bind(rid=x.r_id)
+        with b.loop(tasks_of_role, var="y") as y:
+            b.let("s", s + y.t_hours)
+        b.add(result, s)
+    return b.build(outputs=(result,))
+
+
+def builder_wilos_e() -> Program:
+    b = ProgramBuilder("W_E")
+    worklist = b.input("worklist", ())
+    result = b.let("result", b.empty_list())
+    with b.loop(worklist, var="wid") as wid:
+        per_key = q("tasks").where(col("t_role_id").eq(param("rid"))) \
+                            .bind(rid=wid)
+        with b.loop(per_key, var="y") as y:
+            b.add(result, y.t_hours)
+    return b.build(outputs=(result,))
+
+
+def builder_wilos_f() -> Program:
+    b = ProgramBuilder("W_F")
+    hours = b.let("hours", 0.0)
+    with b.loop(q("tasks").select("t_hours"), var="a") as a:
+        b.let("hours", hours + a.t_hours)
+    states = b.let("states", 0)
+    with b.loop(q("tasks").select("t_state"), var="b") as row:
+        b.let("states", states + row.t_state)
+    return b.build(outputs=(hours, states))
+
+
+def builder_scan() -> Program:
+    b = ProgramBuilder("SCAN")
+    threshold = b.input("threshold", 100.0)
+    max_state = b.input("max_state", 5)
+    state = b.let("state", 0)
+    total = b.let("total", 0.0)
+    with b.while_(state < max_state):
+        s = b.let("s", 0.0)
+        per_state = q("tasks").where(col("t_state").eq(param("k"))) \
+                              .bind(k=state)
+        with b.loop(per_state, var="t") as t:
+            b.let("s", s + t.t_hours)
+        b.let("total", total + s)
+        b.let("state", state + 1)
+        with b.when(total > threshold):
+            b.brk()
+    return b.build(outputs=(total, state))
+
+
+PAPER_PAIRS = [
+    ("P0", make_p0, builder_p0), ("P1", make_p1, builder_p1),
+    ("P2", make_p2, builder_p2), ("M0", make_m0, builder_m0),
+    ("W_A", make_wilos_a, builder_wilos_a),
+    ("W_B", make_wilos_b, builder_wilos_b),
+    ("W_C", make_wilos_c, builder_wilos_c),
+    ("W_D", make_wilos_d, builder_wilos_d),
+    ("W_E", make_wilos_e, builder_wilos_e),
+    ("W_F", make_wilos_f, builder_wilos_f),
+    ("SCAN", make_scan, builder_scan),
+]
+
+
+class TestByteIdenticalLifting:
+    @pytest.mark.parametrize("name,lifted,hand", PAPER_PAIRS,
+                             ids=[p[0] for p in PAPER_PAIRS])
+    def test_program_key_and_fingerprint_match(self, name, lifted, hand):
+        lp, hp = lifted(), hand()
+        assert lp.key() == hp.key()
+        assert program_fingerprint(lp) == program_fingerprint(hp)
+        assert lp.inputs == hp.inputs
+
+    def test_lifted_inputs_carry_defaults(self):
+        p = make_scan()
+        assert p.inputs == (("threshold", 100.0), ("max_state", 5))
+
+
+# --------------------------------------------------------------------------
+# Lowering details
+# --------------------------------------------------------------------------
+
+class TestLoweringDetails:
+    def test_augmented_assignment_matches_plain_form(self):
+        def f_plain():
+            total = 0.0
+            for t in load_all("tasks"):
+                total = total + t.t_hours
+            return total
+
+        def f_aug():
+            total = 0.0
+            for t in load_all("tasks"):
+                total += t.t_hours
+            return total
+
+        assert lift_program(f_plain, name="F").key() == \
+            lift_program(f_aug, name="F").key()
+
+    def test_static_left_operand_preserves_order(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                if 2 < t.t_state:
+                    n = n + 1
+            return n
+
+        p = lift_program(f)
+        cond = p.body.parts[1].body
+        assert cond.pred.key() == IBin("<", IConst(2),
+                                       IField(IVar("t"), "t_state")).key()
+
+    def test_elif_chain_lowers_to_nested_otherwise(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                if t.t_state == 0:
+                    n = n + 1
+                elif t.t_state == 1:
+                    n = n + 2
+                else:
+                    n = n + 3
+            return n
+
+        p = lift_program(f)
+        cond = p.body.parts[1].body
+        assert isinstance(cond, CondRegion) and cond.else_r is not None
+        assert isinstance(cond.else_r, CondRegion)
+        assert cond.else_r.else_r is not None
+
+    def test_continue_lowers_and_executes(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                if t.t_state == 0:
+                    continue
+                n = n + 1
+            return n
+
+        p = lift_program(f)
+        body = p.body.parts[1].body
+        assert isinstance(body.then_r if isinstance(body, CondRegion)
+                          else body.parts[0].then_r, BasicBlock)
+        db = make_wilos_db(200)
+        session = CobraSession(db, CostCatalog(FAST_LOCAL))
+        n_not0 = int((np.asarray(db.table("tasks").column("t_state")) != 0).sum())
+        assert session.execute(p)["n"] == n_not0
+        assert session.execute(p, mode="exact")["n"] == n_not0
+
+    def test_early_return_stops_execution(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                n = n + 1
+                if n >= 7:
+                    return n
+            return n
+
+        p = lift_program(f)
+        db = make_wilos_db(300)
+        session = CobraSession(db, CostCatalog(FAST_LOCAL))
+        assert session.execute(p)["n"] == 7
+        assert session.execute(p, mode="exact")["n"] == 7
+
+    def test_return_expression_gets_canonical_name(self):
+        def f():
+            total = 0.0
+            for t in load_all("tasks"):
+                total = total + t.t_hours
+            return total * 2
+
+        p = lift_program(f)
+        assert p.outputs == ("_ret0",)
+        db = make_wilos_db(100)
+        session = CobraSession(db, CostCatalog(FAST_LOCAL))
+        out = session.execute(p)
+        hours = float(np.asarray(db.table("tasks").column("t_hours"),
+                                 dtype=np.float64).sum())
+        assert out["_ret0"] == pytest.approx(2 * hours, rel=1e-5)
+
+    def test_mixed_return_sites_converge_on_canonical_names(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                n = n + 1
+                if n >= 3:
+                    return n + 100
+            return n + 200
+
+        p = lift_program(f)
+        db = make_wilos_db(100)
+        session = CobraSession(db, CostCatalog(FAST_LOCAL))
+        assert session.execute(p)["_ret0"] == 103
+
+    def test_closure_scalar_becomes_constant(self):
+        cap = 17
+
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                n = n + cap
+            return n
+
+        p = lift_program(f)
+        body = p.body.parts[1].body
+        assert body.stmt.expr.key() == IBin("+", IVar("n"), IConst(17)).key()
+
+    def test_user_helper_shadowing_registered_name_errors_loudly(self):
+        """A local callable that happens to share a registered function's
+        name must NOT be silently replaced by the registry entry."""
+        def scale(x):  # shadows the registered "scale" with different math
+            return x * 1000
+
+        def f():
+            out = []
+            for t in load_all("tasks"):
+                out.append(scale(t.t_hours))
+            return out
+
+        with pytest.raises(LiftError, match="register_function"):
+            lift_program(f)
+
+    def test_registered_alias_same_object_still_traces(self):
+        my_scale = scale  # the registered callable itself, under its name
+
+        def f():
+            out = []
+            for t in load_all("tasks"):
+                out.append(my_scale(t.t_hours))
+            return out
+
+        assert "scale(" in repr(lift_program(f).body)
+
+    def test_return_of_trace_time_binding_rejected(self):
+        """Returning a name bound to a trace-time value (a query handle)
+        must raise, not silently compile to a None output."""
+        def f():
+            rows = q("tasks").select("t_hours")
+            return rows
+
+        with pytest.raises(LiftError, match="trace-time"):
+            lift_program(f)
+
+    def test_lift_source_keyword_only_params(self):
+        src = """
+def F(a=1, *, limit=3):
+    n = 0
+    for t in load_all("tasks"):
+        n = n + limit + a
+    return n
+"""
+        p = lift_source(src, env={"load_all": load_all})
+        assert p.inputs == (("a", 1), ("limit", 3))
+        session = CobraSession(make_wilos_db(50), CostCatalog(FAST_LOCAL))
+        rows = session.db.table("tasks").nrows
+        assert session.execute(p)["n"] == 4 * rows
+        assert session.execute(p, limit=5, a=0)["n"] == 5 * rows
+
+    def test_registered_function_reached_through_binding(self):
+        fn = scale  # a registered callable bound to a local name
+
+        def f():
+            out = []
+            for t in load_all("tasks"):
+                out.append(fn(t.t_hours))
+            return out
+
+        p = lift_program(f)
+        assert "scale(" in repr(p.body)
+
+    def test_while_true_with_break(self):
+        def f():
+            n = 0
+            while True:
+                n = n + 1
+                if n >= 4:
+                    break
+            return n
+
+        p = lift_program(f)
+        w = p.body.parts[1]
+        assert isinstance(w, WhileRegion) and w.pred.key() == IConst(True).key()
+        session = CobraSession(make_wilos_db(10), CostCatalog(FAST_LOCAL))
+        assert session.execute(p)["n"] == 4
+
+    def test_lift_source_matches_lift_program(self):
+        src = """
+def F(worklist=()):
+    out = []
+    for wid in worklist:
+        for y in q("tasks").where(col("t_role_id").eq(param("r"))).bind(r=wid):
+            out.append(y.t_hours)
+    return out
+"""
+        p = lift_source(src, env={"q": q, "col": col, "param": param})
+
+        def F(worklist=()):
+            out = []
+            for wid in worklist:
+                for y in q("tasks").where(col("t_role_id")
+                                          .eq(param("r"))).bind(r=wid):
+                    out.append(y.t_hours)
+            return out
+
+        assert p.key() == lift_program(F).key()
+        assert p.inputs == (("worklist", ()),)
+
+
+# --------------------------------------------------------------------------
+# LiftError diagnostics
+# --------------------------------------------------------------------------
+
+class TestLiftErrors:
+    def _raises(self, fn, match, **kw):
+        with pytest.raises(LiftError, match=match) as ei:
+            lift_program(fn, **kw)
+        assert "ProgramBuilder" in str(ei.value)  # escape hatch named
+        return ei
+
+    def test_comprehension_rejected_with_location(self):
+        def f():
+            xs = [t for t in load_all("tasks")]
+            return xs
+
+        ei = self._raises(f, match="comprehensions")
+        assert "test_lift.py" in str(ei.value)
+
+    def test_unknown_name(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                n = n + undefined_thing  # noqa: F821
+            return n
+
+        self._raises(f, match="unknown name 'undefined_thing'")
+
+    def test_unregistered_call_on_traced_values(self):
+        def helper(x):
+            return x * 2
+
+        def f():
+            out = []
+            for t in load_all("tasks"):
+                out.append(helper(t.t_hours))
+            return out
+
+        self._raises(f, match="register_function")
+
+    def test_nested_function_rejected(self):
+        def f():
+            def g():
+                return 1
+            return g()
+
+        self._raises(f, match="nested function")
+
+    def test_trace_time_constant_condition(self):
+        def f():
+            n = 0
+            if 1 < 2:
+                n = 1
+            return n
+
+        self._raises(f, match="trace-time constant")
+
+    def test_chained_comparison(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                if 0 < t.t_state < 3:
+                    n = n + 1
+            return n
+
+        self._raises(f, match="chained comparison")
+
+    def test_statement_marker_in_expression_position(self):
+        def f():
+            x = prefetch("tasks", by="t_id")
+            return x
+
+        self._raises(f, match="statement, not an expression")
+
+    def test_return_arity_mismatch(self):
+        def f():
+            n = 0
+            for t in load_all("tasks"):
+                if t.t_state == 0:
+                    return n
+            return n, 1
+
+        self._raises(f, match="arity mismatch")
+
+    def test_marker_called_outside_tracing(self):
+        with pytest.raises(LiftError, match="tracing marker"):
+            load_all("tasks")
+
+    def test_source_unavailable(self):
+        fn = eval("lambda: 1")
+        with pytest.raises(LiftError, match="source"):
+            lift_program(fn)
+
+
+# --------------------------------------------------------------------------
+# session.trace: plain-Python mode + builder escape hatch
+# --------------------------------------------------------------------------
+
+class TestTracePlainPython:
+    def test_trace_plain_function(self):
+        session = CobraSession(make_wilos_db(300, ratio=10),
+                               CostCatalog(FAST_LOCAL))
+
+        @session.trace
+        def hours(worklist=()):
+            out = []
+            for wid in worklist:
+                for y in q("tasks").where(col("t_role_id")
+                                          .eq(param("r"))).bind(r=wid):
+                    out.append(y.t_hours)
+            return out
+
+        assert isinstance(hours, Executable)
+        r1 = hours.run(worklist=[1, 3])
+        r2 = session.compile(make_wilos_e()).run(worklist=[1, 3])
+        assert sorted(r1["out"]) == sorted(r2["result"])
+
+    def test_trace_relations_kwarg(self):
+        session = CobraSession(make_orders_customer_db(100, 50),
+                               CostCatalog(SLOW_REMOTE))
+
+        @session.trace(name="P0", relations=[ORDERS_CUSTOMER_REL])
+        def p0():
+            result = []
+            for o in load_all("orders"):
+                cust = o.customer
+                val = myFunc(o.o_id, cust.c_birth_year)
+                result.append(val)
+            return result
+
+        assert p0.source.key() == make_p0().key()
+
+    def test_builder_escape_hatch_still_works(self):
+        session = CobraSession(make_wilos_db(100), CostCatalog(FAST_LOCAL))
+
+        @session.trace(name="agg")
+        def f(b):
+            total = b.let("total", 0.0)
+            with b.loop(b.load_all("tasks"), var="t") as t:
+                b.let("total", total + t.t_hours)
+            return total
+
+        assert isinstance(f, Executable)
+        assert f.run()["total"] > 0
+
+
+# --------------------------------------------------------------------------
+# SCAN: while/early-exit end to end (issue acceptance)
+# --------------------------------------------------------------------------
+
+class TestScanEndToEnd:
+    @pytest.fixture(scope="class")
+    def compiled(self):
+        db = make_wilos_db(2000)
+        session = CobraSession(db, CostCatalog(SLOW_REMOTE))
+        return db, session, session.compile(make_scan())
+
+    def test_rewrite_win_in_plan_report(self, compiled):
+        _, session, exe = compiled
+        # the aggregation inside the while body moved into SQL ...
+        assert "scalarQuery" in repr(exe.program.body)
+        assert "scalarQuery" not in repr(exe.source.body)
+        # ... because the search found a cheaper alternative
+        rep = exe.report
+        assert rep.alternatives >= 2 and rep.est_cost_s > 0
+        baseline = session.execute(exe.source, threshold=1e9)
+        optimized = exe.run(threshold=1e9)
+        assert optimized.simulated_s < baseline.simulated_s
+
+    def test_while_survives_rewriting(self, compiled):
+        _, _, exe = compiled
+        assert isinstance(exe.source.body.parts[2], WhileRegion)
+        rewritten = [r for r in exe.program.body.parts
+                     if isinstance(r, WhileRegion)]
+        assert len(rewritten) == 1
+
+    def test_run_matches_baseline_per_threshold(self, compiled):
+        _, session, exe = compiled
+        for th in (50.0, 2e4, 1e9):
+            base = session.execute(exe.source, threshold=th)
+            for mode in ("fast", "exact"):
+                out = session.execute(exe.program, mode=mode, threshold=th)
+                assert out["state"] == base["state"]
+                assert out["total"] == pytest.approx(base["total"], rel=1e-4)
+
+    def test_run_batch_respects_per_invocation_early_exit(self, compiled):
+        _, _, exe = compiled
+        sets = [{"threshold": 50.0}, {"threshold": 2e4}, {"threshold": 1e9},
+                {"threshold": 50.0}]
+        batch = exe.run_batch(sets)
+        assert batch.batched
+        states = [r.outputs["state"] for r in batch.results]
+        assert states[0] == states[3]
+        assert len(set(states[:3])) == 3  # three different stop rounds
+        for ps, r in zip(sets, batch.results):
+            assert exe.run(**ps).outputs == r.outputs
+
+    def test_interpreter_equivalence_before_vs_after_rewrite(self, compiled):
+        """The optimized while/break program computes the same state as the
+        source under BOTH interpreter modes (rewrite ∘ early-exit safety)."""
+        db, session, exe = compiled
+        envs = {}
+        for prog, tag in ((exe.source, "src"), (exe.program, "opt")):
+            for mode in ("exact", "fast"):
+                envs[(tag, mode)] = session.execute(
+                    prog, mode=mode, threshold=2e4)
+        ref = envs[("src", "exact")]
+        for k, out in envs.items():
+            assert out["state"] == ref["state"], k
+            assert out["total"] == pytest.approx(ref["total"], rel=1e-4), k
+
+
+# --------------------------------------------------------------------------
+# Round trip: builder program -> plain-Python rendering -> lift
+# --------------------------------------------------------------------------
+# A spec draws a small imperative program; _spec_to_builder emits it through
+# ProgramBuilder, _spec_to_source renders the equivalent plain Python, and
+# lifting the rendering must reproduce the builder's IR byte for byte.
+
+_SPEC_COLS = {"tasks": ("t_hours", "t_state", "t_role_id"),
+              "roles": ("r_rank", "r_id")}
+
+
+def _spec_to_source(spec) -> str:
+    lines = ["def GEN():"]
+    emit = lines.append
+    names = []
+    for i, (kind, c, k, guard) in enumerate(spec["stmts"]):
+        if kind == "acc":
+            emit(f"    acc{i} = 0.0")
+            names.append(f"acc{i}")
+        elif kind == "add":
+            emit(f"    lst{i} = []")
+            names.append(f"lst{i}")
+        else:
+            emit(f"    map{i} = {{}}")
+            names.append(f"map{i}")
+    emit(f"    for t0 in load_all({spec['table']!r}):")
+    for i, (kind, c, k, guard) in enumerate(spec["stmts"]):
+        pad = "        "
+        if guard is not None:
+            emit(f"{pad}if t0.{guard} > {k}:")
+            pad += "    "
+        if kind == "acc":
+            emit(f"{pad}acc{i} = acc{i} + t0.{c} * {k}")
+        elif kind == "add":
+            emit(f"{pad}lst{i}.append(t0.{c} + {k})")
+        else:
+            emit(f"{pad}map{i}[t0.{c}] = {k}")
+    if spec["use_while"]:
+        emit("    w = 0")
+        emit(f"    while w < {spec['while_iters']}:")
+        emit("        w = w + 1")
+        if spec["brk"]:
+            emit(f"        if w >= {spec['brk_at']}:")
+            emit("            break")
+        names.append("w")
+    emit("    return " + ", ".join(names))
+    return "\n".join(lines) + "\n"
+
+
+def _spec_to_builder(spec) -> Program:
+    b = ProgramBuilder("GEN")
+    names = []
+    for i, (kind, c, k, guard) in enumerate(spec["stmts"]):
+        if kind == "acc":
+            names.append(b.let(f"acc{i}", 0.0))
+        elif kind == "add":
+            names.append(b.let(f"lst{i}", b.empty_list()))
+        else:
+            names.append(b.let(f"map{i}", b.empty_map()))
+    with b.loop(b.load_all(spec["table"]), var="t0") as t0:
+        for i, (kind, c, k, guard) in enumerate(spec["stmts"]):
+            def emit_one(i=i, kind=kind, c=c, k=k):
+                if kind == "acc":
+                    b.let(f"acc{i}", b.var(f"acc{i}") + getattr(t0, c) * k)
+                elif kind == "add":
+                    b.add(f"lst{i}", getattr(t0, c) + k)
+                else:
+                    b.put(f"map{i}", getattr(t0, c), k)
+            if guard is not None:
+                with b.when(getattr(t0, guard) > k):
+                    emit_one()
+            else:
+                emit_one()
+    if spec["use_while"]:
+        w = b.let("w", 0)
+        with b.while_(w < spec["while_iters"]):
+            b.let("w", w + 1)
+            if spec["brk"]:
+                with b.when(w >= spec["brk_at"]):
+                    b.brk()
+        names.append(w)
+    return b.build(outputs=names)
+
+
+def _round_trip(spec):
+    expected = _spec_to_builder(spec)
+    lifted = lift_source(_spec_to_source(spec),
+                         env={"load_all": load_all}, name="GEN")
+    assert lifted.key() == expected.key()
+    assert program_fingerprint(lifted) == program_fingerprint(expected)
+
+
+_FIXED_SPECS = [
+    {"table": "tasks", "stmts": [("acc", "t_hours", 2, None)],
+     "use_while": False, "while_iters": 0, "brk": False, "brk_at": 0},
+    {"table": "tasks",
+     "stmts": [("acc", "t_hours", 3, "t_state"), ("add", "t_role_id", 1, None)],
+     "use_while": True, "while_iters": 3, "brk": True, "brk_at": 2},
+    {"table": "roles",
+     "stmts": [("mapput", "r_id", 4, None), ("acc", "r_rank", 1, "r_id")],
+     "use_while": True, "while_iters": 2, "brk": False, "brk_at": 1},
+]
+
+
+class TestRoundTripFixed:
+    @pytest.mark.parametrize("spec", _FIXED_SPECS,
+                             ids=[f"spec{i}" for i in range(len(_FIXED_SPECS))])
+    def test_fixed_specs_round_trip(self, spec):
+        _round_trip(spec)
+
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def program_spec(draw):
+        table = draw(st.sampled_from(sorted(_SPEC_COLS)))
+        cols = _SPEC_COLS[table]
+        n = draw(st.integers(1, 3))
+        stmts = []
+        for _ in range(n):
+            kind = draw(st.sampled_from(["acc", "add", "mapput"]))
+            c = draw(st.sampled_from(cols))
+            k = draw(st.integers(1, 9))
+            guard = draw(st.one_of(st.none(), st.sampled_from(cols)))
+            stmts.append((kind, c, k, guard))
+        use_while = draw(st.booleans())
+        while_iters = draw(st.integers(1, 4))
+        brk = draw(st.booleans())
+        brk_at = draw(st.integers(1, while_iters))
+        return {"table": table, "stmts": stmts, "use_while": use_while,
+                "while_iters": while_iters, "brk": brk, "brk_at": brk_at}
+
+    class TestRoundTripProperty:
+        @settings(max_examples=60, deadline=None)
+        @given(spec=program_spec())
+        def test_generated_program_round_trips(self, spec):
+            _round_trip(spec)
+else:
+    @pytest.mark.skip(reason="optional dev dependency "
+                             "(pip install hypothesis)")
+    def test_generated_program_round_trips():
+        pass
+
+
+# --------------------------------------------------------------------------
+# Rewriting stays conservative around early exits
+# --------------------------------------------------------------------------
+
+class TestConservativeRewrites:
+    def test_loop_with_break_is_not_extracted_to_sql(self):
+        def f(cap=10):
+            n = 0
+            for t in load_all("tasks"):
+                n = n + 1
+                if n >= cap:
+                    break
+            return n
+
+        session = CobraSession(make_wilos_db(500), CostCatalog(SLOW_REMOTE))
+        exe = session.compile(lift_program(f))
+        # the loop must stay imperative: no aggregate extraction is sound
+        # when iteration may stop early
+        assert "scalarQuery" not in repr(exe.program.body)
+        assert exe.run(cap=7)["n"] == 7
+        assert exe.run(cap=10**9)["n"] == 500
+
+    def test_vectorized_mode_falls_back_on_break(self):
+        def f(cap=3):
+            out = []
+            for t in load_all("tasks"):
+                out.append(t.t_hours)
+                if t.t_state == 0:
+                    break
+            return out
+
+        p = lift_program(f)
+        session = CobraSession(make_wilos_db(300), CostCatalog(FAST_LOCAL))
+        fast = session.execute(p)
+        exact = session.execute(p, mode="exact")
+        assert fast.outputs == exact.outputs
+        assert fast.simulated_s == pytest.approx(exact.simulated_s)

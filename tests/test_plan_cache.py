@@ -7,13 +7,11 @@ plan under the new statistics.
 """
 
 import numpy as np
-import pytest
 
 from repro.api import (CobraSession, OptimizerConfig, PlanCache, PlanCacheKey,
                        program_fingerprint)
 from repro.core import CostCatalog
-from repro.programs import (make_m0, make_orders_customer_db, make_p0,
-                            make_sales_db)
+from repro.programs import make_orders_customer_db, make_p0, make_sales_db
 from repro.relational.database import SLOW_REMOTE
 
 

@@ -19,7 +19,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import CostCatalog, Interpreter, optimize
 from repro.core.fir import eval_fir, loop_to_fir
 from repro.core.regions import (Assign, CollectionAdd, CondRegion, IBin,
-                                ICall, IConst, IEmptyList, IEmptyMap, IField,
+                                IConst, IEmptyList, IEmptyMap, IField,
                                 ILoadAll, IVar, LoopRegion, MapPut, Program,
                                 seq)
 from repro.relational import (DatabaseServer, Field, Schema, Table,

@@ -233,7 +233,8 @@ class TestPlanStore:
     def test_clear_and_stats_shape(self, tmp_path):
         store = PlanStore(str(tmp_path / "plans"))
         assert set(store.stats()) == {"entries", "hits", "misses", "stale",
-                                      "puts", "errors"}
+                                      "puts", "races", "gc_evictions",
+                                      "errors"}
         s = CobraSession(make_sales_db(100), CostCatalog(SLOW_REMOTE),
                          plan_store=store)
         s.compile(make_m0())
@@ -372,3 +373,171 @@ class TestFeedback:
         from repro.api import q
         h = q("orders").join("customer", "o_customer_sk", "c_customer_sk")
         assert query_tables(h.query) == ("customer", "orders")
+
+
+# --------------------------------------------------------------------------
+# Plan-store cold-compile race + GC bound
+# --------------------------------------------------------------------------
+
+class TestPlanStoreRaceAndGC:
+    def _session(self, store, n_orders=100, n_cust=5000):
+        return CobraSession(make_orders_customer_db(n_orders, n_cust),
+                            CostCatalog(SLOW_REMOTE),
+                            config=OptimizerConfig.preset("paper-exp1-3"),
+                            plan_store=store)
+
+    def test_cold_compile_race_first_writer_wins(self, tmp_path):
+        """Two sessions racing on the same cold program both run the memo
+        search, but the second put() re-reads instead of overwriting: it
+        returns (and serves) the first writer's canonical result."""
+        store = PlanStore(str(tmp_path / "plans"))
+        sa = self._session(store)
+        result_a = sa.compile(make_p0()).result
+        assert store.puts == 1
+
+        # simulate the loser of the race: a second session that missed the
+        # store read (compiled concurrently) and now writes its own result
+        sb = CobraSession(make_orders_customer_db(100, 5000),
+                          CostCatalog(SLOW_REMOTE),
+                          config=OptimizerConfig.preset("paper-exp1-3"))
+        result_b = sb.compile(make_p0()).result
+        assert result_b is not result_a
+
+        key = sa._cache_key(make_p0(), sa.catalog, sa.config, None)
+        fp = sa.db.stats_fingerprint(program_tables(make_p0()))
+        canonical = store.put(key, result_b, stats_fp=fp)
+        # first writer won: the caller gets A's stored artifact (a fresh
+        # unpickle of it), not its own freshly-compiled result
+        assert canonical is not result_b
+        assert canonical.program.body.key() == result_a.program.body.key()
+        assert canonical.est_cost == result_a.est_cost
+        assert store.races == 1 and store.puts == 1  # nothing overwritten
+
+    def test_stale_entry_still_superseded(self, tmp_path):
+        """First-writer-wins only applies to entries valid for the caller's
+        statistics; a stale entry is replaced as before."""
+        store = PlanStore(str(tmp_path / "plans"))
+        sa = self._session(store)
+        sa.compile(make_p0())
+        grown = make_orders_customer_db(4000, 500)
+        sa.db.replace_table(grown.table("orders"))
+        sa.db.replace_table(grown.table("customer"))
+        sa.analyze()
+        exe = sa.compile(make_p0())
+        assert not exe.from_cache
+        assert store.puts == 2 and store.races == 0
+
+    def test_max_entries_gc_drops_least_recently_used(self, tmp_path):
+        import os
+        import time
+        store = PlanStore(str(tmp_path / "plans"), max_entries=2)
+        db = make_orders_customer_db(100, 200)
+        db.add_table(make_sales_db(100).table("sales"))
+        wil = make_wilos_db(100)
+        db.add_table(wil.table("tasks"))
+        db.add_table(wil.table("roles"))
+        session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                               config=OptimizerConfig.preset("paper-exp1-3"),
+                               plan_store=store)
+
+        session.compile(make_p0())
+        session.compile(make_m0())
+        assert len(store) == 2 and store.gc_evictions == 0
+        # age the entries apart, then touch P0's via a get (LRU refresh)
+        paths = sorted(os.path.join(store.root, n)
+                       for n in os.listdir(store.root) if n.endswith(".plan"))
+        now = time.time()
+        for i, p in enumerate(paths):
+            os.utime(p, (now - 100 + i, now - 100 + i))
+        key = session._cache_key(make_p0(), session.catalog, session.config,
+                                 None)
+        fp = session.db.stats_fingerprint(program_tables(make_p0()))
+        assert store.get(key, stats_fp=fp) is not None
+
+        session.compile(make_wilos_b())       # third program -> GC fires
+        assert len(store) == 2
+        assert store.gc_evictions == 1
+        # P0 (recently touched) survived; M0 (least recently used) did not
+        assert store.get(key, stats_fp=fp) is not None
+        m0_key = session._cache_key(make_m0(), session.catalog,
+                                    session.config, None)
+        m0_fp = session.db.stats_fingerprint(program_tables(make_m0()))
+        assert store.get(m0_key, stats_fp=m0_fp) is None
+        assert len(store.index()) == 2        # sidecar pruned with the plans
+
+    def test_max_entries_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="max_entries"):
+            PlanStore(str(tmp_path / "plans"), max_entries=0)
+
+
+# --------------------------------------------------------------------------
+# Feedback: wall-clock drift (observed time vs estimated plan cost)
+# --------------------------------------------------------------------------
+
+class TestWallClockDrift:
+    def _session(self):
+        return paper_session(make_sales_db(500))
+
+    def test_wall_clock_drift_flags_tables(self):
+        """Row counts match the estimate exactly, but observed execution
+        time is far off the modeled query cost -> wall_clock drift event."""
+        from repro.core.cost import CostModel
+        from repro.relational.algebra import Scan
+        session = self._session()
+        fb = FeedbackController(session, drift_threshold=3.0,
+                                cost_drift_threshold=5.0)
+        query = Scan("sales")
+        est_rows = session.db.estimate(query).n_rows
+        est_s = CostModel(session.db, session.catalog).query_cost(query)
+        drifted = fb.observe([(query, int(est_rows), est_s * 20.0)])
+        assert drifted == ["sales"]
+        (event,) = fb.events
+        assert event.kind == "wall_clock"
+        assert event.ratio == pytest.approx(20.0, rel=1e-6)
+        assert event.est_s == pytest.approx(est_s)
+        assert "wall-clock" in event.describe()
+        assert fb.telemetry()["drift_events_wall_clock"] == 1
+
+    def test_in_band_wall_clock_is_quiet(self):
+        from repro.core.cost import CostModel
+        from repro.relational.algebra import Scan
+        session = self._session()
+        fb = FeedbackController(session, drift_threshold=3.0,
+                                cost_drift_threshold=5.0)
+        query = Scan("sales")
+        est_rows = session.db.estimate(query).n_rows
+        est_s = CostModel(session.db, session.catalog).query_cost(query)
+        assert fb.observe([(query, int(est_rows), est_s * 1.5)]) == []
+        assert not fb.events
+
+    def test_row_drift_takes_precedence_no_double_event(self):
+        from repro.relational.algebra import Scan
+        session = self._session()
+        fb = FeedbackController(session, drift_threshold=3.0,
+                                cost_drift_threshold=5.0)
+        query = Scan("sales")
+        est_rows = session.db.estimate(query).n_rows
+        drifted = fb.observe([(query, int(est_rows) * 10, 1e9)])
+        assert drifted == ["sales"]
+        assert len(fb.events) == 1 and fb.events[0].kind == "rows"
+
+    def test_wall_clock_drift_disabled_with_none(self):
+        from repro.relational.algebra import Scan
+        session = self._session()
+        fb = FeedbackController(session, drift_threshold=3.0,
+                                cost_drift_threshold=None)
+        query = Scan("sales")
+        est_rows = session.db.estimate(query).n_rows
+        assert fb.observe([(query, int(est_rows), 1e9)]) == []
+
+    def test_threshold_validation(self):
+        session = self._session()
+        with pytest.raises(ValueError, match="cost_drift_threshold"):
+            FeedbackController(session, cost_drift_threshold=0.5)
+
+    def test_serving_runtime_plumbs_cost_threshold(self):
+        session = self._session()
+        rt = ServingRuntime(session, cost_drift_threshold=7.0)
+        assert rt.feedback.cost_drift_threshold == 7.0
+        rt2 = ServingRuntime(session, cost_drift_threshold=None)
+        assert rt2.feedback.cost_drift_threshold is None

@@ -3,8 +3,6 @@
 (The original placeholder file; now the top-level integration tests.)
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 """Fault tolerance: checkpoint/restart, failure injection, data determinism."""
 
-import json
 import os
 
 import jax
@@ -111,7 +110,6 @@ def test_gradient_compression_roundtrip():
 
 def test_microbatched_step_matches_single_batch():
     """grad accumulation over microbatches == one big batch (linear loss)."""
-    import dataclasses as dc
     out1 = train(TrainConfig(arch="h2o-danube-1.8b", steps=3, global_batch=8,
                              seq_len=16, microbatch=1, log_every=1))
     out2 = train(TrainConfig(arch="h2o-danube-1.8b", steps=3, global_batch=8,
