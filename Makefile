@@ -1,7 +1,7 @@
 PYTHON ?= python
 PYTHONPATH := src
 
-.PHONY: test test-fast lint bench-smoke bench examples
+.PHONY: test test-fast lint bench-smoke bench bench-batch examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -24,6 +24,12 @@ bench-smoke:
 # full benchmark harness (all modules, paper-scale configurations)
 bench:
 	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m benchmarks.run
+
+# batch-size sweep {1, 8, 64}: serving throughput + the ExecutionContext
+# plan-flip point (which batch size makes the memo search switch winners);
+# trajectory lands in BENCH_runtime.json
+bench-batch:
+	PYTHONPATH=$(PYTHONPATH) $(PYTHON) -m benchmarks.run bench_runtime
 
 examples:
 	$(PYTHON) examples/quickstart.py

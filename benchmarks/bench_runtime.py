@@ -10,11 +10,16 @@ per-invocation baseline, on two workloads:
   * ``W_E`` (worklist-parameterized σ queries, fast local network) —
     parameter-diverse; distinct bindings still fetch, only repeats amortize.
 
+Also sweeps ``ExecutionContext(batch_size=...)`` over {1, 8, 64} (the
+``make bench-batch`` target) and records the plan each context compiles —
+the batch size where the winner flips from the per-iteration query to the
+amortized prefetch is the ``plan_flip_at`` point in the trajectory.
+
 Also reports the plan-store warm-start: wall-clock of a cold ``compile()``
 (memo search) vs a second session hitting the shared store directory.
 
 ``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
-to ``BENCH_runtime.json``.
+to ``BENCH_runtime.json`` (uploaded as a CI workflow artifact).
 """
 
 from __future__ import annotations
@@ -23,13 +28,19 @@ import os
 import tempfile
 import time
 
-from repro.api import CobraSession, OptimizerConfig
+from repro.api import CobraSession, ExecutionContext, OptimizerConfig
 from repro.core import CostCatalog
-from repro.programs import (make_orders_customer_db, make_p0, make_wilos_db,
-                            make_wilos_e)
+from repro.programs import (make_orders_customer_db, make_p0, make_scan,
+                            make_wilos_db, make_wilos_e)
 from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
 
 BATCH_SIZES = (1, 8, 64)
+
+
+def _plan_kind(exe) -> str:
+    body = repr(exe.program.body)
+    return "prefetch" if "prefetch" in body else \
+        "join" if "JOIN" in body else "query"
 
 
 def _paper_session(db, network):
@@ -84,6 +95,27 @@ def main(emit):
              f"rps={rps:.3f};site_hits={batch.site_hits}")
     traj["workloads"]["W_E"] = {"throughput_rps": curve_e,
                                 "unbatched_rps": unbatched_e}
+
+    # --------------------------------------- context sweep: plan flip point
+    # the same SCAN program compiled for batch sizes 1/8/64: C_NRT of the
+    # binding-free prefetch site inside the while body amortizes across the
+    # batch, so the winner flips from the per-iteration aggregate query to
+    # prefetch + local aggregation at some batch size
+    session_c = _paper_session(make_wilos_db(n_tasks, ratio=10), SLOW_REMOTE)
+    scan = make_scan()
+    plans, flip_at = {}, None
+    for bs in BATCH_SIZES:
+        t0 = time.perf_counter()
+        exe_c = session_c.compile(scan, context=ExecutionContext(batch_size=bs))
+        wall_us = (time.perf_counter() - t0) * 1e6
+        kind = _plan_kind(exe_c)
+        plans[str(bs)] = {"plan": kind, "est_cost_s": exe_c.est_cost_s}
+        if flip_at is None and kind != plans[str(BATCH_SIZES[0])]["plan"]:
+            flip_at = bs
+        emit(f"bench_runtime/SCAN/context_batch{bs}", wall_us,
+             f"plan={kind};est={exe_c.est_cost_s:.4g}s")
+    emit("bench_runtime/SCAN/plan_flip_at", 0, f"batch_size={flip_at}")
+    traj["context_plans"] = {"SCAN": plans, "plan_flip_at": flip_at}
 
     # ------------------------------------------------- plan-store warm start
     with tempfile.TemporaryDirectory() as store_dir:

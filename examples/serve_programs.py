@@ -11,9 +11,12 @@ Three acts:
   2. **Batched serving.** A ``ServingRuntime`` processes a mixed request
      stream; each batch pays one server round trip per query site instead
      of one per request, so simulated throughput scales with batch size.
-     The stream includes SCAN — a while/early-exit program lifted from
-     plain Python — whose per-request ``threshold`` parameter makes each
-     invocation stop after a different number of rounds, even mid-batch.
+     Registration compiles under the runtime's ``ExecutionContext``
+     (batch_size=16), so SCAN — a while/early-exit program lifted from
+     plain Python — gets a DIFFERENT plan than a one-shot compile: the
+     batch-amortized prefetch beats the per-iteration aggregate query.
+     Each request's ``threshold`` parameter still makes every invocation
+     stop after a different number of rounds, even mid-batch.
   3. **Drift + re-optimization.** A bulk load grows ``orders`` 40x without
      ANALYZE. The feedback controller notices observed cardinalities
      leaving the estimated band, re-analyzes only the drifted tables, and
@@ -90,6 +93,16 @@ def main():
     responses = rt.serve([("P0", {}), ("M0", {})] * 8)
     print(f"served {len(responses)} mixed requests in {rt.batches_run} "
           f"batch(es), {rt.n_round_trips} round trips")
+
+    # the serving context changes which plan wins: one-shot SCAN keeps the
+    # per-iteration aggregate query, batch-16 SCAN amortizes the prefetch
+    one_shot_scan = session_b.compile(make_scan())
+    served_scan = rt.executable("SCAN")
+    print(f"SCAN one-shot: {one_shot_scan.describe()}")
+    print(f"SCAN batch=16: {served_scan.describe()}")
+    assert "prefetch" not in repr(one_shot_scan.program.body)
+    assert "prefetch" in repr(served_scan.program.body), \
+        "the serving context should amortize the in-while prefetch site"
 
     # SCAN is a while/early-exit program (plain Python `while` + `break`);
     # each request's threshold stops it after a different number of rounds,

@@ -11,22 +11,29 @@ See ``examples/quickstart.py`` for the end-to-end walkthrough and
 ``repro.api.builder`` for the tracing program frontend.
 """
 
+from ..core.context import ExecutionContext, ONE_SHOT, StatsProfile
+from ..core.cost import CostModel
 from .builder import Expr, ProgramBuilder, Q, VarHandle, col, param, q
 from .cache import (PlanCache, PlanCacheKey, program_fingerprint,
-                    program_tables, query_tables)
+                    program_sites, program_tables, query_tables)
 from .config import OptimizerConfig, PRESETS
 from .lift import (LiftError, cache_by_column, cache_lookup, lift_program,
                    lift_source, load_all, noop, prefetch, query_values,
                    scalar_query, update_row)
+from .rules import (CobraRule, RuleSet, SlotView, add_slot_variant,
+                    cobra_rule, slot_view)
 from .session import CobraSession, Executable, ExecutionResult, PlanReport
 
 __all__ = [
     "CobraSession", "Executable", "ExecutionResult", "PlanReport",
     "OptimizerConfig", "PRESETS",
+    "ExecutionContext", "ONE_SHOT", "StatsProfile", "CostModel",
+    "RuleSet", "CobraRule", "cobra_rule", "SlotView", "slot_view",
+    "add_slot_variant",
     "ProgramBuilder", "Expr", "VarHandle", "Q", "q", "col", "param",
     "LiftError", "lift_program", "lift_source",
     "load_all", "cache_lookup", "scalar_query", "query_values",
     "prefetch", "update_row", "cache_by_column", "noop",
-    "PlanCache", "PlanCacheKey", "program_fingerprint", "program_tables",
-    "query_tables",
+    "PlanCache", "PlanCacheKey", "program_fingerprint", "program_sites",
+    "program_tables", "query_tables",
 ]

@@ -48,10 +48,10 @@ from ..relational.algebra import (AggSpec, Aggregate, Col, Join, Limit,
 from ..core.regions import (Assign, BasicBlock, BreakStmt, CacheByColumn,
                             CollectionAdd, CondRegion, ContinueStmt, IBin,
                             ICacheLookup, ICall, IConst, IEmptyList, IEmptyMap,
-                            IExpr, IField, ILen, ILoadAll, INav, IQuery,
-                            IQueryValues, IScalarQuery, IVar, LoopRegion,
-                            MapPut, NoOp, Prefetch, Program, Region,
-                            ReturnStmt, SeqRegion, Stmt, UpdateRow,
+                            IExpr, IField, IIndex, ILen, ILoadAll, INav,
+                            IQuery, IQueryValues, IScalarQuery, IVar,
+                            LoopRegion, MapPut, NoOp, Prefetch, Program,
+                            Region, ReturnStmt, SeqRegion, Stmt, UpdateRow,
                             WhileRegion)
 
 __all__ = ["ProgramBuilder", "Expr", "VarHandle", "Q", "q", "col", "param"]
@@ -213,6 +213,10 @@ class Expr:
         """Explicit ORM relationship navigation (the N+1 point query)."""
         return Expr(INav(self._ir, fk_field, target, target_key),
                     self._builder, table=target)
+
+    def __getitem__(self, key) -> "Expr":
+        """Subscript read ``coll[key]`` / ``m[key]`` on a traced value."""
+        return Expr(IIndex(self._ir, _ir(key)), self._builder)
 
     def len(self) -> "Expr":
         return Expr(ILen(self._ir), self._builder)

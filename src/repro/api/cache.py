@@ -20,8 +20,10 @@ import hashlib
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
+from ..core.context import ONE_SHOT
+
 __all__ = ["PlanCache", "PlanCacheKey", "program_fingerprint",
-           "program_tables", "query_tables"]
+           "program_tables", "program_sites", "query_tables"]
 
 
 def program_fingerprint(program) -> str:
@@ -114,6 +116,30 @@ def program_tables(program) -> Tuple[str, ...]:
     return tuple(sorted(out))
 
 
+def program_sites(program) -> Tuple[str, ...]:
+    """The iteration sites a Program contains whose counts table statistics
+    cannot estimate: while guards and cursor loops over collection (non-
+    query) sources. An :class:`~repro.core.context.ExecutionContext`'s
+    fingerprint restricts its observed-iteration stats to exactly these, so
+    observations at other programs' sites leave this program's plans hot."""
+    from ..core.context import loop_site_key, while_site_key
+    from ..core.regions import (ILoadAll, IQuery, LoopRegion, Region,
+                                WhileRegion)
+    out = []
+
+    def walk(r: Region):
+        if isinstance(r, WhileRegion):
+            out.append(while_site_key(r.pred))
+        elif isinstance(r, LoopRegion) and not isinstance(
+                r.source, (IQuery, ILoadAll)):
+            out.append(loop_site_key(r.var, r.source))
+        for c in r.children():
+            walk(c)
+
+    walk(program.body)
+    return tuple(sorted(set(out)))
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanCacheKey:
     program_fp: str
@@ -122,6 +148,10 @@ class PlanCacheKey:
     # per-table stats token ((table, version), ...) for the tables the
     # program touches; any hashable works (unit tests use plain ints)
     stats_version: object
+    # ExecutionContext fingerprint (batch size + observed iteration stats
+    # restricted to the program's sites); default = one-shot/no-stats, so
+    # directly-constructed keys in unit tests keep working
+    context_key: Tuple = ONE_SHOT.fingerprint()
 
 
 class PlanCache:

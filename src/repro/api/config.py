@@ -4,10 +4,17 @@
 across ``optimize()`` keyword arguments and module-level constants in
 ``core.search``:
 
-  * **rule selection** — which Fig. 11 transformation rules participate in
-    memo saturation, by name (``rules=None`` = the full default set,
-    ``exclude_rules=("T3",)`` = the paper's Experiment 1–3 alternative
+  * **rule selection** — which transformation rules participate in memo
+    saturation: ``rule_set`` plugs in a :class:`~repro.api.rules.RuleSet`
+    (the public registry — user rules registered there fire alongside the
+    Fig. 11 built-ins; ``None`` = ``RuleSet.default()``), then ``rules=`` /
+    ``exclude_rules=`` select by name within it
+    (``exclude_rules=("T3",)`` = the paper's Experiment 1–3 alternative
     space {P0, P1, P2});
+  * **cost model** — ``cost_model`` accepts any class implementing the
+    :class:`~repro.core.cost.CostModel` protocol, constructed as
+    ``cost_model(db, catalog, context)``; ``None`` = the built-in Sec. VI
+    model;
   * **cost-choice strategy** — ``"cost"`` (Cobra) or ``"heuristic"``
     (the [4]-style maximal-SQL-push comparator, Fig. 15's baseline);
   * **search budgets** — top-K plans per memo group, the cross-product
@@ -31,6 +38,19 @@ from typing import List, Optional, Tuple
 
 __all__ = ["OptimizerConfig", "PRESETS"]
 
+# fingerprint-only copy of the built-in registry: never handed to callers
+# (resolve_rule_set returns fresh copies precisely so user mutation cannot
+# leak across sessions), so caching it here is safe
+_DEFAULT_RULESET = None
+
+
+def _default_ruleset():
+    global _DEFAULT_RULESET
+    if _DEFAULT_RULESET is None:
+        from .rules import RuleSet
+        _DEFAULT_RULESET = RuleSet.default()
+    return _DEFAULT_RULESET
+
 
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
@@ -44,6 +64,8 @@ class OptimizerConfig:
     choice: str = "cost"                      # "cost" | "heuristic"
     rules: Optional[Tuple[str, ...]] = None   # rule names; None = full set
     exclude_rules: Tuple[str, ...] = ()       # subtracted from the above
+    rule_set: Optional[object] = None         # api.rules.RuleSet; None = default
+    cost_model: Optional[type] = None         # CostModel-protocol class; None = built-in
     topk: int = 4                             # plans kept per memo group
     max_combos: int = 4096                    # combination cross-product bound
     max_rounds: int = 64                      # saturation round limit
@@ -56,30 +78,73 @@ class OptimizerConfig:
             object.__setattr__(self, "rules", tuple(self.rules))
         if isinstance(self.exclude_rules, list):
             object.__setattr__(self, "exclude_rules", tuple(self.exclude_rules))
+        if self.cost_model is not None and not callable(self.cost_model):
+            raise TypeError("cost_model must be a CostModel-protocol class "
+                            "(constructed as cost_model(db, catalog, context))")
 
     # ------------------------------------------------------------ resolution
+    def resolve_rule_set(self):
+        """The :class:`~repro.api.rules.RuleSet` this config draws from."""
+        from .rules import RuleSet
+        if self.rule_set is not None:
+            if not isinstance(self.rule_set, RuleSet):
+                raise TypeError(f"rule_set must be a repro.api.RuleSet, got "
+                                f"{type(self.rule_set).__name__}")
+            return self.rule_set
+        return RuleSet.default()
+
     def resolve_rules(self) -> List:
-        """Materialize the rule objects this config selects."""
-        from ..core.rules import default_rules
-        available = default_rules()
-        by_name = {r.name: r for r in available}
+        """Materialize the (core-engine) rule objects this config selects."""
+        rs = self.resolve_rule_set()
+        by_name = {r.name: r for r in rs}
         if self.rules is None:
-            selected = available
+            selected = list(rs)
         else:
             unknown = [n for n in self.rules if n not in by_name]
             if unknown:
                 raise ValueError(f"unknown rule name(s): {unknown}; "
                                  f"available: {sorted(by_name)}")
             selected = [by_name[n] for n in self.rules]
-        return [r for r in selected if r.name not in self.exclude_rules]
+        return [r.to_dag_rule() for r in selected
+                if r.name not in self.exclude_rules]
 
     def rule_names(self) -> Tuple[str, ...]:
         return tuple(r.name for r in self.resolve_rules())
 
+    def _rules_key(self) -> Tuple:
+        """(name, revision) pairs of the selected rules — a user rule's
+        revision is a source hash, so editing its body changes every cache
+        key it participated in.
+
+        Runs on EVERY compile (plan-cache hits included), so it avoids
+        materializing rule objects: for the default registry a module-level
+        read-only copy is fingerprinted (rebuilding it per call doubled the
+        warm-compile wall clock); a custom ``rule_set`` is fingerprinted
+        live, since its registry is mutable (latest-wins ``register``)."""
+        rs = _default_ruleset() if self.rule_set is None \
+            else self.resolve_rule_set()     # type-checks, returns it as-is
+        names = rs.names() if self.rules is None else self.rules
+        return rs.fingerprint(tuple(n for n in names
+                                    if n not in self.exclude_rules))
+
+    def _cost_model_key(self) -> Tuple:
+        if self.cost_model is None:
+            return ("cost-model", "builtin")
+        cm = self.cost_model
+        rev = getattr(cm, "revision", None)
+        if rev is None:
+            # same safeguard user rules get: editing the model's body must
+            # invalidate every (persistent) plan it costed; set a `revision`
+            # class attribute to pin identity across cosmetic edits
+            from .rules import _source_revision
+            rev = _source_revision(cm)
+        return ("cost-model",
+                f"{cm.__module__}.{getattr(cm, '__qualname__', cm)}", rev)
+
     def cache_key(self) -> Tuple:
         """Stable identity for plan-cache keying."""
-        return ("cfg", self.choice, self.rule_names(), self.topk,
-                self.max_combos, self.max_rounds)
+        return ("cfg", self.choice, self._rules_key(), self._cost_model_key(),
+                self.topk, self.max_combos, self.max_rounds)
 
     # --------------------------------------------------------------- presets
     @classmethod

@@ -27,8 +27,10 @@ Supported constructs (all lower to the same IR the builder emits by hand):
     statements (paper Sec. V limitations, now first-class);
   * early ``return`` anywhere — ``ReturnStmt`` (outputs are the declared
     names; a return of expressions assigns them first);
-  * list/dict accumulation (``xs = []; xs.append(v)``, ``m = {}; m[k] = v``),
-    augmented assignment, scalar arithmetic/comparisons/boolean operators;
+  * list/dict accumulation (``xs = []; xs.append(v)``, ``m = {}; m[k] = v``)
+    and subscript reads on traced values (``xs[0]``, ``m[key]`` —
+    :class:`~repro.core.regions.IIndex`), augmented assignment, scalar
+    arithmetic/comparisons/boolean operators;
   * calls to :func:`~repro.core.regions.register_function`-registered pure
     functions by name, plus ``len``/``min``/``max`` builtins;
   * ORM attribute navigation (``row.customer``) via the ``relations``
@@ -504,10 +506,19 @@ class _Lifter:
                 raise self._err(node, "tuples of traced values")
             return tuple(vals)
         if isinstance(node, ast.Subscript):
+            if isinstance(node.slice, ast.Slice):
+                raise self._err(node, "slice reads (a[i:j]) — index one "
+                                      "element at a time")
             base = self._expr(node.value)
-            if isinstance(base, Expr):
-                raise self._err(node, "subscript reads on traced values")
-            return base[self._expr(node.slice)]
+            key = self._expr(node.slice)
+            # traced collection/map read -> IIndex (Expr.__getitem__);
+            # trace-time base -> ordinary Python subscript
+            if isinstance(base, Expr) and not isinstance(key,
+                                                         (Expr,) + _SCALARS):
+                raise self._err(node, f"subscript key must be a traced "
+                                      f"expression or scalar, not a "
+                                      f"trace-time {type(key).__name__}")
+            return base[key]
         if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
                              ast.GeneratorExp)):
             raise self._err(node, "comprehensions — write an explicit loop")

@@ -26,11 +26,13 @@ import inspect
 import time
 from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
+from ..core.context import ExecutionContext, ONE_SHOT
 from ..core.cost import CostCatalog
 from ..core.regions import Interpreter, Program
 from ..core.search import OptimizationResult, run_search
 from ..relational.database import ClientEnv, DatabaseServer, NetworkProfile, SLOW_REMOTE
-from .cache import PlanCache, PlanCacheKey, program_fingerprint, program_tables
+from .cache import (PlanCache, PlanCacheKey, program_fingerprint,
+                    program_sites, program_tables)
 from .config import OptimizerConfig
 
 __all__ = ["CobraSession", "Executable", "ExecutionResult", "PlanReport"]
@@ -53,12 +55,17 @@ class PlanReport:
     opt_time_s: float
     artifact: object            # rewritten Program | planner terms dict
     from_cache: bool = False
+    # ExecutionContext fingerprint the plan was costed under (telemetry:
+    # serving plans are distinguishable from one-shot plans at a glance)
+    context_fp: Tuple = ONE_SHOT.fingerprint()
 
     def describe(self) -> str:
         src = "cache" if self.from_cache else "search"
+        batch = self.context_fp[1] if len(self.context_fp) > 1 else 1
+        ctx = f", batch={batch}" if batch != 1 else ""
         return (f"[{self.domain}] {self.name}: est {self.est_cost_s:.4g}s "
                 f"over {self.alternatives} alternatives "
-                f"({self.opt_time_s*1e3:.1f}ms, {src})")
+                f"({self.opt_time_s*1e3:.1f}ms, {src}{ctx})")
 
 
 @dataclasses.dataclass
@@ -86,11 +93,13 @@ class Executable:
     many times against the session's database."""
 
     def __init__(self, session: "CobraSession", source: Program,
-                 result: OptimizationResult, from_cache: bool):
+                 result: OptimizationResult, from_cache: bool,
+                 context: Optional[ExecutionContext] = None):
         self.session = session
         self.source = source
         self.result = result
         self.from_cache = from_cache
+        self.context = context if context is not None else ONE_SHOT
         self.n_runs = 0
 
     # ------------------------------------------------------------ plan view
@@ -115,7 +124,9 @@ class Executable:
             alternatives=self.result.alternatives,
             memo_stats=self.result.memo_stats,
             opt_time_s=self.result.opt_time_s, artifact=self.result.program,
-            from_cache=self.from_cache)
+            from_cache=self.from_cache,
+            context_fp=self.context.fingerprint(
+                sites=program_sites(self.source)))
 
     def describe(self) -> str:
         body = repr(self.program.body)
@@ -169,10 +180,14 @@ class CobraSession:
                  catalog: Optional[CostCatalog] = None,
                  config: Optional[OptimizerConfig] = None,
                  plan_cache_entries: int = 256,
-                 plan_store=None):
+                 plan_store=None,
+                 context: Optional[ExecutionContext] = None):
         self.db = db
         self.catalog = catalog if catalog is not None else CostCatalog(SLOW_REMOTE)
         self.config = config if config is not None else OptimizerConfig()
+        # default ExecutionContext compiles are costed for (one-shot unless
+        # the session serves batches); per-compile `context=` overrides it
+        self.context = context if context is not None else ONE_SHOT
         self.plan_cache = PlanCache(plan_cache_entries)
         # optional disk-backed cross-session store (a PlanStore or a dir path)
         if plan_store is not None:
@@ -191,40 +206,53 @@ class CobraSession:
 
     def _cache_key(self, program: Program, catalog: CostCatalog,
                    config: OptimizerConfig,
-                   rules_override: Optional[Sequence]) -> PlanCacheKey:
+                   rules_override: Optional[Sequence],
+                   context: Optional[ExecutionContext] = None) -> PlanCacheKey:
+        context = context if context is not None else self.context
         if rules_override is not None:
             config_key = ("cfg", config.choice,
                           tuple(r.name for r in rules_override),
+                          config._cost_model_key(),
                           config.topk, config.max_combos, config.max_rounds)
         else:
             config_key = config.cache_key()
         # per-table stats versions of exactly the tables the program touches:
-        # an analyze() on an unrelated table leaves this plan's entry hot
+        # an analyze() on an unrelated table leaves this plan's entry hot.
+        # The context fingerprint is likewise restricted to the program's
+        # iteration sites, so observed stats at other programs' sites never
+        # invalidate this plan.
         return PlanCacheKey(
             program_fp=program_fingerprint(program),
             catalog_key=self._catalog_key(catalog),
             config_key=config_key,
-            stats_version=self.db.stats_token(program_tables(program)))
+            stats_version=self.db.stats_token(program_tables(program)),
+            context_key=context.fingerprint(sites=program_sites(program)))
 
     # ---------------------------------------------------------- compilation
     def compile(self, program: Program, *,
                 config: Optional[OptimizerConfig] = None,
                 catalog: Optional[CostCatalog] = None,
-                rules: Optional[Sequence] = None) -> Executable:
+                rules: Optional[Sequence] = None,
+                context: Optional[ExecutionContext] = None) -> Executable:
         """Optimize ``program`` (or fetch its cached plan) -> :class:`Executable`.
 
-        ``config``/``catalog`` override the session defaults for this call;
-        ``rules`` takes pre-built ``Rule`` objects (the back-compat path used
-        by ``repro.core.optimize``)."""
+        ``config``/``catalog``/``context`` override the session defaults for
+        this call — ``context`` is the :class:`ExecutionContext` the plan is
+        costed for (batch size + observed iteration statistics), so a
+        serving deployment can compile a *different* plan than one-shot for
+        the same program. ``rules`` takes pre-built ``Rule`` objects (the
+        back-compat path used by ``repro.core.optimize``)."""
         cfg = config if config is not None else self.config
         cat = catalog if catalog is not None else self.catalog
+        ctx = context if context is not None else self.context
         self.compile_calls += 1
 
-        key = self._cache_key(program, cat, cfg, rules)
+        key = self._cache_key(program, cat, cfg, rules, ctx)
         if cfg.use_plan_cache:
             cached = self.plan_cache.get(key)
             if cached is not None:
-                return Executable(self, program, cached, from_cache=True)
+                return Executable(self, program, cached, from_cache=True,
+                                  context=ctx)
             if self.plan_store is not None:
                 # store validity is judged by statistics CONTENT, so a
                 # restarted process (version counters back at zero) still
@@ -235,13 +263,15 @@ class CobraSession:
                     # warmed from disk: promote into the in-memory LRU so
                     # repeated compiles in this session stay O(1)
                     self.plan_cache.put(key, stored)
-                    return Executable(self, program, stored, from_cache=True)
+                    return Executable(self, program, stored, from_cache=True,
+                                      context=ctx)
 
         rule_objs = list(rules) if rules is not None else cfg.resolve_rules()
         result = run_search(program, self.db, cat, choice=cfg.choice,
                             rules=rule_objs, topk=cfg.topk,
                             max_combos=cfg.max_combos,
-                            max_rounds=cfg.max_rounds)
+                            max_rounds=cfg.max_rounds,
+                            context=ctx, cost_model=cfg.cost_model)
         self.memo_runs += 1
         if cfg.use_plan_cache:
             if self.plan_store is not None:
@@ -252,7 +282,7 @@ class CobraSession:
                     key, result,
                     stats_fp=self.db.stats_fingerprint(program_tables(program)))
             self.plan_cache.put(key, result)
-        return Executable(self, program, result, from_cache=False)
+        return Executable(self, program, result, from_cache=False, context=ctx)
 
     # ------------------------------------------------------------ execution
     def execute(self, program: Program, *,
@@ -292,15 +322,28 @@ class CobraSession:
         # for program plans: an HW-table override (e.g. a different chip's
         # peak FLOPs) must not be served a plan costed for the old hardware
         from ..analysis.roofline import HW
-        hw_key = tuple(sorted(HW.items()))
+        # a context-pinned HW profile overlays the global table for this
+        # plan; the cache keys on the EFFECTIVE values, so a global HW
+        # override (e.g. a different chip's peak FLOPs) still invalidates
+        # and a pinned profile is genuinely what the plan is costed for
+        override = dict(self.context.hw)
+        hw_key = tuple(sorted({**HW, **override}.items()))
         key = (name, tuple(mesh), top_k, hw_key)
         cached = self._step_cache.get(key)
         if cached is not None:
             return cached
 
         t0 = time.perf_counter()
-        out = planner_plan(cfg, seq_len, global_batch, kind, mesh=mesh,
-                           top_k=top_k)
+        saved = {k: HW[k] for k in override if k in HW}
+        added = set(override) - set(HW)
+        HW.update(override)
+        try:
+            out = planner_plan(cfg, seq_len, global_batch, kind, mesh=mesh,
+                               top_k=top_k)
+        finally:
+            HW.update(saved)
+            for k in added:
+                HW.pop(k, None)
         dt = time.perf_counter() - t0
         if top_k == 1:
             report = PlanReport(

@@ -14,19 +14,71 @@ All database-dependent terms (N_Q, S_row, C_Q^F, C_Q^L) come from
 paper consulted the DB optimizer the same way). ORM point lookups are
 costed with the Hibernate id-cache modeled: first access per distinct key
 is a round trip, the rest are local hits.
+
+**Execution-context awareness.** The model is constructed from
+``(db, catalog, context)`` — an :class:`~repro.core.context.ExecutionContext`
+describing the runtime the plan is compiled for:
+
+  * ``batch_size`` B > 1 models :class:`~repro.runtime.batch.BatchClientEnv`
+    sharing across a batch: a query site whose bindings cannot differ
+    between invocations (no ``Param`` anywhere in the tree) is fetched from
+    the server once per batch, so its cost amortizes to C_Q / B per
+    invocation (:meth:`CostModel.amortize`); parameterized sites stay
+    un-amortized (conservative — their bindings may differ per invocation).
+    ORM point lookups amortize the same way (the batch env's id-cache and
+    bulk navigation fetch are shared).
+  * observed iteration counts from ``context.stats`` replace the catalog
+    defaults for while guards (``while_iters_default``) and cursor loops
+    over collection sources (``loop_iters_default``) — the sites whose
+    cardinality table statistics cannot estimate.
+
+``CostModel`` is a pluggable protocol: ``OptimizerConfig.cost_model``
+accepts any class with this constructor signature and method surface, and
+the memo search costs plans through it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
-from ..relational.algebra import Cmp, Col, Param, Query, Scan, Select
+from ..relational.algebra import Cmp, Col, Param, Query, Scalar, Scan, Select
 from ..relational.database import DatabaseServer, NetworkProfile
+from .context import ExecutionContext, ONE_SHOT, loop_site_key, while_site_key
 from .fir import (FCacheLookupAllE, FCacheLookupE, FCondE, FExpr, FFoldE,
                   FPointLookup, FQueryE, FSelLookupE, FTupleE, fir_children)
 
-__all__ = ["CostCatalog", "CostModel"]
+__all__ = ["CostCatalog", "CostModel", "query_has_params"]
+
+
+def _embedded_scalars(node):
+    """Every Scalar hanging off one dataclass node — covers predicates,
+    computed-projection pairs, and whatever scalar slots future operators
+    add, without naming fields."""
+    for f in dataclasses.fields(node):
+        v = getattr(node, f.name)
+        if isinstance(v, Scalar):
+            yield v
+        elif isinstance(v, tuple):
+            for item in v:
+                if isinstance(item, Scalar):
+                    yield item
+                elif isinstance(item, tuple):
+                    yield from (x for x in item if isinstance(x, Scalar))
+
+
+def query_has_params(q: Query) -> bool:
+    """True iff a relational tree contains a ``Param`` anywhere (predicates
+    and computed projections included) — the sites whose bindings may differ
+    between batched invocations, so they never amortize."""
+    def scalar_has(s: Scalar) -> bool:
+        if isinstance(s, Param):
+            return True
+        return any(scalar_has(k) for k in _embedded_scalars(s))
+
+    if any(scalar_has(s) for s in _embedded_scalars(q)):
+        return True
+    return any(query_has_params(c) for c in q.children())
 
 
 @dataclasses.dataclass
@@ -43,9 +95,34 @@ class CostCatalog:
 
 
 class CostModel:
-    def __init__(self, db: DatabaseServer, catalog: CostCatalog):
+    def __init__(self, db: DatabaseServer, catalog: CostCatalog,
+                 context: Optional[ExecutionContext] = None):
         self.db = db
         self.cat = catalog
+        self.context = context if context is not None else ONE_SHOT
+
+    # ------------------------------------------------------------ batching
+    @property
+    def batch_size(self) -> float:
+        return float(max(1, self.context.batch_size))
+
+    def amortize(self, cost: float) -> float:
+        """Per-invocation share of a cost paid once per batch."""
+        return cost / self.batch_size
+
+    def source_amortizable(self, source: FExpr) -> bool:
+        """Can this fold source's server fetch be shared across a batch?
+        Only binding-free query sites: identical every invocation, so the
+        batch env's site cache serves all but the first from local state."""
+        return (isinstance(source, FQueryE)
+                and not query_has_params(source.query))
+
+    # ----------------------------------------------------- iteration counts
+    def while_iters(self, pred) -> float:
+        """K for a guarded loop: the observed count for this while site when
+        the context carries one, else the catalog default."""
+        observed = self.context.stats.iters_for(while_site_key(pred))
+        return observed if observed is not None else self.cat.while_iters_default
 
     # ------------------------------------------------------------- queries
     def query_cost(self, q: Query) -> float:
@@ -102,9 +179,11 @@ class CostModel:
     def _ops_cost(self, e: FExpr, n_rows: float) -> float:
         c = self.cat
         if isinstance(e, FPointLookup):
-            # ORM id-cache: distinct keys pay a round trip once; rest are hits
+            # ORM id-cache: distinct keys pay a round trip once; rest are
+            # hits. In a batch the id-cache (and the bulk navigation fetch)
+            # is shared across invocations, so the round trips amortize.
             ndv = min(n_rows, self.ndv(e.table, e.key_col))
-            per_row = (ndv * self.point_query_cost(e.table)
+            per_row = (ndv * self.amortize(self.point_query_cost(e.table))
                        + (n_rows - ndv) * c.c_z) / max(n_rows, 1.0)
             return per_row + self._ops_cost(e.keyexpr, n_rows)
         if isinstance(e, FCacheLookupE):
@@ -183,11 +262,30 @@ class CostModel:
             out += self._iexpr_cost(k)
         return out
 
-    def loop_iters(self, source) -> float:
-        """K for non-fold loops."""
+    def loop_iters(self, source, var: Optional[str] = None) -> float:
+        """K for non-fold loops. Query sources are estimated from table
+        statistics; collection sources (worklists, accumulated lists) have
+        no statistics, so the context's observed count for this loop site —
+        when the feedback loop published one — replaces the catalog
+        default."""
         from .regions import ILoadAll, IQuery
         if isinstance(source, IQuery):
             return self.query_rows(source.query)
         if isinstance(source, ILoadAll):
             return float(self.db.stats(source.table).nrows)
+        if var is not None:
+            observed = self.context.stats.iters_for(loop_site_key(var, source))
+            if observed is not None:
+                return observed
         return self.cat.loop_iters_default
+
+    def loop_source_cost(self, source) -> float:
+        """Cost of evaluating a cursor loop's source once per invocation —
+        amortized for binding-free query sources (fetched once per batch)."""
+        from .regions import ILoadAll, IQuery
+        full = self._iexpr_cost(source)
+        if isinstance(source, ILoadAll) or (
+                isinstance(source, IQuery) and not source.bindings
+                and not query_has_params(source.query)):
+            return self.amortize(full)
+        return full

@@ -42,12 +42,13 @@ import numpy as np
 from ..relational.algebra import Query, Scan
 from ..relational.database import ClientEnv
 from ..relational.table import Table
+from .context import loop_site_key, while_site_key
 
 __all__ = [
     # expressions
     "IExpr", "IConst", "IVar", "IField", "IBin", "ICall", "IQuery", "ILoadAll",
-    "INav", "ICacheLookup", "IEmptyList", "IEmptyMap", "ILen", "IScalarQuery",
-    "IQueryValues",
+    "INav", "ICacheLookup", "IEmptyList", "IEmptyMap", "IIndex", "ILen",
+    "IScalarQuery", "IQueryValues",
     # statements
     "Stmt", "Assign", "CollectionAdd", "MapPut", "Prefetch", "CacheByColumn",
     "UpdateRow", "NoOp", "BreakStmt", "ContinueStmt", "ReturnStmt",
@@ -319,6 +320,27 @@ class IEmptyMap(IExpr):
 
     def __repr__(self):
         return "Map()"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IIndex(IExpr):
+    """Subscript read ``base[key]`` on a collection/map/query-result value.
+
+    The field is named ``keyexpr`` (not ``index``) so the generic IExpr
+    walkers — table extraction in ``api.cache`` and the operator-cost
+    traversal in ``core.cost`` — cover it without special cases."""
+
+    base: IExpr
+    keyexpr: IExpr
+
+    def key(self):
+        return ("iindex", self.base.key(), self.keyexpr.key())
+
+    def free_vars(self):
+        return self.base.free_vars() + self.keyexpr.free_vars()
+
+    def __repr__(self):
+        return f"{self.base!r}[{self.keyexpr!r}]"
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -723,6 +745,14 @@ class Interpreter:
             return []
         if isinstance(e, IEmptyMap):
             return {}
+        if isinstance(e, IIndex):
+            v = self.eval(e.base, state)
+            k = self.eval(e.keyexpr, state)
+            if isinstance(v, Table):
+                return _Row(v.to_rows()[int(k)])
+            out = v[k]
+            return _Row(out) if isinstance(out, dict) and not isinstance(
+                out, _Row) else out
         if isinstance(e, ILen):
             v = self.eval(e.base, state)
             return v.nrows if isinstance(v, Table) else len(v)
@@ -802,21 +832,27 @@ class Interpreter:
             self._exec_loop_exact(r, src, state)
         elif isinstance(r, WhileRegion):
             iters = 0
-            while True:
-                self.env.charge_statement()  # guard evaluation
-                if not bool(self.eval(r.pred, state)):
-                    break
-                iters += 1
-                if iters > MAX_WHILE_ITERS:
-                    raise RuntimeError(
-                        f"while loop exceeded {MAX_WHILE_ITERS} iterations "
-                        f"(guard {r.pred!r} never became false)")
-                try:
-                    self.exec_region(r.body, state)
-                except _ContinueSignal:
-                    continue
-                except _BreakSignal:
-                    break
+            try:
+                while True:
+                    self.env.charge_statement()  # guard evaluation
+                    if not bool(self.eval(r.pred, state)):
+                        break
+                    iters += 1
+                    if iters > MAX_WHILE_ITERS:
+                        raise RuntimeError(
+                            f"while loop exceeded {MAX_WHILE_ITERS} iterations "
+                            f"(guard {r.pred!r} never became false)")
+                    try:
+                        self.exec_region(r.body, state)
+                    except _ContinueSignal:
+                        continue
+                    except _BreakSignal:
+                        break
+            finally:
+                # observed iteration count for this while site — the number
+                # the cost model only ever estimated (while_iters_default);
+                # the feedback controller folds these into a StatsProfile
+                self.env.record_iterations(while_site_key(r.pred), iters)
         else:
             raise TypeError(f"cannot exec region {r!r}")
 
@@ -826,6 +862,12 @@ class Interpreter:
             rows = src.to_rows()
         elif isinstance(src, list):
             rows = src
+            # collection-source loops have no table statistics behind them;
+            # record the true length so feedback can replace the cost
+            # model's loop_iters_default for this site
+            if not isinstance(r.source, (IQuery, ILoadAll)):
+                self.env.record_iterations(loop_site_key(r.var, r.source),
+                                           len(rows))
         else:
             raise TypeError(f"cannot iterate {type(src)}")
         for row in rows:

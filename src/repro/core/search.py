@@ -25,7 +25,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..relational.algebra import Query, Scan
-from .cost import CostCatalog, CostModel
+from .cost import CostCatalog, CostModel, query_has_params
 from .dag import AndNode, Memo, expand
 from .fir import FExpr, FPrefetchE, NameGen, fold_to_loop
 from .regions import (Assign, BasicBlock, CondRegion, IBin, IQuery,
@@ -119,22 +119,37 @@ class Searcher:
         return out
 
     # ------------------------------------------------------------ costing
+    def _amortized_once(self, key) -> bool:
+        """True when a body resource is fetched once per BATCH rather than
+        once per loop iteration: its site is binding-free (flagged at
+        creation) and the context batches invocations, so the shared
+        site cache serves every re-execution after the first."""
+        return self.cm.batch_size > 1 and key[-1] is True
+
     def _compose(self, node: AndNode, children: Tuple[Plan, ...]
                  ) -> Tuple[float, Tuple[Tuple[object, float], ...]]:
         """Full cost composition for one AND-node given chosen child plans.
 
-        Resource kinds: ("fold", ·) = per-execution loop shell (source query
-        + header), multiplied when nested under an imperative loop;
-        ("prefetch", ·) = one-time hoistable cache fill — NEVER multiplied
-        (the [13] heuristic hoists it to the earliest program point)."""
+        Resource kinds: ("fold", ·, amortizable) = per-execution loop shell
+        (source query + header), multiplied when nested under an imperative
+        loop; ("prefetch", ·, amortizable) = one-time hoistable cache fill —
+        NEVER multiplied (the [13] heuristic hoists it to the earliest
+        program point). The trailing flag marks binding-free server fetches,
+        whose cost is stored already amortized by the context's batch size
+        (one fetch per batch, shared via the batch env's site cache)."""
         cm = self.cm
         cat = cm.cat
         if node.op == "block":
             stmt = node.payload
             from .regions import Prefetch
             if isinstance(stmt, Prefetch):
-                key = ("prefetch", _query_table(stmt.query), stmt.col)
-                return 0.0, ((key, cm.prefetch_cost(stmt.query)),)
+                amortizable = not query_has_params(stmt.query)
+                key = ("prefetch", _query_table(stmt.query), stmt.col,
+                       amortizable)
+                cost = cm.prefetch_cost(stmt.query)
+                if amortizable:
+                    cost = cm.amortize(cost)
+                return 0.0, ((key, cost),)
             return cm.block_cost(stmt), ()
         if node.op == "seq":
             base = sum(p.base for p in children)
@@ -148,24 +163,35 @@ class Searcher:
             return base, _merge_resources(*[c.resources for c in children])
         if node.op == "loop":
             var, source = node.payload
-            k = cm.loop_iters(source)
+            k = cm.loop_iters(source, var)
             body = children[0]
-            per_exec = body.base + sum(c for key, c in body.resources
-                                       if key[0] == "fold")
+            # binding-free fold sources under a batched context are fetched
+            # once per batch (site cache), not once per iteration
+            per_iter = sum(c for key, c in body.resources
+                           if key[0] == "fold" and not self._amortized_once(key))
+            once = sum(c for key, c in body.resources
+                       if key[0] == "fold" and self._amortized_once(key))
             prefetch_res = tuple((key, c) for key, c in body.resources
                                  if key[0] != "fold")
-            base = k * (per_exec + cat.c_z) + cm._iexpr_cost(source)
+            base = (k * (body.base + per_iter + cat.c_z) + once
+                    + cm.loop_source_cost(source))
             return base, prefetch_res
         if node.op == "while":
-            # guarded loop: iteration count is data dependent, so charge a
-            # catalog-estimated K. EVERY body resource is multiplied (a
-            # prefetch inside a while body re-executes each iteration and is
-            # never hoisted across the guard), so nothing escapes upward as
-            # a shared resource — conservative by construction.
-            k = cat.while_iters_default
+            # guarded loop: iteration count is data dependent, so charge the
+            # context's observed count for this site (catalog default when
+            # none). EVERY body resource is multiplied (a prefetch inside a
+            # while body re-executes each iteration and is never hoisted
+            # across the guard) — EXCEPT binding-free fetches under a
+            # batched context, which the shared site cache turns into one
+            # fetch per batch. Nothing escapes upward as a shared resource —
+            # conservative by construction.
+            k = cm.while_iters(node.payload)
             body = children[0]
-            per_exec = body.base + sum(c for _, c in body.resources)
-            base = k * (per_exec + cat.c_z) + cat.c_z
+            per_iter = sum(c for key, c in body.resources
+                           if not self._amortized_once(key))
+            once = sum(c for key, c in body.resources
+                       if self._amortized_once(key))
+            base = k * (body.base + per_iter + cat.c_z) + cat.c_z + once
             return base, ()
         if node.op == "assemble":
             base = sum(p.base for p in children)
@@ -175,19 +201,38 @@ class Searcher:
             pre, fold = _get_parts(payload)
             src_cost, n = cm.fold_source(fold)
             slot = cm.slot_row_cost(fold.func.items[i], n)
-            res: List[Tuple[object, float]] = [
-                (("fold", fold.key()), src_cost + n * cat.c_z)]
+            res: List[Tuple[object, float]] = []
+            if cm.source_amortizable(fold.source):
+                # only the server fetch is shared across a batch; the local
+                # loop shell (n · C_Z) runs every execution — under a
+                # while/loop it must still multiply by K, so it rides as a
+                # separate never-amortized fold resource (same dedup)
+                res.append((("fold", fold.key(), True), cm.amortize(src_cost)))
+                res.append((("fold", fold.key(), "shell", False),
+                            n * cat.c_z))
+            else:
+                res.append((("fold", fold.key(), False),
+                            src_cost + n * cat.c_z))
             for p in pre:
                 if isinstance(p, FPrefetchE):
-                    res.append(((("prefetch", _query_table(p.query), p.col)),
-                                cm.prefetch_cost(p.query)))
+                    p_am = not query_has_params(p.query)
+                    p_cost = cm.prefetch_cost(p.query)
+                    res.append((("prefetch", _query_table(p.query), p.col,
+                                 p_am),
+                                cm.amortize(p_cost) if p_am else p_cost))
             return n * slot, tuple(res)
         if node.op == "slot-query":
             _, var, q, op, col, binding = node.payload
-            return cm.query_cost(q) + cat.c_z, ()
+            qc = cm.query_cost(q)
+            if binding is None and not query_has_params(q):
+                qc = cm.amortize(qc)
+            return qc + cat.c_z, ()
         if node.op == "slot-query-rows":
             _, var, q, col = node.payload
-            return cm.query_cost(q) + cat.c_z, ()
+            qc = cm.query_cost(q)
+            if not query_has_params(q):
+                qc = cm.amortize(qc)
+            return qc + cat.c_z, ()
         raise TypeError(f"unknown op {node.op}")
 
 
@@ -412,8 +457,14 @@ class OptimizationResult:
 def run_search(program: Program, db, catalog: CostCatalog, *,
                choice: str = "cost", rules: Optional[Sequence] = None,
                topk: int = _TOPK, max_combos: int = _MAX_COMBOS,
-               max_rounds: int = 64) -> OptimizationResult:
+               max_rounds: int = 64, context=None,
+               cost_model=None) -> OptimizationResult:
     """One full memo pass: build → saturate rules → search → codegen.
+
+    ``context`` is an :class:`~repro.core.context.ExecutionContext` (batch
+    size + observed iteration stats) the plan is costed for; ``cost_model``
+    is a pluggable :class:`~repro.core.cost.CostModel`-protocol class,
+    constructed as ``cost_model(db, catalog, context)``.
 
     This is the uncached engine; callers wanting compile-once/execute-many
     semantics should go through ``repro.api.CobraSession``, which fronts
@@ -423,7 +474,7 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
     memo, root = build_memo(program, ctx)
     stats = expand(memo, list(rules) if rules is not None else default_rules(),
                    ctx, max_rounds=max_rounds)
-    cm = CostModel(db, catalog)
+    cm = (cost_model or CostModel)(db, catalog, context)
     searcher = Searcher(memo, cm, ctx, choice=choice, topk=topk,
                         max_combos=max_combos)
     plans = searcher.group_plans(root)

@@ -303,7 +303,15 @@ def make_scan() -> Program:
     exists for a guard whose iteration count is data dependent — but the
     inner aggregation loop is still rewritten by T5 into a correlated
     ``SELECT SUM(t_hours) WHERE t_state = :k`` whose binding re-evaluates
-    each round, so the cost-based win survives inside the guarded region."""
+    each round, so the cost-based win survives inside the guarded region.
+
+    SCAN is also the canonical context-flip program: compiled one-shot the
+    T5 aggregate wins (one round trip per round), while under
+    ``ExecutionContext(batch_size>=8)`` the binding-free prefetch site
+    inside the while body amortizes across the batch and wins instead —
+    and observed iteration counts published by the feedback loop (instead
+    of ``while_iters_default``) move the flip point (tests/test_context.py,
+    ``make bench-batch``)."""
     def SCAN(threshold=100.0, max_state=5):
         state = 0
         total = 0.0

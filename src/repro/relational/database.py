@@ -368,6 +368,13 @@ class ClientEnv:
         self.query_log: list = []
         self.n_queries = 0
         self.n_round_trips = 0
+        # (site_key, iteration_count) per executed while loop / collection-
+        # source cursor loop — the observations the feedback controller
+        # folds into an ExecutionContext's StatsProfile
+        self.iteration_log: list = []
+
+    def record_iterations(self, site: str, count: int) -> None:
+        self.iteration_log.append((site, int(count)))
 
     # ---------------------------------------------------------------- clock
     def charge_statement(self, n: int = 1) -> None:

@@ -133,6 +133,9 @@ class BatchResult(Sequence):
     batched: bool            # False -> sequential fallback (program updates)
     site_hits: int = 0
     observations: List = dataclasses.field(default_factory=list)
+    # (site_key, iteration_count) per executed while / collection loop —
+    # consumed by FeedbackController.observe_iterations into a StatsProfile
+    iteration_observations: List = dataclasses.field(default_factory=list)
 
     def __getitem__(self, i):
         return self.results[i]
@@ -170,9 +173,18 @@ def run_batch(session, program: Program,
 
     if program_has_updates(program):
         # correctness first: a mutating program may change what later
-        # invocations should observe, so each one gets an isolated env
-        results = [session.execute(program, network=network, mode=mode, **p)
-                   for p in param_sets]
+        # invocations should observe, so each one gets an isolated env —
+        # but iteration observations are still harvested per env, so
+        # mutating programs feed the feedback loop's StatsProfile too
+        results, iteration_obs = [], []
+        for p in param_sets:
+            env = ClientEnv(session.db, network or session.catalog.network,
+                            c_z=session.catalog.c_z)
+            outputs = Interpreter(env, mode).run(program, p or None)
+            results.append(ExecutionResult(
+                outputs=outputs, simulated_s=env.clock,
+                n_queries=env.n_queries, n_round_trips=env.n_round_trips))
+            iteration_obs.extend(env.iteration_log)
         session.executions += len(param_sets)
         if executable is not None:
             executable.n_runs += len(param_sets)
@@ -181,7 +193,8 @@ def run_batch(session, program: Program,
             simulated_s=sum(r.simulated_s for r in results),
             n_queries=sum(r.n_queries for r in results),
             n_round_trips=sum(r.n_round_trips for r in results),
-            batched=False)
+            batched=False,
+            iteration_observations=iteration_obs)
 
     env = BatchClientEnv(session.db, network or session.catalog.network,
                          c_z=session.catalog.c_z)
@@ -202,4 +215,5 @@ def run_batch(session, program: Program,
                        n_queries=env.n_queries,
                        n_round_trips=env.n_round_trips, batched=True,
                        site_hits=env.site_hits,
-                       observations=list(env.observations))
+                       observations=list(env.observations),
+                       iteration_observations=list(env.iteration_log))

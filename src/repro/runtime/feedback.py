@@ -25,6 +25,17 @@ Two drift signals per query site:
     row signal is blind to. Wall-clock is noisier, so its threshold
     (``cost_drift_threshold``) defaults looser, and it only fires where the
     row signal did not (no double-counted events per site).
+
+Besides the drift signals, the controller **records observed iteration
+counts** per while-loop / collection-loop site (the counts the cost model
+only ever estimated with ``while_iters_default`` / ``loop_iters_default``)
+and **publishes** them as a :class:`~repro.core.context.StatsProfile` —
+the stats half of an :class:`~repro.core.context.ExecutionContext`. A
+site's published value only moves when the running mean drifts past
+``iters_publish_threshold`` (ratio), so context fingerprints — and hence
+plan-cache keys — stay stable under observation noise, and a publish is
+precisely the event that triggers a context-driven recompile in
+:class:`~repro.runtime.serving.ServingRuntime`.
 """
 
 from __future__ import annotations
@@ -33,6 +44,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..api.cache import query_tables
+from ..core.context import StatsProfile
 
 __all__ = ["DriftEvent", "FeedbackController"]
 
@@ -64,21 +76,31 @@ class FeedbackController:
     """Observes served executions; decides when statistics must be refreshed."""
 
     def __init__(self, session, drift_threshold: float = 3.0,
-                 cost_drift_threshold: Optional[float] = 10.0):
+                 cost_drift_threshold: Optional[float] = 10.0,
+                 iters_publish_threshold: float = 1.5):
         if drift_threshold <= 1.0:
             raise ValueError("drift_threshold must be > 1 (a ratio)")
         if cost_drift_threshold is not None and cost_drift_threshold <= 1.0:
             raise ValueError("cost_drift_threshold must be > 1 (a ratio) "
                              "or None to disable wall-clock drift")
+        if iters_publish_threshold <= 1.0:
+            raise ValueError("iters_publish_threshold must be > 1 (a ratio)")
         self.session = session
         self.drift_threshold = drift_threshold
         self.cost_drift_threshold = cost_drift_threshold
+        self.iters_publish_threshold = iters_publish_threshold
         self.events: List[DriftEvent] = []
         self.refreshes = 0
         self.observed_queries = 0
         self.observed_wall_s = 0.0
         # per-site aggregates: sql -> [count, total rows, total wall-clock]
         self._sites: Dict[str, List[float]] = {}
+        # per-iteration-site aggregates: site_key -> [count, total iters]
+        self._iter_sites: Dict[str, List[float]] = {}
+        # published (hysteresis-stable) iteration counts per site — the
+        # values a StatsProfile fingerprint is built from
+        self._published_iters: Dict[str, float] = {}
+        self.iters_publishes = 0
 
     # ------------------------------------------------------------- observing
     def _estimated_cost_s(self, q) -> float:
@@ -128,6 +150,43 @@ class FeedbackController:
                     observed_s=float(wall_s)))
         return sorted(drifted)
 
+    def observe_iterations(self, observations: Sequence[Tuple[str, int]]
+                           ) -> bool:
+        """Fold (site_key, iteration_count) observations — the interpreter's
+        per-while/per-collection-loop records — into the per-site running
+        means, and re-publish any site whose mean left the hysteresis band
+        around its published value. Returns True when at least one site's
+        published value moved (the caller's recompile trigger)."""
+        changed = False
+        for site, count in observations:
+            agg = self._iter_sites.setdefault(site, [0, 0.0])
+            agg[0] += 1
+            agg[1] += count
+            mean = agg[1] / agg[0]
+            published = self._published_iters.get(site)
+            if published is None:
+                self._published_iters[site] = mean
+                self.iters_publishes += 1
+                changed = True
+                continue
+            ratio = max((mean + 1.0) / (published + 1.0),
+                        (published + 1.0) / (mean + 1.0))
+            if ratio > self.iters_publish_threshold:
+                self._published_iters[site] = mean
+                self.iters_publishes += 1
+                changed = True
+        return changed
+
+    def stats_profile(self) -> StatsProfile:
+        """The published iteration counts (plus per-query-site mean wall-
+        clock) as the StatsProfile an ExecutionContext carries into the
+        cost model. Published — not raw — values keep context fingerprints,
+        and with them plan-cache keys, stable between publish events."""
+        wall = {sql: agg[2] / max(agg[0], 1)
+                for sql, agg in self._sites.items() if agg[2]}
+        return StatsProfile.of(iters=dict(self._published_iters),
+                               site_wall_s=wall)
+
     # -------------------------------------------------------------- reacting
     def refresh(self, tables: Sequence[str]) -> None:
         """Re-analyze the drifted tables only: their stats versions bump, so
@@ -146,6 +205,10 @@ class FeedbackController:
             "drift_events_wall_clock": sum(
                 1 for e in self.events if e.kind == "wall_clock"),
             "stats_refreshes": self.refreshes,
+            "iteration_sites": {site: {"n": int(n), "avg_iters": tot / max(n, 1),
+                                       "published": self._published_iters.get(site)}
+                                for site, (n, tot) in self._iter_sites.items()},
+            "iters_publishes": self.iters_publishes,
             "sites": {sql: {"n": int(n), "avg_rows": rows / max(n, 1),
                             "wall_s": wall}
                       for sql, (n, rows, wall) in self._sites.items()},

@@ -21,6 +21,18 @@ Request processing per cycle:
      search may pick a different winner under the fresh statistics;
   4. responses are returned in the original request order.
 
+Every compile goes through the runtime's **serving context** — an
+:class:`~repro.core.context.ExecutionContext` whose ``batch_size`` is the
+runtime's and whose :class:`~repro.core.context.StatsProfile` is whatever
+the feedback controller has published (observed while-loop and worklist-
+loop iteration counts). The memo search therefore costs plans for batched
+execution — C_NRT of binding-free sites amortized across the batch — and
+may legitimately pick a different winner than a one-shot session would for
+the very same program. When a batch's iteration observations move a
+published count, the context fingerprint changes and the affected programs
+are recompiled under the new context (programs without that site keep
+their keys, hence their plans, untouched).
+
 The module-level :func:`serve` is the one-call convenience wrapper used by
 ``examples/serve_programs.py``.
 """
@@ -30,6 +42,7 @@ from __future__ import annotations
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from ..api.cache import program_tables
+from ..core.context import ExecutionContext
 from ..core.regions import Program
 from .feedback import FeedbackController
 
@@ -40,7 +53,8 @@ class ServingRuntime:
     def __init__(self, session, *, store=None, batch_size: int = 16,
                  drift_threshold: float = 3.0,
                  cost_drift_threshold: Optional[float] = 10.0,
-                 feedback: bool = True):
+                 feedback: bool = True,
+                 context: Optional[ExecutionContext] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.session = session
@@ -48,6 +62,10 @@ class ServingRuntime:
             from .store import PlanStore
             session.plan_store = PlanStore.coerce(store)
         self.batch_size = batch_size
+        # the base serving context; observed stats are layered onto it as
+        # the feedback controller publishes them
+        self._base_context = context if context is not None else \
+            ExecutionContext(batch_size=batch_size)
         self.feedback: Optional[FeedbackController] = (
             FeedbackController(session, drift_threshold,
                                cost_drift_threshold=cost_drift_threshold)
@@ -58,17 +76,29 @@ class ServingRuntime:
         self.requests_served = 0
         self.batches_run = 0
         self.recompiles = 0
+        self.context_recompiles = 0
         self.simulated_s = 0.0
         self.n_round_trips = 0
+
+    # -------------------------------------------------------------- context
+    def current_context(self) -> ExecutionContext:
+        """The ExecutionContext serving compiles are costed for right now:
+        the runtime's batch size + the feedback controller's published
+        iteration statistics."""
+        if self.feedback is None:
+            return self._base_context
+        return self._base_context.with_stats(self.feedback.stats_profile())
 
     # ---------------------------------------------------------- registration
     def register(self, program: Program, name: Optional[str] = None):
         """Register (and compile) a program for serving; returns its
-        Executable. Compilation goes through the session, so the plan
+        Executable. Compilation is costed under the serving context (batch
+        size + observed stats) and goes through the session, so the plan
         cache/store make repeated registration cheap."""
         name = name or program.name
         self._programs[name] = program
-        self._executables[name] = self.session.compile(program)
+        self._executables[name] = self.session.compile(
+            program, context=self.current_context())
         return self._executables[name]
 
     def executable(self, name: str):
@@ -106,35 +136,63 @@ class ServingRuntime:
         return responses
 
     def _after_batch(self, batch) -> None:
-        if self.feedback is None or not batch.observations:
+        if self.feedback is None:
             return
-        drifted = self.feedback.observe(batch.observations)
-        if not drifted:
-            return
-        self.feedback.refresh(drifted)
-        self._recompile_touching(drifted)
+        stats_moved = False
+        if batch.iteration_observations:
+            stats_moved = self.feedback.observe_iterations(
+                batch.iteration_observations)
+        drifted = self.feedback.observe(batch.observations) \
+            if batch.observations else []
+        if drifted:
+            self.feedback.refresh(drifted)
+            self._recompile_touching(drifted)
+        if stats_moved:
+            # a published iteration count moved: the serving context's
+            # fingerprint changed, so recompile under the new context. The
+            # fingerprint is restricted per program to its own sites —
+            # programs without the moved site (and any the drift branch
+            # just recompiled under this same context) hit the plan cache.
+            self._recompile_for_context()
 
     def _recompile_touching(self, tables: Sequence[str]) -> None:
         """Recompile registered programs whose table set intersects
         ``tables``; per-table stats versions keep the others' plans hot."""
         drifted = set(tables)
+        ctx = self.current_context()
         for name, program in self._programs.items():
             if drifted & set(program_tables(program)):
-                self._executables[name] = self.session.compile(program)
+                self._executables[name] = self.session.compile(program,
+                                                               context=ctx)
                 self.recompiles += 1
+
+    def _recompile_for_context(self) -> None:
+        """Recompile every registered program under the refreshed context;
+        only those whose per-program context fingerprint actually changed
+        miss the cache (and count as context recompiles)."""
+        ctx = self.current_context()
+        for name, program in self._programs.items():
+            exe = self.session.compile(program, context=ctx)
+            if not exe.from_cache:
+                self.context_recompiles += 1
+                self.recompiles += 1
+            self._executables[name] = exe
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, object]:
         t = {"requests_served": self.requests_served,
              "batches_run": self.batches_run,
              "recompiles": self.recompiles,
+             "context_recompiles": self.context_recompiles,
              "simulated_s": self.simulated_s,
              "round_trips": self.n_round_trips,
+             "context": self.current_context().describe(),
              "programs": sorted(self._programs)}
         t.update({f"session_{k}": v for k, v in self.session.telemetry.items()})
         if self.feedback is not None:
             fb = self.feedback.telemetry()
             fb.pop("sites", None)  # keep the summary flat
+            fb.pop("iteration_sites", None)
             t.update({f"feedback_{k}": v for k, v in fb.items()})
         return t
 

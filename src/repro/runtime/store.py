@@ -79,8 +79,12 @@ class PlanStore:
     # ----------------------------------------------------------- addressing
     @staticmethod
     def logical_key(key) -> str:
-        """Content hash of the plan's identity minus its stats token."""
-        ident = (key.program_fp, key.catalog_key, key.config_key)
+        """Content hash of the plan's identity minus its stats token. The
+        execution-context fingerprint is part of the identity: a plan
+        compiled for serving (batch_size=64) and one compiled one-shot are
+        different artifacts and coexist in the store."""
+        ident = (key.program_fp, key.catalog_key, key.config_key,
+                 getattr(key, "context_key", ()))
         return hashlib.sha256(repr(ident).encode()).hexdigest()[:32]
 
     def _path(self, lk: str) -> str:
@@ -227,6 +231,7 @@ class PlanStore:
             "program_fp": key.program_fp,
             "stats_token": [list(tv) for tv in key.stats_version]
             if isinstance(key.stats_version, tuple) else key.stats_version,
+            "context": repr(getattr(key, "context_key", ())),
             "est_cost_s": float(getattr(result, "est_cost", 0.0)),
             "program": getattr(getattr(result, "program", None), "name", "?"),
         }

@@ -827,3 +827,107 @@ class TestConservativeRewrites:
         exact = session.execute(p, mode="exact")
         assert fast.outputs == exact.outputs
         assert fast.simulated_s == pytest.approx(exact.simulated_s)
+
+
+# --------------------------------------------------------------------------
+# Subscript reads on traced values (IIndex)
+# --------------------------------------------------------------------------
+
+class TestSubscriptReads:
+    def _session(self, network=FAST_LOCAL):
+        return CobraSession(make_wilos_db(60, ratio=10), CostCatalog(network))
+
+    def test_traced_list_index(self):
+        def f():
+            xs = []
+            for t in load_all("tasks"):
+                xs.append(t.t_hours)
+            first = xs[0]
+            return first
+
+        exe = self._session().compile(lift_program(f))
+        assert exe.run()["first"] == exe.run_baseline()["first"]
+
+    def test_traced_map_read(self):
+        def f(key=3):
+            m = {}
+            for t in load_all("tasks"):
+                m[t.t_id] = t.t_hours
+            v = m[key]
+            return v
+
+        exe = self._session().compile(lift_program(f))
+        assert exe.run(key=5)["v"] == exe.run_baseline(key=5)["v"]
+
+    def test_input_collection_index(self):
+        def f(worklist=()):
+            w0 = worklist[0]
+            return w0
+
+        exe = self._session().compile(lift_program(f))
+        assert exe.run(worklist=[42, 7])["w0"] == 42
+
+    def test_query_result_row_index(self):
+        def f():
+            rows = load_all("roles")
+            first = rows[0]
+            return first
+
+        exe = self._session().compile(lift_program(f))
+        row = exe.run()["first"]
+        assert row["r_id"] == 0 and "r_rank" in row
+
+    def test_index_inside_loop_body_fast_equals_exact(self):
+        """IIndex in a loop body is outside the vectorizable subset; the
+        fast interpreter must fall back and match exact execution."""
+        def f(offsets=()):
+            out = []
+            for t in load_all("tasks"):
+                out.append(t.t_hours + offsets[0])
+            return out
+
+        p = lift_program(f)
+        session = self._session()
+        fast = session.execute(p, offsets=[10.0])
+        exact = session.execute(p, mode="exact", offsets=[10.0])
+        assert fast.outputs == exact.outputs
+
+    def test_fingerprint_distinguishes_index(self):
+        def fa(worklist=()):
+            x = worklist[0]
+            return x
+
+        def fb(worklist=()):
+            x = worklist[1]
+            return x
+
+        assert program_fingerprint(lift_program(fa, name="F")) != \
+            program_fingerprint(lift_program(fb, name="F"))
+
+    def test_builder_getitem_emits_iindex(self):
+        from repro.core.regions import IIndex
+        b = ProgramBuilder("X")
+        w = b.input("w", ())
+        e = w[0]
+        assert isinstance(e.ir, IIndex)
+        assert e.ir.key()[0] == "iindex"
+
+    def test_slice_rejected(self):
+        def f(worklist=()):
+            x = worklist[0:2]
+            return x
+
+        with pytest.raises(LiftError, match="slice"):
+            lift_program(f)
+
+    def test_trace_time_subscript_still_static(self):
+        tables = ("tasks", "roles")
+
+        def f():
+            n = 0
+            for t in load_all(tables[0]):
+                n = n + 1
+            return n
+
+        exe = self._session().compile(lift_program(f))
+        assert exe.run()["n"] == 60

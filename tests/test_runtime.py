@@ -356,7 +356,11 @@ class TestFeedback:
         assert rt.recompiles >= 1
         # only P0 recompiled; M0's plan (sales only) never re-ran the memo
         assert session.memo_runs == memo_after_register + rt.recompiles
-        assert session.compile(make_m0()).from_cache
+        # ...and stays hot under the serving context it was compiled for
+        # (a one-shot compile would be a DIFFERENT plan request: plans are
+        # keyed by ExecutionContext, batch amortization may change winners)
+        assert session.compile(make_m0(),
+                               context=rt.current_context()).from_cache
 
     def test_serve_preserves_request_order_across_programs(self):
         db = make_orders_customer_db(100, 50)
@@ -468,6 +472,210 @@ class TestPlanStoreRaceAndGC:
     def test_max_entries_validation(self, tmp_path):
         with pytest.raises(ValueError, match="max_entries"):
             PlanStore(str(tmp_path / "plans"), max_entries=0)
+
+
+# --------------------------------------------------------------------------
+# PlanStore: max_entries GC racing concurrent put()s
+# --------------------------------------------------------------------------
+
+class TestPlanStoreGCvsConcurrentPuts:
+    """The first-writer-wins put() path interleaved with another store's
+    mtime-LRU GC on the same directory (two serving processes sharing a
+    bounded store)."""
+
+    @staticmethod
+    def _key(fp, stats=1):
+        from repro.api import PlanCacheKey
+        return PlanCacheKey(program_fp=fp, catalog_key=("cat",),
+                            config_key=("cfg",), stats_version=stats)
+
+    def test_gc_evicting_entry_between_puts_recreates_it(self, tmp_path):
+        """Writer A stores k1; writer B (bounded) stores k2 and its GC
+        drops k1. A's next put of k1 must see a cold store — a fresh write,
+        NOT a race — and the entry must be readable again."""
+        import os
+        import time
+        root = str(tmp_path / "plans")
+        a = PlanStore(root)
+        b = PlanStore(root, max_entries=1)
+        a.put(self._key("p1"), "plan-1")
+        # age k1 so B's GC deterministically picks it as LRU
+        p1_path = a._path(a.logical_key(self._key("p1")))
+        os.utime(p1_path, (time.time() - 100, time.time() - 100))
+        b.put(self._key("p2"), "plan-2")
+        assert b.gc_evictions == 1 and not os.path.exists(p1_path)
+
+        out = a.put(self._key("p1"), "plan-1-recompiled")
+        assert out == "plan-1-recompiled"
+        assert a.races == 0 and a.puts == 2          # fresh write, no race
+        assert a.get(self._key("p1")) == "plan-1-recompiled"
+
+    def test_first_writer_wins_survives_gc_pressure(self, tmp_path):
+        """A racing second writer is discarded (first-writer-wins) and the
+        canonical entry — its mtime refreshed by the winning get()s — stays
+        resident through a bounded writer's GC while a colder entry is
+        evicted instead."""
+        import os
+        import time
+        root = str(tmp_path / "plans")
+        a = PlanStore(root)
+        b = PlanStore(root, max_entries=2)
+        a.put(self._key("hot"), "canonical")
+        a.put(self._key("cold"), "cold-plan")
+        now = time.time()
+        for fp, age in (("hot", 50), ("cold", 90)):
+            p = a._path(a.logical_key(self._key(fp)))
+            os.utime(p, (now - age, now - age))
+
+        # the race: B compiled "hot" concurrently and tries to store its own
+        assert b.put(self._key("hot"), "duplicate") == "canonical"
+        assert b.races == 1 and b.puts == 0
+        # B's get refreshes the canonical entry's LRU recency...
+        assert b.get(self._key("hot")) == "canonical"
+        # ...so a third entry's GC evicts "cold", never the raced-on entry
+        b.put(self._key("third"), "plan-3")
+        assert b.gc_evictions == 1
+        assert a.get(self._key("hot")) == "canonical"
+        assert a.get(self._key("cold")) is None      # miss: GC'd
+        assert a.misses == 1
+
+    def test_get_survives_file_vanishing_after_exists_check(self, tmp_path,
+                                                            monkeypatch):
+        """A concurrent GC may unlink the entry between _load's exists()
+        check and the open() — that window must degrade to a cold miss,
+        not an exception."""
+        import os
+        store = PlanStore(str(tmp_path / "plans"))
+        store.put(self._key("p"), "plan")
+        path = store._path(store.logical_key(self._key("p")))
+        os.unlink(path)                              # the GC "wins"
+        monkeypatch.setattr(os.path, "exists",
+                            lambda p: True if p == path else
+                            os.path.lexists(p))
+        assert store.get(self._key("p")) is None
+        assert store.misses == 1 and store.errors == 0
+
+    def test_sequential_put_get_interleaving_converges(self, tmp_path):
+        """Many writers on one bounded directory: every surviving entry is
+        readable, counters are consistent, and the store never exceeds its
+        bound after any put."""
+        root = str(tmp_path / "plans")
+        stores = [PlanStore(root, max_entries=3) for _ in range(3)]
+        # "a" repeats while still resident (a race), then again after a GC
+        # evicted it (a fresh write); distinct keys keep the GC firing
+        sequence = ["a", "b", "c", "a", "d", "e", "a", "f", "b"]
+        for i, fp in enumerate(sequence):
+            s = stores[i % 3]
+            s.put(self._key(fp, stats=1), f"plan-{fp}")
+            assert len(s) <= 3
+        for s in stores:
+            for fp in "abcdef":
+                got = s.get(self._key(fp, stats=1))
+                assert got is None or got == f"plan-{fp}"
+        # at least one raced (repeat while resident) and the GC fired
+        assert sum(s.races for s in stores) >= 1
+        assert sum(s.gc_evictions for s in stores) >= 1
+        assert all(s.errors == 0 for s in stores)
+
+
+# --------------------------------------------------------------------------
+# Feedback: observed while/collection-loop iteration counts
+# --------------------------------------------------------------------------
+
+class TestIterationObservations:
+    def _scan_setup(self):
+        from repro.programs import make_scan
+        session = paper_session(make_wilos_db(200, ratio=10))
+        return session, session.compile(make_scan())
+
+    def test_run_batch_logs_while_iterations(self):
+        from repro.core import while_site_key, WhileRegion
+        session, exe = self._scan_setup()
+
+        def find_while(r):
+            if isinstance(r, WhileRegion):
+                return r
+            for c in r.children():
+                w = find_while(c)
+                if w is not None:
+                    return w
+
+        site = while_site_key(find_while(exe.source.body).pred)
+        batch = exe.run_batch([{"threshold": 1e9}] * 3)
+        counts = [n for s, n in batch.iteration_observations if s == site]
+        assert counts == [5, 5, 5]     # max_state=5, threshold never crossed
+
+    def test_controller_records_iterations_in_telemetry(self):
+        """Satellite acceptance: the controller records per-site iteration
+        counts — and they survive in telemetry — independent of whether any
+        recompile consumes them."""
+        session, exe = self._scan_setup()
+        fb = FeedbackController(session)
+        batch = exe.run_batch([{"threshold": 1e9}] * 2)
+        fb.observe_iterations(batch.iteration_observations)
+        t = fb.telemetry()
+        (site_stats,) = t["iteration_sites"].values()
+        assert site_stats["n"] == 2
+        assert site_stats["avg_iters"] == pytest.approx(5.0)
+        assert site_stats["published"] == pytest.approx(5.0)
+        assert t["iters_publishes"] == 1
+
+    def test_publish_hysteresis(self):
+        """Small fluctuations never move the published value (stable plan
+        keys); a real shift re-publishes."""
+        session, _ = self._scan_setup()
+        fb = FeedbackController(session)
+        assert fb.observe_iterations([("loop:site", 10)])          # first
+        assert not fb.observe_iterations([("loop:site", 11)])      # in band
+        profile = fb.stats_profile()
+        assert profile.iters_for("loop:site") == pytest.approx(10.0)
+        # sustained growth pushes the running mean out of the band
+        assert fb.observe_iterations([("loop:site", 100)] * 10)
+        assert fb.stats_profile().iters_for("loop:site") > 50
+
+    def test_worklist_loop_length_recorded(self):
+        from repro.core import loop_site_key, LoopRegion
+        session = paper_session(make_wilos_db(200, ratio=10))
+        exe = session.compile(make_wilos_e())
+
+        def find_loop(r):
+            if isinstance(r, LoopRegion):
+                return r
+            for c in r.children():
+                w = find_loop(c)
+                if w is not None:
+                    return w
+
+        site = loop_site_key(find_loop(exe.source.body).var,
+                             find_loop(exe.source.body).source)
+        batch = exe.run_batch([{"worklist": [1, 2, 3]}])
+        assert (site, 3) in batch.iteration_observations
+
+    def test_sequential_fallback_still_records_iterations(self):
+        """Mutating programs run the isolated sequential path — their
+        iteration observations must reach the feedback loop all the same."""
+        from repro.api import lift_program
+        from repro.api.lift import update_row
+        from repro.core import loop_site_key, LoopRegion
+
+        def f(worklist=()):
+            for wid in worklist:
+                update_row("roles", "r_rank", 1, "r_id", wid)
+
+        session = paper_session(make_wilos_db(100, ratio=10))
+        exe = session.compile(lift_program(f))
+        batch = exe.run_batch([{"worklist": [1, 2, 3, 4]}])
+        assert not batch.batched                 # update -> sequential path
+        loop = exe.source.body
+        while not isinstance(loop, LoopRegion):
+            loop = loop.children()[0]
+        site = loop_site_key(loop.var, loop.source)
+        assert (site, 4) in batch.iteration_observations
+
+    def test_publish_threshold_validation(self):
+        session, _ = self._scan_setup()
+        with pytest.raises(ValueError, match="iters_publish_threshold"):
+            FeedbackController(session, iters_publish_threshold=1.0)
 
 
 # --------------------------------------------------------------------------
