@@ -18,6 +18,12 @@ amortized prefetch is the ``plan_flip_at`` point in the trajectory.
 Also reports the plan-store warm-start: wall-clock of a cold ``compile()``
 (memo search) vs a second session hitting the shared store directory.
 
+The ``make bench-serving`` section exercises the serving-level shared
+SiteCache: cross-batch hit rate on a repeated identical workload, observed
+distinct-binding fractions per parameterized-site group, and mutating-
+workload (W_A) throughput with write-set-aware sharing vs fully isolated
+sequential execution.
+
 ``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
 to ``BENCH_runtime.json`` (uploaded as a CI workflow artifact).
 """
@@ -31,8 +37,9 @@ import time
 from repro.api import CobraSession, ExecutionContext, OptimizerConfig
 from repro.core import CostCatalog
 from repro.programs import (make_orders_customer_db, make_p0, make_scan,
-                            make_wilos_db, make_wilos_e)
+                            make_wilos_a, make_wilos_db, make_wilos_e)
 from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
+from repro.runtime import ServingRuntime, SiteCache
 
 BATCH_SIZES = (1, 8, 64)
 
@@ -116,6 +123,73 @@ def main(emit):
              f"plan={kind};est={exe_c.est_cost_s:.4g}s")
     emit("bench_runtime/SCAN/plan_flip_at", 0, f"batch_size={flip_at}")
     traj["context_plans"] = {"SCAN": plans, "plan_flip_at": flip_at}
+
+    # -------------------------------------------- serving: shared SiteCache
+    # cross-batch hit rate: the same workload served twice through one
+    # runtime; the second pass is served from the first pass's fetches
+    session_s = _paper_session(make_wilos_db(n_tasks, ratio=10), SLOW_REMOTE)
+    rt = ServingRuntime(session_s, batch_size=8, drift_threshold=1e9)
+    rt.register(make_wilos_e())
+    workload = [("W_E", {"worklist": [i % 4]}) for i in range(16)]
+    t0 = time.perf_counter()
+    rt.serve(workload)
+    first_rts = rt.n_round_trips
+    first_sim = rt.simulated_s
+    rt.serve(workload)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    cstats = rt.site_cache.stats()
+    second_rts = rt.n_round_trips - first_rts
+    second_sim = rt.simulated_s - first_sim
+    lookups = cstats["hits"] + cstats["misses"]
+    # cross-batch rate counts ONLY hits served by an earlier batch's fetch
+    # (in-batch repeats would overstate the cross-batch sharing)
+    cross_rate = cstats["shared_hits"] / lookups if lookups else 0.0
+    fb = rt.feedback.telemetry()
+    fractions = {site: s["published"]
+                 for site, s in fb["binding_sites"].items()}
+    emit("bench_runtime/serving/cross_batch", wall_us,
+         f"cross_batch_hit_rate={cross_rate:.3f};"
+         f"overall_hit_rate={cstats['hit_rate']:.3f};"
+         f"shared_hits={cstats['shared_hits']};"
+         f"second_pass_round_trips={second_rts}")
+    traj["serving"] = {
+        "cross_batch_hit_rate": cross_rate,
+        "overall_hit_rate": cstats["hit_rate"],
+        "shared_hits": cstats["shared_hits"],
+        "first_pass_round_trips": first_rts,
+        "second_pass_round_trips": second_rts,
+        "first_pass_simulated_s": first_sim,
+        "second_pass_simulated_s": second_sim,
+        "binding_fractions": fractions,
+        "context_recompiles": rt.context_recompiles,
+    }
+
+    # mutating workload (W_A: updates roles, reads tasks): write-set-aware
+    # site sharing vs fully isolated per-invocation execution
+    n_mut = 4 if smoke else 8
+    sess_shared = _paper_session(make_wilos_db(n_tasks // 2, ratio=10),
+                                 SLOW_REMOTE)
+    exe_shared = sess_shared.compile(make_wilos_a())
+    t0 = time.perf_counter()
+    shared_batch = exe_shared.run_batch([{}] * n_mut,
+                                        site_cache=SiteCache())
+    wall_us = (time.perf_counter() - t0) * 1e6
+    shared_rps = n_mut / shared_batch.simulated_s
+    sess_iso = _paper_session(make_wilos_db(n_tasks // 2, ratio=10),
+                              SLOW_REMOTE)
+    exe_iso = sess_iso.compile(make_wilos_a())
+    iso_s = sum(exe_iso.run().simulated_s for _ in range(n_mut))
+    iso_rps = n_mut / iso_s
+    emit("bench_runtime/serving/mutating_WA", wall_us,
+         f"rps={shared_rps:.3f};isolated_rps={iso_rps:.3f};"
+         f"site_hits={shared_batch.site_hits}")
+    traj["serving"]["mutating"] = {
+        "workload": "W_A",
+        "throughput_rps": shared_rps,
+        "isolated_rps": iso_rps,
+        "site_hits": shared_batch.site_hits,
+        "speedup": shared_rps / iso_rps if iso_rps else None,
+    }
 
     # ------------------------------------------------- plan-store warm start
     with tempfile.TemporaryDirectory() as store_dir:

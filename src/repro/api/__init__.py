@@ -15,7 +15,8 @@ from ..core.context import ExecutionContext, ONE_SHOT, StatsProfile
 from ..core.cost import CostModel
 from .builder import Expr, ProgramBuilder, Q, VarHandle, col, param, q
 from .cache import (PlanCache, PlanCacheKey, program_fingerprint,
-                    program_sites, program_tables, query_tables)
+                    program_param_sites, program_read_tables, program_sites,
+                    program_tables, program_write_tables, query_tables)
 from .config import OptimizerConfig, PRESETS
 from .lift import (LiftError, cache_by_column, cache_lookup, lift_program,
                    lift_source, load_all, noop, prefetch, query_values,
@@ -35,5 +36,6 @@ __all__ = [
     "load_all", "cache_lookup", "scalar_query", "query_values",
     "prefetch", "update_row", "cache_by_column", "noop",
     "PlanCache", "PlanCacheKey", "program_fingerprint", "program_sites",
-    "program_tables", "query_tables",
+    "program_param_sites", "program_read_tables", "program_tables",
+    "program_write_tables", "query_tables",
 ]

@@ -23,7 +23,8 @@ from typing import Dict, Optional, Tuple
 from ..core.context import ONE_SHOT
 
 __all__ = ["PlanCache", "PlanCacheKey", "program_fingerprint",
-           "program_tables", "program_sites", "query_tables"]
+           "program_tables", "program_write_tables", "program_read_tables",
+           "program_sites", "program_param_sites", "query_tables"]
 
 
 def program_fingerprint(program) -> str:
@@ -39,17 +40,8 @@ def program_fingerprint(program) -> str:
 
 def query_tables(q) -> Tuple[str, ...]:
     """All base tables a relational ``Query`` tree scans."""
-    from ..relational.algebra import Scan
-    out = set()
-
-    def walk(node):
-        if isinstance(node, Scan):
-            out.add(node.table)
-        for c in node.children():
-            walk(c)
-
-    walk(q)
-    return tuple(sorted(out))
+    from ..relational.algebra import scan_tables
+    return scan_tables(q)
 
 
 def program_tables(program) -> Tuple[str, ...]:
@@ -116,12 +108,97 @@ def program_tables(program) -> Tuple[str, ...]:
     return tuple(sorted(out))
 
 
+def program_write_tables(program) -> Tuple[str, ...]:
+    """The base tables a Program WRITES (``UpdateRow`` statements only).
+
+    The write-set half of the read/write split: sites over tables outside
+    this set stay shareable through the serving site cache even when the
+    program mutates other tables (``runtime.batch``'s write-set-aware
+    sequential path)."""
+    from ..core.regions import write_tables
+    return write_tables(program)
+
+
+def program_read_tables(program) -> Tuple[str, ...]:
+    """The base tables a Program only READS: ``program_tables`` minus
+    ``program_write_tables``."""
+    writes = set(program_write_tables(program))
+    return tuple(t for t in program_tables(program) if t not in writes)
+
+
+def program_param_sites(program) -> Tuple[str, ...]:
+    """The PARAMETERIZED query-site groups a Program contains (``qdiv:…``
+    keys, one per distinct base-table set among its parameterized query /
+    scalar-query / prefetch sites).
+
+    These are the sites whose fetch cost depends on how often bindings
+    repeat at runtime: the serving site cache observes their distinct-
+    binding fraction and the cost model amortizes by it
+    (:meth:`~repro.core.cost.CostModel.param_site_amortization`). Like
+    iteration sites, they participate in a program's context fingerprint,
+    so a published diversity moves exactly the plans that can act on it.
+
+    Groups over tables the program WRITES are excluded: the runtime never
+    caches those sites (each invocation must see earlier writes), so no
+    published diversity can be delivered there — the cost model refuses it
+    too (its ``write_tables`` guard) and keying plans on it would only
+    cause spurious recompiles."""
+    from ..core.context import param_group_key
+    from ..core.cost import query_has_params
+    from ..core.regions import (BasicBlock, IExpr, LoopRegion, Prefetch,
+                                Region)
+    out = set()
+    written = set(program_write_tables(program))
+
+    def from_query(q, bindings=()):
+        if (bindings or query_has_params(q)) \
+                and not written & set(query_tables(q)):
+            out.add(param_group_key(query_tables(q)))
+
+    def from_expr(e):
+        if not isinstance(e, IExpr):
+            return
+        q = getattr(e, "query", None)
+        if q is not None:
+            from_query(q, getattr(e, "bindings", ()))
+        for attr in ("base", "left", "right", "keyexpr"):
+            k = getattr(e, attr, None)
+            if k is not None:
+                from_expr(k)
+        for a in getattr(e, "args", ()):
+            from_expr(a)
+        for _, b in getattr(e, "bindings", ()):
+            from_expr(b)
+
+    def walk(r: Region):
+        if isinstance(r, BasicBlock):
+            s = r.stmt
+            if isinstance(s, Prefetch):
+                from_query(s.query)
+            for attr in ("expr", "val", "keyexpr", "valexpr"):
+                e = getattr(s, attr, None)
+                if e is not None:
+                    from_expr(e)
+        elif isinstance(r, LoopRegion):
+            from_expr(r.source)
+        pred = getattr(r, "pred", None)
+        if pred is not None:
+            from_expr(pred)
+        for c in r.children():
+            walk(c)
+
+    walk(program.body)
+    return tuple(sorted(out))
+
+
 def program_sites(program) -> Tuple[str, ...]:
-    """The iteration sites a Program contains whose counts table statistics
+    """The observation sites a Program contains that table statistics
     cannot estimate: while guards and cursor loops over collection (non-
-    query) sources. An :class:`~repro.core.context.ExecutionContext`'s
-    fingerprint restricts its observed-iteration stats to exactly these, so
-    observations at other programs' sites leave this program's plans hot."""
+    query) sources (iteration counts), plus its parameterized query-site
+    groups (binding diversity, :func:`program_param_sites`). An
+    :class:`~repro.core.context.ExecutionContext`'s fingerprint restricts
+    its observed stats to exactly these, so observations at other programs'
+    sites leave this program's plans hot."""
     from ..core.context import loop_site_key, while_site_key
     from ..core.regions import (ILoadAll, IQuery, LoopRegion, Region,
                                 WhileRegion)
@@ -137,6 +214,7 @@ def program_sites(program) -> Tuple[str, ...]:
             walk(c)
 
     walk(program.body)
+    out.extend(program_param_sites(program))
     return tuple(sorted(set(out)))
 
 

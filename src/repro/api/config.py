@@ -94,19 +94,21 @@ class OptimizerConfig:
         return RuleSet.default()
 
     def resolve_rules(self) -> List:
-        """Materialize the (core-engine) rule objects this config selects."""
+        """Materialize the (core-engine) rule objects this config selects,
+        in constraint-resolved firing order (declared ``before``/``after``
+        on the selected rules are honored via ``RuleSet.resolve``)."""
         rs = self.resolve_rule_set()
         by_name = {r.name: r for r in rs}
         if self.rules is None:
-            selected = list(rs)
+            names = list(rs.names())
         else:
             unknown = [n for n in self.rules if n not in by_name]
             if unknown:
                 raise ValueError(f"unknown rule name(s): {unknown}; "
                                  f"available: {sorted(by_name)}")
-            selected = [by_name[n] for n in self.rules]
-        return [r.to_dag_rule() for r in selected
-                if r.name not in self.exclude_rules]
+            names = list(self.rules)
+        names = [n for n in names if n not in self.exclude_rules]
+        return [r.to_dag_rule() for r in rs.resolve(names)]
 
     def rule_names(self) -> Tuple[str, ...]:
         return tuple(r.name for r in self.resolve_rules())

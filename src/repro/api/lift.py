@@ -31,6 +31,11 @@ Supported constructs (all lower to the same IR the builder emits by hand):
     and subscript reads on traced values (``xs[0]``, ``m[key]`` —
     :class:`~repro.core.regions.IIndex`), augmented assignment, scalar
     arithmetic/comparisons/boolean operators;
+  * **list comprehensions** over traced collections/queries
+    (``[f(t.x) for t in load_all("tasks") if t.y > 0]``) — lowered to the
+    same loop-accumulation IR an explicit loop emits (fresh accumulator +
+    ``LoopRegion`` + guarded ``CollectionAdd``); dict/set comprehensions,
+    generator expressions and nested comprehensions stay ``LiftError``;
   * calls to :func:`~repro.core.regions.register_function`-registered pure
     functions by name, plus ``len``/``min``/``max`` builtins;
   * ORM attribute navigation (``row.customer``) via the ``relations``
@@ -189,6 +194,8 @@ class _Lifter:
         for pname, default in inputs:
             self.scope[pname] = self.b.input(pname, default)
         self.out_names: Tuple[str, ...] = self._scan_outputs(fnode)
+        self._comp_depth = 0           # list comprehensions never nest
+        self._in_while_test = False    # comprehensions can't lower there
 
     # ------------------------------------------------------------ diagnostics
     def _err(self, node, msg: str) -> LiftError:
@@ -391,7 +398,16 @@ class _Lifter:
     def _while(self, node: ast.While) -> None:
         if node.orelse:
             raise self._err(node, "while/else")
-        pred = self._expr(node.test)
+        # the guard is lowered OUTSIDE the WhileRegion and re-evaluated by
+        # the interpreter each iteration — that only works for pure
+        # expressions. A comprehension would emit its accumulation loop
+        # here, frozen at entry, silently diverging from Python's
+        # re-evaluate-every-iteration semantics — reject it.
+        self._in_while_test = True
+        try:
+            pred = self._expr(node.test)
+        finally:
+            self._in_while_test = False
         if not isinstance(pred, (Expr, bool, int)):
             raise self._err(node.test, "while guard must be a traced "
                                        "expression (or the literal True)")
@@ -519,9 +535,12 @@ class _Lifter:
                                       f"expression or scalar, not a "
                                       f"trace-time {type(key).__name__}")
             return base[key]
-        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
-                             ast.GeneratorExp)):
-            raise self._err(node, "comprehensions — write an explicit loop")
+        if isinstance(node, ast.ListComp):
+            return self._list_comp(node)
+        if isinstance(node, (ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+            raise self._err(node, "dict/set/generator comprehensions — only "
+                                  "list comprehensions are liftable; write "
+                                  "an explicit loop")
         if isinstance(node, ast.IfExp):
             raise self._err(node, "conditional expressions — write an "
                                   "explicit if statement")
@@ -550,6 +569,76 @@ class _Lifter:
             return _PY_OPS[opname](l, r)
         except Exception as e:
             raise self._err(node, f"trace-time {opname!r} failed: {e}")
+
+    # -------------------------------------------------------- comprehensions
+    def _list_comp(self, node: ast.ListComp):
+        """Lower ``[elt for v in src if cond ...]`` onto the loop-
+        accumulation path an explicit loop takes: a fresh empty-list
+        accumulator, a ``LoopRegion`` over the source, one nested
+        ``CondRegion`` per ``if`` clause, and a ``CollectionAdd`` of the
+        element. The value of the expression is the accumulator variable."""
+        if self._in_while_test:
+            raise self._err(node, "a comprehension in a while guard — its "
+                                  "loop would run once at entry instead of "
+                                  "every iteration; compute it inside the "
+                                  "loop body into a variable")
+        if self._comp_depth:
+            raise self._err(node, "nested comprehensions — write explicit "
+                                  "loops")
+        if len(node.generators) != 1:
+            raise self._err(node, "comprehensions with multiple `for` "
+                                  "clauses — write explicit nested loops")
+        gen = node.generators[0]
+        if getattr(gen, "is_async", 0):
+            raise self._err(node, "async comprehensions")
+        if not isinstance(gen.target, ast.Name):
+            raise self._err(node, "comprehension target must be a single "
+                                  "variable")
+        src = self._expr(gen.iter)
+        if not isinstance(src, (Expr, Q, Query, str)):
+            raise self._err(
+                gen.iter, f"cannot iterate a trace-time "
+                          f"{type(src).__name__} — comprehension sources "
+                          f"are query handles (q(...)), load_all(...), or "
+                          f"traced collection variables")
+        var = gen.target.id
+        acc_name = self.b._fresh_var("comp")
+        acc = self.b.let(acc_name, self.b.empty_list())
+        _missing = object()
+        saved = self.scope.get(var, _missing)
+        self._comp_depth += 1
+        try:
+            with self.b.loop(src, var=var) as cursor:
+                self.scope[var] = cursor
+
+                def emit(i: int) -> None:
+                    if i == len(gen.ifs):
+                        val = self._expr(node.elt)
+                        if not isinstance(val, (Expr,) + _SCALARS):
+                            raise self._err(
+                                node.elt, f"comprehension element must be a "
+                                          f"traced expression or scalar, not "
+                                          f"a trace-time "
+                                          f"{type(val).__name__}")
+                        self.b.add(acc_name, val)
+                        return
+                    pred = self._expr(gen.ifs[i])
+                    if not isinstance(pred, Expr):
+                        raise self._err(
+                            gen.ifs[i], "comprehension condition is a "
+                                        "trace-time constant — it must test "
+                                        "traced program state")
+                    with self.b.when(pred):
+                        emit(i + 1)
+
+                emit(0)
+        finally:
+            self._comp_depth -= 1
+            if saved is _missing:
+                self.scope.pop(var, None)
+            else:
+                self.scope[var] = saved
+        return acc
 
     # ------------------------------------------------------------------ calls
     def _maybe_static(self, node: ast.expr):

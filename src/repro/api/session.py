@@ -59,10 +59,24 @@ class PlanReport:
     # serving plans are distinguishable from one-shot plans at a glance)
     context_fp: Tuple = ONE_SHOT.fingerprint()
 
+    @property
+    def binding_diversity(self) -> Dict[str, float]:
+        """The observed distinct-binding fractions this plan was costed
+        under (from the context fingerprint, restricted to the program's
+        parameterized-site groups). Empty = never observed (the cost model
+        assumed no binding sharing)."""
+        if len(self.context_fp) > 4:
+            return dict(self.context_fp[4])
+        return {}
+
     def describe(self) -> str:
         src = "cache" if self.from_cache else "search"
         batch = self.context_fp[1] if len(self.context_fp) > 1 else 1
         ctx = f", batch={batch}" if batch != 1 else ""
+        div = self.binding_diversity
+        if div:
+            avg = sum(div.values()) / len(div)
+            ctx += f", binding-diversity~{avg:.2f}@{len(div)} site(s)"
         return (f"[{self.domain}] {self.name}: est {self.est_cost_s:.4g}s "
                 f"over {self.alternatives} alternatives "
                 f"({self.opt_time_s*1e3:.1f}ms, {src}{ctx})")
@@ -146,21 +160,26 @@ class Executable:
 
     def run_batch(self, param_sets: Sequence[Mapping[str, object]], *,
                   network: Optional[NetworkProfile] = None,
-                  mode: str = "fast"):
+                  mode: str = "fast", site_cache=None):
         """Execute the optimized program over a BATCH of parameter bindings.
 
         The whole batch shares one client environment: each query site is
         fetched from the server once per batch (a shared site cache plus a
         bulk navigation fetch in the vectorized interpreter), amortizing
         C_NRT across invocations exactly like the paper's batching
-        transformation. Returns a :class:`repro.runtime.batch.BatchResult`
-        whose per-invocation outputs match per-invocation :meth:`run`
-        bit-for-bit. Programs containing updates fall back to sequential
-        isolated execution (sharing fetched state across invocations would
-        be unsound once the data mutates)."""
+        transformation. Pass a serving-scoped
+        :class:`~repro.runtime.sitecache.SiteCache` (``site_cache=``) to
+        extend the sharing across batches and programs (one fetch per site
+        per stats epoch). Returns a
+        :class:`repro.runtime.batch.BatchResult` whose per-invocation
+        outputs match per-invocation :meth:`run` bit-for-bit. Programs
+        containing updates execute sequentially on isolated environments,
+        but sites over tables they never write still share the cache
+        (write-set analysis)."""
         from ..runtime.batch import run_batch
         return run_batch(self.session, self.program, param_sets,
-                         network=network, mode=mode, executable=self)
+                         network=network, mode=mode, executable=self,
+                         site_cache=site_cache)
 
     def run_baseline(self, *, network: Optional[NetworkProfile] = None,
                      mode: str = "fast", **params) -> ExecutionResult:

@@ -15,7 +15,8 @@ from .fir import (FIRConversionError, eval_fir, fir_to_region, loop_to_fir)
 from .dag import AndNode, Memo, Rule, expand
 from .rules import RuleContext, build_memo, default_rules
 from .context import (ExecutionContext, ONE_SHOT, StatsProfile,
-                      loop_site_key, while_site_key)
+                      loop_site_key, param_group_key, query_site_key,
+                      while_site_key)
 from .cost import CostCatalog, CostModel, query_has_params
 from .search import OptimizationResult, Plan, optimize, run_search
 
@@ -31,7 +32,7 @@ __all__ = [
     "AndNode", "Memo", "Rule", "expand", "RuleContext", "build_memo",
     "default_rules",
     "ExecutionContext", "ONE_SHOT", "StatsProfile", "loop_site_key",
-    "while_site_key",
+    "param_group_key", "query_site_key", "while_site_key",
     "CostCatalog", "CostModel", "query_has_params",
     "OptimizationResult", "Plan", "optimize", "run_search",
 ]

@@ -36,7 +36,8 @@ import hashlib
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 __all__ = ["ExecutionContext", "StatsProfile", "ONE_SHOT",
-           "while_site_key", "loop_site_key"]
+           "while_site_key", "loop_site_key", "query_site_key",
+           "param_group_key"]
 
 
 def _site_hash(key: Tuple) -> str:
@@ -54,6 +55,23 @@ def loop_site_key(var: str, source) -> str:
     return "loop:" + _site_hash((var, source.key()))
 
 
+def query_site_key(query) -> str:
+    """Stable site id of one exact query tree — the key the serving-level
+    :class:`~repro.runtime.sitecache.SiteCache` tracks per-site binding
+    diversity under (telemetry granularity)."""
+    return "qsite:" + _site_hash(query.key())
+
+
+def param_group_key(tables) -> str:
+    """Stable id of a PARAMETERIZED-site group: all parameterized query
+    sites over one base-table set. Binding-diversity statistics publish at
+    this granularity because rewrites change the exact query tree (T5 turns
+    a σ into an aggregate over it) while the table set survives every
+    rewrite — so a diversity observed under the running plan prices the
+    *other* alternatives of the same site too."""
+    return "qdiv:" + _site_hash(tuple(sorted(tables)))
+
+
 @dataclasses.dataclass(frozen=True)
 class StatsProfile:
     """Observed runtime statistics, published by the feedback controller.
@@ -61,26 +79,42 @@ class StatsProfile:
     ``iters`` maps iteration sites (``while:…`` / ``loop:…`` keys) to the
     observed iteration count the cost model should use instead of the
     catalog default (``while_iters_default`` / ``loop_iters_default``).
-    ``site_wall_s`` maps query sites (by SQL text) to observed mean
-    wall-clock seconds — the default :class:`~repro.core.cost.CostModel`
-    does not consume it (wall-clock drift feeds the stats-version
-    invalidation path instead), but custom cost models may calibrate
-    against it. Only ``iters`` participates in plan identity.
+    ``bindings`` maps parameterized-site groups (``qdiv:…`` keys, see
+    :func:`param_group_key`) to the observed distinct-binding fraction in
+    [0, 1] — the serving site cache's measurement of how often a
+    parameterized site's bindings actually repeat across a batch, which
+    the cost model uses to amortize parameterized fetches instead of the
+    0/1 binding-free rule. ``site_wall_s`` maps query sites (by SQL text)
+    to observed mean wall-clock seconds — the default
+    :class:`~repro.core.cost.CostModel` does not consume it (wall-clock
+    drift feeds the stats-version invalidation path instead), but custom
+    cost models may calibrate against it. ``iters`` and ``bindings``
+    participate in plan identity; ``site_wall_s`` does not.
     """
 
     iters: Tuple[Tuple[str, float], ...] = ()
     site_wall_s: Tuple[Tuple[str, float], ...] = ()
+    bindings: Tuple[Tuple[str, float], ...] = ()
 
     @classmethod
     def of(cls, iters: Optional[Mapping[str, float]] = None,
-           site_wall_s: Optional[Mapping[str, float]] = None) -> "StatsProfile":
+           site_wall_s: Optional[Mapping[str, float]] = None,
+           bindings: Optional[Mapping[str, float]] = None) -> "StatsProfile":
         return cls(
             iters=tuple(sorted((k, float(v)) for k, v in (iters or {}).items())),
             site_wall_s=tuple(sorted((k, float(v))
-                              for k, v in (site_wall_s or {}).items())))
+                              for k, v in (site_wall_s or {}).items())),
+            bindings=tuple(sorted((k, float(v))
+                           for k, v in (bindings or {}).items())))
 
     def iters_for(self, site: str) -> Optional[float]:
         for k, v in self.iters:
+            if k == site:
+                return v
+        return None
+
+    def binding_for(self, site: str) -> Optional[float]:
+        for k, v in self.bindings:
             if k == site:
                 return v
         return None
@@ -123,20 +157,25 @@ class ExecutionContext:
     # -------------------------------------------------------------- identity
     def fingerprint(self, sites: Optional[Sequence[str]] = None) -> Tuple:
         """Plan-key component. ``sites`` restricts the stats part to the
-        iteration sites one program contains, so observations at sites the
-        program doesn't have never invalidate its plans (the per-table
-        stats-version idea, applied to iteration statistics)."""
+        iteration sites and parameterized-site groups one program contains,
+        so observations at sites the program doesn't have never invalidate
+        its plans (the per-table stats-version idea, applied to iteration
+        and binding-diversity statistics)."""
         if sites is None:
             rel = self.stats.iters
+            rel_b = self.stats.bindings
         else:
             want = set(sites)
             rel = tuple(kv for kv in self.stats.iters if kv[0] in want)
-        return ("ctx", self.batch_size, self.hw, rel)
+            rel_b = tuple(kv for kv in self.stats.bindings if kv[0] in want)
+        return ("ctx", self.batch_size, self.hw, rel, rel_b)
 
     def describe(self) -> str:
         n = len(self.stats.iters)
+        b = len(self.stats.bindings)
         return (f"batch={self.batch_size}"
-                + (f", {n} observed iteration site(s)" if n else ""))
+                + (f", {n} observed iteration site(s)" if n else "")
+                + (f", {b} binding-diversity site(s)" if b else ""))
 
 
 ONE_SHOT = ExecutionContext()

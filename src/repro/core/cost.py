@@ -23,10 +23,16 @@ describing the runtime the plan is compiled for:
     sharing across a batch: a query site whose bindings cannot differ
     between invocations (no ``Param`` anywhere in the tree) is fetched from
     the server once per batch, so its cost amortizes to C_Q / B per
-    invocation (:meth:`CostModel.amortize`); parameterized sites stay
-    un-amortized (conservative — their bindings may differ per invocation).
-    ORM point lookups amortize the same way (the batch env's id-cache and
-    bulk navigation fetch are shared).
+    invocation (:meth:`CostModel.amortize`); ORM point lookups amortize the
+    same way (the batch env's id-cache and bulk navigation fetch are
+    shared).
+  * **parameterized** sites amortize by the OBSERVED distinct-binding
+    fraction d when the context's stats carry one for the site's table
+    group (:meth:`CostModel.param_site_amortization`): the serving site
+    cache serves repeated bindings locally, so only the d·B distinct
+    bindings in a batch pay a server fetch — per-invocation cost
+    C_Q · max(d, 1/B). Without an observation they stay un-amortized
+    (conservative — their bindings may all differ).
   * observed iteration counts from ``context.stats`` replace the catalog
     defaults for while guards (``while_iters_default``) and cursor loops
     over collection sources (``loop_iters_default``) — the sites whose
@@ -42,9 +48,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-from ..relational.algebra import Cmp, Col, Param, Query, Scalar, Scan, Select
+from ..relational.algebra import (Cmp, Col, Param, Query, Scalar, Scan,
+                                  Select, scan_tables)
 from ..relational.database import DatabaseServer, NetworkProfile
-from .context import ExecutionContext, ONE_SHOT, loop_site_key, while_site_key
+from .context import (ExecutionContext, ONE_SHOT, loop_site_key,
+                      param_group_key, while_site_key)
 from .fir import (FCacheLookupAllE, FCacheLookupE, FCondE, FExpr, FFoldE,
                   FPointLookup, FQueryE, FSelLookupE, FTupleE, fir_children)
 
@@ -100,6 +108,10 @@ class CostModel:
         self.db = db
         self.cat = catalog
         self.context = context if context is not None else ONE_SHOT
+        # the program's write set, assigned by run_search before costing:
+        # sites over written tables are never served from a shared cache,
+        # so no batch/diversity amortization may be claimed for them
+        self.write_tables: frozenset = frozenset()
 
     # ------------------------------------------------------------ batching
     @property
@@ -110,12 +122,55 @@ class CostModel:
         """Per-invocation share of a cost paid once per batch."""
         return cost / self.batch_size
 
+    def tables_shareable(self, tables) -> bool:
+        """False when ``tables`` intersects the program's write set: the
+        runtime refetches such sites every invocation (each must observe
+        earlier writes), so no cache amortization may be priced in."""
+        return not (self.write_tables and self.write_tables & set(tables))
+
     def source_amortizable(self, source: FExpr) -> bool:
         """Can this fold source's server fetch be shared across a batch?
-        Only binding-free query sites: identical every invocation, so the
-        batch env's site cache serves all but the first from local state."""
+        Only binding-free query sites over tables the program never
+        writes: identical every invocation, so the batch env's site cache
+        serves all but the first from local state."""
         return (isinstance(source, FQueryE)
-                and not query_has_params(source.query))
+                and not query_has_params(source.query)
+                and self.tables_shareable(scan_tables(source.query)))
+
+    def param_site_amortization(self, q: Query) -> float:
+        """Per-invocation fraction of a PARAMETERIZED query site's fetch
+        cost under batching. When the context's stats carry an observed
+        distinct-binding fraction d for the site's table group (published
+        by the serving site cache through the feedback controller), only
+        the distinct bindings in a batch pay a server fetch — the repeats
+        are local cache hits — so the per-invocation share is
+        ``max(d, 1/B)``. Without an observation: 1.0 (no sharing assumed,
+        today's conservative behavior). Sites over tables the program
+        WRITES never amortize — the runtime refetches them every
+        invocation regardless of what diversity another (read-only)
+        program published for the same table group."""
+        if self.batch_size <= 1:
+            return 1.0
+        tables = scan_tables(q)
+        if self.write_tables and self.write_tables & set(tables):
+            return 1.0
+        d = self.context.stats.binding_for(param_group_key(tables))
+        if d is None:
+            return 1.0
+        return min(1.0, max(float(d), 1.0 / self.batch_size))
+
+    def fold_source_amortization(self, source: FExpr) -> float:
+        """Binding-diversity amortization factor for a NON-binding-free fold
+        source (binding-free sources take the full 1/B path via
+        :meth:`source_amortizable`). Covers parameterized query sources and
+        the per-key σ lookups T5-style rewrites emit."""
+        if isinstance(source, FQueryE):
+            return self.param_site_amortization(source.query)
+        if isinstance(source, FSelLookupE):
+            q = Select(Cmp("==", Col(source.key_col), Param("k")),
+                       Scan(source.table))
+            return self.param_site_amortization(q)
+        return 1.0
 
     # ----------------------------------------------------- iteration counts
     def while_iters(self, pred) -> float:
@@ -281,11 +336,17 @@ class CostModel:
 
     def loop_source_cost(self, source) -> float:
         """Cost of evaluating a cursor loop's source once per invocation —
-        amortized for binding-free query sources (fetched once per batch)."""
+        amortized for binding-free query sources (fetched once per batch),
+        and by the observed distinct-binding fraction for parameterized
+        query sources whose bindings repeat across the batch."""
         from .regions import ILoadAll, IQuery
         full = self._iexpr_cost(source)
-        if isinstance(source, ILoadAll) or (
-                isinstance(source, IQuery) and not source.bindings
-                and not query_has_params(source.query)):
-            return self.amortize(full)
+        if isinstance(source, ILoadAll):
+            return self.amortize(full) \
+                if self.tables_shareable((source.table,)) else full
+        if isinstance(source, IQuery):
+            if not source.bindings and not query_has_params(source.query) \
+                    and self.tables_shareable(scan_tables(source.query)):
+                return self.amortize(full)
+            return full * self.param_site_amortization(source.query)
         return full

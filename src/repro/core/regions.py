@@ -55,7 +55,7 @@ __all__ = [
     # regions
     "Region", "BasicBlock", "SeqRegion", "LoopRegion", "CondRegion",
     "WhileRegion", "Program",
-    "Interpreter", "register_function", "get_function",
+    "Interpreter", "register_function", "get_function", "write_tables",
 ]
 
 # --------------------------------------------------------------------------
@@ -658,6 +658,25 @@ class Program:
 def seq(*parts: Union[Region, Stmt]) -> SeqRegion:
     rs = tuple(BasicBlock(p) if isinstance(p, Stmt) else p for p in parts)
     return SeqRegion(rs)
+
+
+def write_tables(program: Program) -> Tuple[str, ...]:
+    """The base tables a Program WRITES (``UpdateRow`` statements), sorted.
+
+    The canonical write-set walk: the serving runtime's write-set-aware
+    batching and the cost model's amortization guard (a site over a
+    written table can never be served from a shared cache) both consume
+    it; ``repro.api.cache.program_write_tables`` delegates here."""
+    out = set()
+
+    def walk(r: Region):
+        if isinstance(r, BasicBlock) and isinstance(r.stmt, UpdateRow):
+            out.add(r.stmt.table)
+        for c in r.children():
+            walk(c)
+
+    walk(program.body)
+    return tuple(sorted(out))
 
 
 # --------------------------------------------------------------------------

@@ -24,7 +24,7 @@ import itertools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..relational.algebra import Query, Scan
+from ..relational.algebra import Query, Scan, scan_tables
 from .cost import CostCatalog, CostModel, query_has_params
 from .dag import AndNode, Memo, expand
 from .fir import FExpr, FPrefetchE, NameGen, fold_to_loop
@@ -143,12 +143,14 @@ class Searcher:
             stmt = node.payload
             from .regions import Prefetch
             if isinstance(stmt, Prefetch):
-                amortizable = not query_has_params(stmt.query)
+                amortizable = (not query_has_params(stmt.query)
+                               and cm.tables_shareable(
+                                   scan_tables(stmt.query)))
                 key = ("prefetch", _query_table(stmt.query), stmt.col,
                        amortizable)
                 cost = cm.prefetch_cost(stmt.query)
-                if amortizable:
-                    cost = cm.amortize(cost)
+                cost = cm.amortize(cost) if amortizable else \
+                    cost * cm.param_site_amortization(stmt.query)
                 return 0.0, ((key, cost),)
             return cm.block_cost(stmt), ()
         if node.op == "seq":
@@ -211,27 +213,39 @@ class Searcher:
                 res.append((("fold", fold.key(), "shell", False),
                             n * cat.c_z))
             else:
+                # parameterized source: the serving site cache still serves
+                # repeated bindings, so the fetch amortizes by the OBSERVED
+                # distinct-binding fraction (1.0 when never observed)
+                f = cm.fold_source_amortization(fold.source)
                 res.append((("fold", fold.key(), False),
-                            src_cost + n * cat.c_z))
+                            src_cost * f + n * cat.c_z))
             for p in pre:
                 if isinstance(p, FPrefetchE):
-                    p_am = not query_has_params(p.query)
+                    p_am = (not query_has_params(p.query)
+                            and cm.tables_shareable(scan_tables(p.query)))
                     p_cost = cm.prefetch_cost(p.query)
                     res.append((("prefetch", _query_table(p.query), p.col,
                                  p_am),
-                                cm.amortize(p_cost) if p_am else p_cost))
+                                cm.amortize(p_cost) if p_am else
+                                p_cost * cm.param_site_amortization(p.query)))
             return n * slot, tuple(res)
         if node.op == "slot-query":
             _, var, q, op, col, binding = node.payload
             qc = cm.query_cost(q)
-            if binding is None and not query_has_params(q):
+            if binding is None and not query_has_params(q) \
+                    and cm.tables_shareable(scan_tables(q)):
                 qc = cm.amortize(qc)
+            else:
+                qc = qc * cm.param_site_amortization(q)
             return qc + cat.c_z, ()
         if node.op == "slot-query-rows":
             _, var, q, col = node.payload
             qc = cm.query_cost(q)
-            if not query_has_params(q):
+            if not query_has_params(q) \
+                    and cm.tables_shareable(scan_tables(q)):
                 qc = cm.amortize(qc)
+            else:
+                qc = qc * cm.param_site_amortization(q)
             return qc + cat.c_z, ()
         raise TypeError(f"unknown op {node.op}")
 
@@ -475,6 +489,10 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
     stats = expand(memo, list(rules) if rules is not None else default_rules(),
                    ctx, max_rounds=max_rounds)
     cm = (cost_model or CostModel)(db, catalog, context)
+    # sites over tables the program writes are refetched every invocation
+    # (the serving cache refuses them), so the model must not amortize them
+    from .regions import write_tables
+    cm.write_tables = frozenset(write_tables(program))
     searcher = Searcher(memo, cm, ctx, choice=choice, topk=topk,
                         max_combos=max_combos)
     plans = searcher.group_plans(root)

@@ -26,7 +26,7 @@ from .table import Field, Schema, Table
 __all__ = [
     "Scalar", "Col", "Lit", "Arith", "Cmp", "BoolOp", "Not", "Func", "Param",
     "Query", "Scan", "Select", "Project", "Join", "Aggregate", "OrderBy", "Limit",
-    "AggSpec", "equi_join_indices", "register_scalar_func",
+    "AggSpec", "equi_join_indices", "register_scalar_func", "scan_tables",
 ]
 
 # --------------------------------------------------------------------------
@@ -580,3 +580,23 @@ class Limit(Query):
 
     def output_schema(self, db):
         return self.child.output_schema(db)
+
+
+def scan_tables(q: Query) -> Tuple[str, ...]:
+    """All base tables a relational ``Query`` tree scans (sorted).
+
+    The canonical table-extraction walk: plan-cache stats tokens
+    (``repro.api.cache.query_tables``), the serving-level site cache's
+    invalidation epochs, and the cost model's binding-diversity group keys
+    all share this identity so a table name means the same thing in every
+    layer."""
+    out = set()
+
+    def walk(node: Query):
+        if isinstance(node, Scan):
+            out.add(node.table)
+        for c in node.children():
+            walk(c)
+
+    walk(q)
+    return tuple(sorted(out))

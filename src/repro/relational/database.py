@@ -27,6 +27,7 @@ client-side prefetch cache (``cacheByColumn`` / ``lookup``, footnote 3).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
@@ -109,13 +110,20 @@ class QueryEstimate:
 # Server
 # --------------------------------------------------------------------------
 
+_INSTANCE_TOKENS = itertools.count(1)
+
+
 class DatabaseServer:
     def __init__(self, tables: Dict[str, Table], model: ServerModel = ServerModel()):
         self.tables = dict(tables)
         self.model = model
+        # process-unique identity: result caches shared across sessions key
+        # on it so two servers' identically-named tables never collide
+        self.instance_token = next(_INSTANCE_TOKENS)
         self._stats: Dict[str, TableStats] = {}
         self._stats_version = 0
         self._table_versions: Dict[str, int] = {}
+        self._data_versions: Dict[str, int] = {}
         self.analyze()
 
     def table(self, name: str) -> Table:
@@ -127,14 +135,17 @@ class DatabaseServer:
         self._stats[t.name] = self._compute_stats(t)
         self._stats_version += 1
         self._table_versions[t.name] = self._table_versions.get(t.name, 0) + 1
+        self._data_versions[t.name] = self._data_versions.get(t.name, 0) + 1
 
     def replace_table(self, t: Table) -> None:
         """Replace a table's DATA without refreshing statistics — like a bulk
         load on a real server before anyone runs ANALYZE. Estimates go stale
         (``estimate()`` keeps consulting the old stats) while ``run()`` sees
         the new rows; the serving runtime's feedback controller exists to
-        detect exactly this drift and trigger a re-analyze."""
+        detect exactly this drift and trigger a re-analyze. The table's DATA
+        version does bump (result caches must never serve the old rows)."""
         self.tables[t.name] = t
+        self._data_versions[t.name] = self._data_versions.get(t.name, 0) + 1
 
     # ----------------------------------------------------------- statistics
     @property
@@ -150,9 +161,24 @@ class DatabaseServer:
         table's statistics leaves those plans hot."""
         return self._table_versions.get(name, 0)
 
+    def data_version(self, name: str) -> int:
+        """Per-table DATA version: bumps whenever a table's rows change
+        (``add_table``, ``replace_table``, interpreter updates), whether or
+        not statistics were refreshed. Result caches — the serving-level
+        :class:`~repro.runtime.sitecache.SiteCache` — key on it so a cached
+        query result is never served over rows it was not computed from."""
+        return self._data_versions.get(name, 0)
+
     def stats_token(self, tables) -> Tuple[Tuple[str, int], ...]:
         """Cache-key component: (table, stats version) for each named table."""
         return tuple((t, self.table_version(t)) for t in sorted(set(tables)))
+
+    def site_epoch(self, tables) -> Tuple[Tuple[str, int, int], ...]:
+        """Result-cache validity token: (table, stats version, data version)
+        per named table. Any ``analyze()`` or write to one of the tables
+        changes the epoch, so epoch-keyed cached results self-invalidate."""
+        return tuple((t, self.table_version(t), self.data_version(t))
+                     for t in sorted(set(tables)))
 
     def stats_fingerprint(self, tables) -> Tuple[Tuple[str, str], ...]:
         """CONTENT hash of the named tables' current statistics.

@@ -6,13 +6,19 @@ production-shaped workloads:
   * :mod:`repro.runtime.batch` — ``run_batch`` / ``BatchClientEnv``: one
     server round trip per query site per batch of parameter bindings
     (``C_NRT`` amortization, the paper's batching transformation applied at
-    the serving layer);
+    the serving layer), write-set-aware for mutating programs;
+  * :mod:`repro.runtime.sitecache` — ``SiteCache``: the serving-scoped,
+    epoch-keyed query-result cache shared across batches AND programs
+    (serving-layer MQO), with TTL + analyze()/write invalidation and
+    per-site binding-diversity observation;
   * :mod:`repro.runtime.store` — ``PlanStore``: disk-backed,
     content-addressed plan cache shared across sessions/processes;
   * :mod:`repro.runtime.feedback` — ``FeedbackController``: observed-vs-
     estimated cardinality drift triggers per-table re-analyze + recompile;
+    observed iteration counts and binding-diversity fractions publish into
+    the serving ExecutionContext;
   * :mod:`repro.runtime.serving` — ``ServingRuntime`` / ``serve()``: the
-    request loop wiring the three together.
+    request loop wiring them together.
 
 See ``examples/serve_programs.py`` for the end-to-end walkthrough and
 ``benchmarks/bench_runtime.py`` for the batch-size/throughput crossover.
@@ -21,10 +27,12 @@ See ``examples/serve_programs.py`` for the end-to-end walkthrough and
 from .batch import BatchClientEnv, BatchResult, program_has_updates, run_batch
 from .feedback import DriftEvent, FeedbackController
 from .serving import ServingRuntime, serve
+from .sitecache import SiteCache, Uncacheable
 from .store import PlanStore
 
 __all__ = [
     "BatchClientEnv", "BatchResult", "run_batch", "program_has_updates",
+    "SiteCache", "Uncacheable",
     "PlanStore", "DriftEvent", "FeedbackController",
     "ServingRuntime", "serve",
 ]

@@ -6,34 +6,54 @@ batching transformation amortizes ``C_NRT`` by combining many parameter
 bindings into one server interaction; this module applies the same idea at
 the serving layer:
 
-  * **shared site cache** — one :class:`BatchClientEnv` serves the whole
-    batch; an ``executeQuery`` site with identical bindings is fetched from
-    the server ONCE per batch (one round trip per query site), later
-    invocations reuse the local result for a C_Z charge;
+  * **site cache** — one :class:`BatchClientEnv` serves the whole batch;
+    an ``executeQuery`` site with identical bindings is fetched from the
+    server ONCE per batch, later invocations reuse the local result for a
+    C_Z charge. The cache is a :class:`~repro.runtime.sitecache.SiteCache`:
+    epoch-keyed (per-table stats + data versions), so an ``analyze()`` or a
+    write landing mid-stream makes affected entries miss instead of serving
+    stale rows. Pass a serving-scoped instance (``site_cache=``) and the
+    sharing extends ACROSS batches and programs — an identical site is
+    fetched once per stats epoch, not once per batch;
   * **bulk navigation fetch** — the vectorized interpreter's ORM-navigation
     path (``core.vectorize._vec_nav``) asks this env to fetch ALL missing
     keys of a navigation site in one combined round trip
     (``WHERE key IN (...)``-style) instead of one point query per key;
+  * **write-set-aware mutating programs** — a program containing ``UPDATE``
+    statements still executes each invocation on an isolated environment
+    (sharing fetched state across invocations is unsound once the data the
+    program WRITES mutates mid-batch), but sites over tables the program
+    never updates (``program_write_tables``) keep site-cache sharing: the
+    read-only part of a mutating workload amortizes like any other;
   * **observation log** — every true server execution records (query,
-    observed cardinality, wall-clock) for the feedback controller.
+    observed cardinality, wall-clock), and every parameterized lookup
+    records its binding, for the feedback controller (drift detection and
+    binding-diversity amortization).
 
 Outputs are bit-for-bit identical to per-invocation ``run()``: the caches
-only avoid refetching immutable data, never change what is computed.
-Programs containing ``UPDATE`` statements fall back to sequential isolated
-execution — sharing fetched state across invocations is unsound once the
-data mutates mid-batch.
+only avoid refetching data proven unchanged (epoch keys), never change
+what is computed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+import itertools
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
+from ..core.context import param_group_key
 from ..core.regions import (BasicBlock, Interpreter, Program, Region,
                             UpdateRow)
+from ..relational.algebra import scan_tables
 from ..relational.database import ClientEnv, NetworkProfile
+from .sitecache import SiteCache, Uncacheable, param_key
 
-__all__ = ["BatchClientEnv", "BatchResult", "run_batch", "program_has_updates"]
+__all__ = ["BatchClientEnv", "BatchResult", "run_batch",
+           "program_has_updates"]
+
+# back-compat aliases (the canonical definitions moved to runtime.sitecache)
+_Uncacheable = Uncacheable
+_param_key = param_key
 
 
 def program_has_updates(program: Program) -> bool:
@@ -49,64 +69,81 @@ def program_has_updates(program: Program) -> bool:
     return found[0]
 
 
-class _Uncacheable(Exception):
-    """A query binding with no faithful hashable identity."""
-
-
-def _freeze(v):
-    if isinstance(v, (int, float, str, bool, bytes)) or v is None:
-        return v
-    if isinstance(v, (tuple, list)):
-        return tuple(_freeze(x) for x in v)
-    item = getattr(v, "item", None)
-    if item is not None and getattr(v, "ndim", None) == 0:
-        return item()                      # numpy scalar
-    tobytes = getattr(v, "tobytes", None)
-    if tobytes is not None:
-        return (getattr(v, "shape", None), str(getattr(v, "dtype", "")),
-                tobytes())                 # full-content array identity
-    raise _Uncacheable(type(v).__name__)
-
-
-def _param_key(params: Optional[Mapping[str, object]]) -> Tuple:
-    """Hashable FULL-CONTENT identity of a parameter binding. Raises
-    :class:`_Uncacheable` for values it cannot represent faithfully — the
-    caller then bypasses the site cache rather than risk serving a stale
-    result for a colliding key."""
-    if not params:
-        return ()
-    return tuple((k, _freeze(params[k])) for k in sorted(params))
+# distinct sentinel per uncacheable binding: it counts as its own distinct
+# value in the diversity statistics (conservative: looks fully diverse)
+_unique_token = itertools.count()
 
 
 class BatchClientEnv(ClientEnv):
-    """A client environment shared by every invocation of one batch."""
+    """A client environment sharing a :class:`SiteCache` — per batch by
+    default, serving-scoped when one is passed in."""
 
     def __init__(self, db, network: NetworkProfile, c_z: float = 30e-9,
-                 orm_cache: bool = True):
+                 orm_cache: bool = True,
+                 site_cache: Optional[SiteCache] = None,
+                 write_set: Sequence[str] = ()):
         super().__init__(db, network, c_z=c_z, orm_cache=orm_cache)
-        self._site_cache: Dict[Tuple, object] = {}
-        self.site_hits = 0
+        self.site_cache = site_cache if site_cache is not None else SiteCache()
+        self.write_set: Set[str] = set(write_set)
+        self.site_hits = 0          # in-batch reuse
+        self.shared_site_hits = 0   # cross-batch / cross-program reuse
         # (query, observed rows, observed wall-clock) per true execution —
         # consumed by runtime.feedback.FeedbackController
         self.observations: List[Tuple[object, int, float]] = []
+        # per-batch binding-diversity log: group key -> set of binding keys
+        # (+ total lookups) at PARAMETERIZED sites, merged by run_batch
+        self.binding_sets: Dict[str, set] = {}
+        self.binding_totals: Dict[str, int] = {}
 
-    def execute_query(self, q, params: Optional[Mapping[str, object]] = None):
-        try:
-            key = (q.key(), _param_key(params))
-        except _Uncacheable:
-            t = super().execute_query(q, params)
-            self.observations.append((q, t.nrows, self.query_log[-1][2]))
-            return t
-        hit = self._site_cache.get(key)
-        if hit is not None:
-            # local reuse: the result is already client-side; one C_Z to
-            # hand the cursor over, no server round trip
-            self.site_hits += 1
-            self.charge_statement()
-            return hit
+    # ----------------------------------------------------------------- exec
+    def _fetch(self, q, params):
         t = super().execute_query(q, params)
         self.observations.append((q, t.nrows, self.query_log[-1][2]))
-        self._site_cache[key] = t
+        return t
+
+    def _observe_binding(self, q, tables, pkey) -> None:
+        self.site_cache.observe_binding(q, tables, pkey)
+        gkey = param_group_key(tables)
+        # hash, not payload: diversity needs a distinct COUNT, and frozen
+        # array bindings embed their full tobytes()
+        self.binding_sets.setdefault(gkey, set()).add(hash(pkey))
+        self.binding_totals[gkey] = self.binding_totals.get(gkey, 0) + 1
+
+    def execute_query(self, q, params: Optional[Mapping[str, object]] = None):
+        tables = scan_tables(q)
+        if self.write_set and self.write_set & set(tables):
+            # a site over tables this program UPDATES: never cached — each
+            # invocation must observe its own (and earlier) writes. No
+            # diversity observation either: publishing an amortization the
+            # runtime can never deliver here would mis-price plans.
+            return self._fetch(q, params)
+        try:
+            pkey = param_key(params)
+        except Uncacheable:
+            # no faithful key: bypass the cache, count the binding as its
+            # own distinct value (conservative diversity)
+            if params:
+                self._observe_binding(
+                    q, tables, ("__uncacheable__", next(_unique_token)))
+            return self._fetch(q, params)
+        if pkey:
+            self._observe_binding(q, tables, pkey)
+        cache = self.site_cache
+        key = cache.site_key(q, pkey, self.db.site_epoch(tables),
+                             origin=self.db.instance_token)
+        found = cache.lookup(key)
+        if found is not None:
+            # local reuse: the result is already client-side; one C_Z to
+            # hand the cursor over, no server round trip
+            result, cross = found
+            if cross:
+                self.shared_site_hits += 1
+            else:
+                self.site_hits += 1
+            self.charge_statement()
+            return result
+        t = self._fetch(q, params)
+        cache.put(key, t, tables)
         return t
 
     def bulk_nav_charge(self, table, n_misses: int) -> None:
@@ -132,10 +169,14 @@ class BatchResult(Sequence):
     n_round_trips: int
     batched: bool            # False -> sequential fallback (program updates)
     site_hits: int = 0
+    shared_site_hits: int = 0  # served by an EARLIER batch's / program's fetch
     observations: List = dataclasses.field(default_factory=list)
     # (site_key, iteration_count) per executed while / collection loop —
     # consumed by FeedbackController.observe_iterations into a StatsProfile
     iteration_observations: List = dataclasses.field(default_factory=list)
+    # (group_site_key, total_lookups, distinct_bindings) per parameterized
+    # site group — consumed by FeedbackController.observe_bindings
+    binding_observations: List = dataclasses.field(default_factory=list)
 
     def __getitem__(self, i):
         return self.results[i]
@@ -152,14 +193,69 @@ class BatchResult(Sequence):
         return (f"{len(self.results)} invocation(s) [{kind}]: "
                 f"{self.simulated_s:.4g}s simulated, "
                 f"{self.n_round_trips} round trip(s), "
-                f"{self.site_hits} site reuse(s)")
+                f"{self.site_hits} site reuse(s), "
+                f"{self.shared_site_hits} shared site reuse(s)")
+
+
+def _merge_binding_logs(envs) -> List[Tuple[str, int, int]]:
+    sets: Dict[str, set] = {}
+    totals: Dict[str, int] = {}
+    for env in envs:
+        for g, s in env.binding_sets.items():
+            sets.setdefault(g, set()).update(s)
+        for g, n in env.binding_totals.items():
+            totals[g] = totals.get(g, 0) + n
+    return [(g, totals[g], len(sets[g])) for g in sorted(totals)]
+
+
+def _input_diversity_fallback(binding_obs, source_program,
+                              param_sets) -> List[Tuple[str, int, int]]:
+    """Attribute the batch's PROGRAM-INPUT diversity to parameterized site
+    groups the running plan never executed (e.g. the prefetch form of W_E
+    executes zero parameterized queries).
+
+    Sound only for NON-mutating programs (the caller's batched branch): a
+    read-only program is a pure function of its inputs, so identical
+    inputs imply identical binding sequences at every site — the input
+    distinct fraction UPPER-bounds any site's; distinct inputs may still
+    repeat bindings, so this only ever over-estimates diversity (the
+    conservative direction: less amortization). A mutating program's
+    bindings can depend on rows earlier invocations wrote, so the
+    sequential branch never applies this fallback. Cache-level
+    observations, when present for a group, take precedence."""
+    from ..api.cache import program_param_sites
+    groups = [g for g in program_param_sites(source_program)
+              if g.startswith("qdiv:")]
+    if not groups or not param_sets:
+        return binding_obs
+    seen = {g for g, _, _ in binding_obs}
+    missing = [g for g in groups if g not in seen]
+    if not missing:
+        return binding_obs
+    distinct = set()
+    for p in param_sets:
+        try:
+            distinct.add(param_key(p))
+        except Uncacheable:
+            distinct.add(("__uncacheable__", next(_unique_token)))
+    out = list(binding_obs)
+    for g in missing:
+        out.append((g, len(param_sets), len(distinct)))
+    return out
 
 
 def run_batch(session, program: Program,
               param_sets: Sequence[Mapping[str, object]], *,
               network: Optional[NetworkProfile] = None, mode: str = "fast",
-              executable=None) -> BatchResult:
-    """Execute ``program`` once per parameter set on a shared batch env."""
+              executable=None,
+              site_cache: Optional[SiteCache] = None) -> BatchResult:
+    """Execute ``program`` once per parameter set on a shared batch env.
+
+    ``site_cache`` plugs in a serving-scoped
+    :class:`~repro.runtime.sitecache.SiteCache` so fetches are shared
+    across batches and programs; without one, a private per-batch cache
+    preserves the classic one-fetch-per-site-per-batch behavior."""
+    from ..api.cache import program_write_tables as _write_tables
     from ..api.session import ExecutionResult
 
     param_sets = [dict(p) for p in param_sets]
@@ -171,20 +267,33 @@ def run_batch(session, program: Program,
                 f"unknown program input(s) {sorted(unknown)}; "
                 f"{program.name} declares {sorted(declared) or 'no inputs'}")
 
+    cache = site_cache if site_cache is not None else SiteCache()
+    cache.new_era()
+    # binding diversity is a property of the SOURCE program's sites; the
+    # executed (rewritten) program may have compiled them away entirely
+    source = getattr(executable, "source", None) or program
+
     if program_has_updates(program):
         # correctness first: a mutating program may change what later
         # invocations should observe, so each one gets an isolated env —
-        # but iteration observations are still harvested per env, so
-        # mutating programs feed the feedback loop's StatsProfile too
-        results, iteration_obs = [], []
+        # but sites over tables the program never WRITES are still shared
+        # through the (epoch-keyed) site cache, and iteration/binding
+        # observations are harvested per env, so mutating programs feed
+        # the feedback loop's StatsProfile too
+        write_set = _write_tables(program)
+        envs, results, iteration_obs, observations = [], [], [], []
         for p in param_sets:
-            env = ClientEnv(session.db, network or session.catalog.network,
-                            c_z=session.catalog.c_z)
+            env = BatchClientEnv(session.db,
+                                 network or session.catalog.network,
+                                 c_z=session.catalog.c_z, site_cache=cache,
+                                 write_set=write_set)
             outputs = Interpreter(env, mode).run(program, p or None)
             results.append(ExecutionResult(
                 outputs=outputs, simulated_s=env.clock,
                 n_queries=env.n_queries, n_round_trips=env.n_round_trips))
             iteration_obs.extend(env.iteration_log)
+            observations.extend(env.observations)
+            envs.append(env)
         session.executions += len(param_sets)
         if executable is not None:
             executable.n_runs += len(param_sets)
@@ -194,10 +303,17 @@ def run_batch(session, program: Program,
             n_queries=sum(r.n_queries for r in results),
             n_round_trips=sum(r.n_round_trips for r in results),
             batched=False,
-            iteration_observations=iteration_obs)
+            site_hits=sum(e.site_hits for e in envs),
+            shared_site_hits=sum(e.shared_site_hits for e in envs),
+            observations=observations,
+            iteration_observations=iteration_obs,
+            # cache-level observations only: input diversity does not bound
+            # a mutating program's binding sequences (they may depend on
+            # rows earlier invocations wrote)
+            binding_observations=_merge_binding_logs(envs))
 
     env = BatchClientEnv(session.db, network or session.catalog.network,
-                         c_z=session.catalog.c_z)
+                         c_z=session.catalog.c_z, site_cache=cache)
     interp = Interpreter(env, mode)
     results = []
     clock0, q0, rt0 = 0.0, 0, 0
@@ -215,5 +331,8 @@ def run_batch(session, program: Program,
                        n_queries=env.n_queries,
                        n_round_trips=env.n_round_trips, batched=True,
                        site_hits=env.site_hits,
+                       shared_site_hits=env.shared_site_hits,
                        observations=list(env.observations),
-                       iteration_observations=list(env.iteration_log))
+                       iteration_observations=list(env.iteration_log),
+                       binding_observations=_input_diversity_fallback(
+                           _merge_binding_logs([env]), source, param_sets))

@@ -29,13 +29,17 @@ Two drift signals per query site:
 Besides the drift signals, the controller **records observed iteration
 counts** per while-loop / collection-loop site (the counts the cost model
 only ever estimated with ``while_iters_default`` / ``loop_iters_default``)
-and **publishes** them as a :class:`~repro.core.context.StatsProfile` —
-the stats half of an :class:`~repro.core.context.ExecutionContext`. A
-site's published value only moves when the running mean drifts past
-``iters_publish_threshold`` (ratio), so context fingerprints — and hence
-plan-cache keys — stay stable under observation noise, and a publish is
-precisely the event that triggers a context-driven recompile in
-:class:`~repro.runtime.serving.ServingRuntime`.
+and **observed binding-diversity fractions** per parameterized-site group
+(the serving site cache's measurement of how often bindings repeat across
+a batch — the amortization the cost model's 0/1 binding-free rule cannot
+see), and **publishes** both as a
+:class:`~repro.core.context.StatsProfile` — the stats half of an
+:class:`~repro.core.context.ExecutionContext`. A site's published value
+only moves when the running mean drifts past ``iters_publish_threshold``
+(ratio) / ``binding_publish_delta`` (absolute, fractions live in [0, 1]),
+so context fingerprints — and hence plan-cache keys — stay stable under
+observation noise, and a publish is precisely the event that triggers a
+context-driven recompile in :class:`~repro.runtime.serving.ServingRuntime`.
 """
 
 from __future__ import annotations
@@ -77,7 +81,8 @@ class FeedbackController:
 
     def __init__(self, session, drift_threshold: float = 3.0,
                  cost_drift_threshold: Optional[float] = 10.0,
-                 iters_publish_threshold: float = 1.5):
+                 iters_publish_threshold: float = 1.5,
+                 binding_publish_delta: float = 0.15):
         if drift_threshold <= 1.0:
             raise ValueError("drift_threshold must be > 1 (a ratio)")
         if cost_drift_threshold is not None and cost_drift_threshold <= 1.0:
@@ -85,10 +90,14 @@ class FeedbackController:
                              "or None to disable wall-clock drift")
         if iters_publish_threshold <= 1.0:
             raise ValueError("iters_publish_threshold must be > 1 (a ratio)")
+        if not 0.0 < binding_publish_delta < 1.0:
+            raise ValueError("binding_publish_delta must be in (0, 1) "
+                             "(an absolute delta on a fraction)")
         self.session = session
         self.drift_threshold = drift_threshold
         self.cost_drift_threshold = cost_drift_threshold
         self.iters_publish_threshold = iters_publish_threshold
+        self.binding_publish_delta = binding_publish_delta
         self.events: List[DriftEvent] = []
         self.refreshes = 0
         self.observed_queries = 0
@@ -101,6 +110,10 @@ class FeedbackController:
         # values a StatsProfile fingerprint is built from
         self._published_iters: Dict[str, float] = {}
         self.iters_publishes = 0
+        # per-parameterized-group aggregates: group -> [n batches, Σ fraction]
+        self._binding_sites: Dict[str, List[float]] = {}
+        self._published_bindings: Dict[str, float] = {}
+        self.binding_publishes = 0
 
     # ------------------------------------------------------------- observing
     def _estimated_cost_s(self, q) -> float:
@@ -177,15 +190,43 @@ class FeedbackController:
                 changed = True
         return changed
 
+    def observe_bindings(self, observations: Sequence[Tuple[str, int, int]]
+                         ) -> bool:
+        """Fold per-batch (group_site, total_lookups, distinct_bindings)
+        observations — the site cache's binding-diversity measurements —
+        into per-group running means of the distinct fraction, and
+        re-publish any group whose mean left the hysteresis band
+        (``binding_publish_delta``, absolute) around its published value.
+        Returns True when at least one published fraction moved (the
+        caller's recompile trigger)."""
+        changed = False
+        for site, total, distinct in observations:
+            if total <= 0:
+                continue
+            frac = min(1.0, distinct / total)
+            agg = self._binding_sites.setdefault(site, [0, 0.0])
+            agg[0] += 1
+            agg[1] += frac
+            mean = agg[1] / agg[0]
+            published = self._published_bindings.get(site)
+            if published is None or \
+                    abs(mean - published) > self.binding_publish_delta:
+                self._published_bindings[site] = mean
+                self.binding_publishes += 1
+                changed = True
+        return changed
+
     def stats_profile(self) -> StatsProfile:
-        """The published iteration counts (plus per-query-site mean wall-
-        clock) as the StatsProfile an ExecutionContext carries into the
-        cost model. Published — not raw — values keep context fingerprints,
-        and with them plan-cache keys, stable between publish events."""
+        """The published iteration counts and binding-diversity fractions
+        (plus per-query-site mean wall-clock) as the StatsProfile an
+        ExecutionContext carries into the cost model. Published — not raw —
+        values keep context fingerprints, and with them plan-cache keys,
+        stable between publish events."""
         wall = {sql: agg[2] / max(agg[0], 1)
                 for sql, agg in self._sites.items() if agg[2]}
         return StatsProfile.of(iters=dict(self._published_iters),
-                               site_wall_s=wall)
+                               site_wall_s=wall,
+                               bindings=dict(self._published_bindings))
 
     # -------------------------------------------------------------- reacting
     def refresh(self, tables: Sequence[str]) -> None:
@@ -209,6 +250,10 @@ class FeedbackController:
                                        "published": self._published_iters.get(site)}
                                 for site, (n, tot) in self._iter_sites.items()},
             "iters_publishes": self.iters_publishes,
+            "binding_sites": {site: {"n": int(n), "avg_fraction": tot / max(n, 1),
+                                     "published": self._published_bindings.get(site)}
+                              for site, (n, tot) in self._binding_sites.items()},
+            "binding_publishes": self.binding_publishes,
             "sites": {sql: {"n": int(n), "avg_rows": rows / max(n, 1),
                             "wall_s": wall}
                       for sql, (n, rows, wall) in self._sites.items()},

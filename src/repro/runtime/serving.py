@@ -11,27 +11,35 @@ Request processing per cycle:
 
   1. requests are grouped by program and chunked into batches of at most
      ``batch_size``;
-  2. each batch executes through :func:`repro.runtime.batch.run_batch` —
-     one server round trip per query site per batch;
+  2. each batch executes through :func:`repro.runtime.batch.run_batch`
+     against the runtime's **shared site cache**
+     (:class:`~repro.runtime.sitecache.SiteCache`) — one server round trip
+     per query site per STATS EPOCH, shared across batches and across
+     programs (serving-layer MQO); epoch keys + ``analyze()``/write
+     invalidation keep every cached result bit-identical to an uncached
+     fetch;
   3. the batch's observation log feeds the
      :class:`~repro.runtime.feedback.FeedbackController`; if observed
      cardinalities drifted past the threshold, the drifted tables are
-     re-analyzed (per-table stats versions bump) and every registered
-     program touching them is recompiled before the next batch — the memo
-     search may pick a different winner under the fresh statistics;
+     re-analyzed (per-table stats versions bump, their site-cache entries
+     drop) and every registered program touching them is recompiled before
+     the next batch — the memo search may pick a different winner under
+     the fresh statistics;
   4. responses are returned in the original request order.
 
 Every compile goes through the runtime's **serving context** — an
 :class:`~repro.core.context.ExecutionContext` whose ``batch_size`` is the
 runtime's and whose :class:`~repro.core.context.StatsProfile` is whatever
 the feedback controller has published (observed while-loop and worklist-
-loop iteration counts). The memo search therefore costs plans for batched
-execution — C_NRT of binding-free sites amortized across the batch — and
+loop iteration counts, plus per-site binding-diversity fractions measured
+at the site cache). The memo search therefore costs plans for batched
+execution — C_NRT of binding-free sites amortized across the batch, and
+of parameterized sites by their OBSERVED distinct-binding fraction — and
 may legitimately pick a different winner than a one-shot session would for
-the very same program. When a batch's iteration observations move a
-published count, the context fingerprint changes and the affected programs
-are recompiled under the new context (programs without that site keep
-their keys, hence their plans, untouched).
+the very same program. When a batch's iteration or binding observations
+move a published value, the context fingerprint changes and the affected
+programs are recompiled under the new context (programs without that site
+keep their keys, hence their plans, untouched).
 
 The module-level :func:`serve` is the one-call convenience wrapper used by
 ``examples/serve_programs.py``.
@@ -45,6 +53,7 @@ from ..api.cache import program_tables
 from ..core.context import ExecutionContext
 from ..core.regions import Program
 from .feedback import FeedbackController
+from .sitecache import SiteCache
 
 __all__ = ["ServingRuntime", "serve"]
 
@@ -54,7 +63,10 @@ class ServingRuntime:
                  drift_threshold: float = 3.0,
                  cost_drift_threshold: Optional[float] = 10.0,
                  feedback: bool = True,
-                 context: Optional[ExecutionContext] = None):
+                 context: Optional[ExecutionContext] = None,
+                 site_cache: Optional[SiteCache] = None,
+                 site_cache_ttl_s: Optional[float] = None,
+                 site_cache_entries: int = 4096):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.session = session
@@ -62,6 +74,10 @@ class ServingRuntime:
             from .store import PlanStore
             session.plan_store = PlanStore.coerce(store)
         self.batch_size = batch_size
+        # the serving-scoped shared site cache: one fetch per identical
+        # query site per stats epoch, across batches AND programs
+        self.site_cache = site_cache if site_cache is not None else \
+            SiteCache(ttl_s=site_cache_ttl_s, max_entries=site_cache_entries)
         # the base serving context; observed stats are layered onto it as
         # the feedback controller publishes them
         self._base_context = context if context is not None else \
@@ -125,7 +141,8 @@ class ServingRuntime:
             for lo in range(0, len(indices), self.batch_size):
                 chunk = indices[lo:lo + self.batch_size]
                 exe = self._executables[name]
-                batch = exe.run_batch([todo[i][1] for i in chunk])
+                batch = exe.run_batch([todo[i][1] for i in chunk],
+                                      site_cache=self.site_cache)
                 for i, result in zip(chunk, batch.results):
                     responses[i] = result
                 self.requests_served += len(chunk)
@@ -142,17 +159,25 @@ class ServingRuntime:
         if batch.iteration_observations:
             stats_moved = self.feedback.observe_iterations(
                 batch.iteration_observations)
+        if batch.binding_observations:
+            stats_moved |= self.feedback.observe_bindings(
+                batch.binding_observations)
         drifted = self.feedback.observe(batch.observations) \
             if batch.observations else []
         if drifted:
             self.feedback.refresh(drifted)
+            # the re-analyze moved the drifted tables' stats epoch, so
+            # their site-cache entries are already unreachable; drop them
+            # eagerly too
+            self.site_cache.invalidate_tables(drifted)
             self._recompile_touching(drifted)
         if stats_moved:
-            # a published iteration count moved: the serving context's
-            # fingerprint changed, so recompile under the new context. The
-            # fingerprint is restricted per program to its own sites —
-            # programs without the moved site (and any the drift branch
-            # just recompiled under this same context) hit the plan cache.
+            # a published iteration count or binding-diversity fraction
+            # moved: the serving context's fingerprint changed, so
+            # recompile under the new context. The fingerprint is
+            # restricted per program to its own sites — programs without
+            # the moved site (and any the drift branch just recompiled
+            # under this same context) hit the plan cache.
             self._recompile_for_context()
 
     def _recompile_touching(self, tables: Sequence[str]) -> None:
@@ -189,10 +214,13 @@ class ServingRuntime:
              "context": self.current_context().describe(),
              "programs": sorted(self._programs)}
         t.update({f"session_{k}": v for k, v in self.session.telemetry.items()})
+        t.update({f"site_cache_{k}": v
+                  for k, v in self.site_cache.stats().items()})
         if self.feedback is not None:
             fb = self.feedback.telemetry()
             fb.pop("sites", None)  # keep the summary flat
             fb.pop("iteration_sites", None)
+            fb.pop("binding_sites", None)
             t.update({f"feedback_{k}": v for k, v in fb.items()})
         return t
 

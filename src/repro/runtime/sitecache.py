@@ -1,0 +1,283 @@
+"""Serving-level shared site cache: cross-batch, cross-program result reuse.
+
+The per-batch site cache in :mod:`repro.runtime.batch` dies with its batch:
+the second batch of an identical workload re-fetches every query site, and
+two programs sharing a site (multi-query optimization at the serving layer)
+never share a fetch. The ``SiteCache`` lifts that cache to serving scope —
+one instance owned by :class:`~repro.runtime.serving.ServingRuntime` and
+threaded into every ``run_batch`` — so an identical site is fetched from
+the server ONCE PER STATS EPOCH instead of once per batch.
+
+**Keys are self-invalidating.** An entry is addressed by
+
+    (query-tree key, normalized full-content binding key, epoch)
+
+where the *epoch* is ``DatabaseServer.site_epoch(tables)`` — the (stats
+version, data version) pair of every base table the query scans. Any
+``analyze()`` bumps the stats version; any write (``add_table``,
+``replace_table``, interpreter ``UPDATE``) bumps the data version; either
+moves the epoch, so a lookup after the change simply misses and re-fetches.
+A cached result can therefore never be served over rows (or under
+statistics) it was not computed from — cached executions stay bit-identical
+to uncached ones by construction, even when an ``analyze()`` or a table
+write lands between (or inside) batches. ``invalidate_tables`` additionally
+drops dead entries eagerly (memory hygiene; correctness never depends on
+it), and an optional TTL expires entries whose epoch never moves.
+
+**Binding-diversity observation.** Every lookup at a parameterized site is
+also an observation: the cache tracks, per exact site
+(:func:`~repro.core.context.query_site_key`) and per table group
+(:func:`~repro.core.context.param_group_key`), how many lookups it saw and
+how many DISTINCT bindings among them. The distinct fraction d is exactly
+the amortization the cost model needs for parameterized sites — d·B of a
+batch's B invocations pay a server fetch, the rest are local hits — and is
+published (with hysteresis) by
+:meth:`~repro.runtime.feedback.FeedbackController.observe_bindings` into
+the serving :class:`~repro.core.context.ExecutionContext`, where
+:meth:`~repro.core.cost.CostModel.param_site_amortization` consumes it.
+
+Entries carry the *era* (batch sequence number) they were inserted in, so
+``run_batch`` can tell in-batch reuse (``site_hits``) from cross-batch /
+cross-program sharing (``shared_site_hits``) in its telemetry.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+from ..core.context import param_group_key, query_site_key
+from ..relational.algebra import Query
+
+__all__ = ["SiteCache", "Uncacheable", "freeze_value", "param_key"]
+
+# a site's distinct-binding tracking stops growing here; at the cap the
+# observed fraction is frozen (the estimate up to that point) instead of
+# decaying toward 0 as total keeps climbing
+_MAX_DISTINCT_TRACKED = 4096
+
+
+class Uncacheable(Exception):
+    """A query binding with no faithful hashable identity."""
+
+
+def freeze_value(v):
+    """Hashable FULL-CONTENT identity of one binding value."""
+    if isinstance(v, (int, float, str, bool, bytes)) or v is None:
+        return v
+    if isinstance(v, (tuple, list)):
+        return tuple(freeze_value(x) for x in v)
+    item = getattr(v, "item", None)
+    if item is not None and getattr(v, "ndim", None) == 0:
+        return item()                      # numpy scalar
+    tobytes = getattr(v, "tobytes", None)
+    if tobytes is not None:
+        return (getattr(v, "shape", None), str(getattr(v, "dtype", "")),
+                tobytes())                 # full-content array identity
+    raise Uncacheable(type(v).__name__)
+
+
+def param_key(params) -> Tuple:
+    """Hashable FULL-CONTENT identity of a parameter binding. Raises
+    :class:`Uncacheable` for values it cannot represent faithfully — the
+    caller then bypasses the cache rather than risk serving a stale result
+    for a colliding key."""
+    if not params:
+        return ()
+    return tuple((k, freeze_value(params[k])) for k in sorted(params))
+
+
+class _Entry:
+    __slots__ = ("value", "stamp", "era", "tables")
+
+    def __init__(self, value, stamp: float, era: int,
+                 tables: Tuple[str, ...]):
+        self.value = value
+        self.stamp = stamp
+        self.era = era
+        self.tables = tables
+
+
+class _SiteStats:
+    """Per-site binding-diversity aggregate (one observation per lookup).
+
+    Bindings are tracked by Python hash, not by payload — diversity needs a
+    distinct COUNT, so retaining full frozen bindings (which for array
+    parameters embed the whole ``tobytes()``) would pin dead payload for
+    the cache's lifetime."""
+
+    __slots__ = ("total", "distinct", "frozen_fraction")
+
+    def __init__(self):
+        self.total = 0
+        self.distinct: set = set()
+        self.frozen_fraction: float = -1.0   # <0: still tracking live
+
+    def observe(self, pkey) -> None:
+        self.total += 1
+        if self.frozen_fraction < 0:
+            self.distinct.add(hash(pkey))
+            if len(self.distinct) >= _MAX_DISTINCT_TRACKED:
+                # freeze the estimate at saturation: past the cap we can no
+                # longer count distinct values, and letting total keep
+                # dividing would make a fully diverse site read as ~0
+                self.frozen_fraction = len(self.distinct) / self.total
+                self.distinct.clear()
+
+    @property
+    def n_distinct(self) -> int:
+        if self.frozen_fraction >= 0:
+            return _MAX_DISTINCT_TRACKED
+        return len(self.distinct)
+
+    @property
+    def fraction(self) -> float:
+        if self.frozen_fraction >= 0:
+            return self.frozen_fraction
+        return len(self.distinct) / self.total if self.total else 0.0
+
+
+class SiteCache:
+    """Serving-scoped, epoch-keyed query-result cache with TTL."""
+
+    def __init__(self, ttl_s: Optional[float] = None,
+                 max_entries: int = 4096, clock=time.monotonic):
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError("ttl_s must be > 0 (or None: no TTL)")
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.ttl_s = ttl_s
+        self.max_entries = max_entries
+        self._clock = clock
+        self._entries: "OrderedDict[Tuple, _Entry]" = OrderedDict()
+        self.era = 0                    # batch sequence number (new_era())
+        # telemetry
+        self.hits = 0
+        self.shared_hits = 0            # hit on an entry from an earlier era
+        self.misses = 0
+        self.expirations = 0
+        self.evictions = 0
+        self.invalidations = 0
+        # binding-diversity observation: exact site (telemetry) and table
+        # group (what the feedback controller publishes into the context)
+        self._site_stats: Dict[str, _SiteStats] = {}
+        self._group_stats: Dict[str, _SiteStats] = {}
+        self._group_tables: Dict[str, Tuple[str, ...]] = {}
+
+    # --------------------------------------------------------------- keying
+    @staticmethod
+    def site_key(q: Query, pkey: Tuple, epoch: Tuple, origin: int = 0) -> Tuple:
+        """``origin`` is the DatabaseServer's ``instance_token``: one cache
+        serving executables over DIFFERENT databases must never collide on
+        identically-named tables (epochs are per-server counters that start
+        at the same values everywhere)."""
+        return (origin, q.key(), pkey, epoch)
+
+    def new_era(self) -> int:
+        """Mark a batch boundary: hits on entries inserted before the
+        current era count as cross-batch (shared) reuse."""
+        self.era += 1
+        return self.era
+
+    # -------------------------------------------------------------- get/put
+    def lookup(self, key: Tuple) -> Optional[Tuple[object, bool]]:
+        """(result, crossed-era?) for ``key``, or None. An entry past its
+        TTL is expired (a miss); a hit refreshes LRU recency. The boolean is
+        True when the entry was inserted in an earlier era (a cross-batch /
+        cross-program share)."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if self.ttl_s is not None and self._clock() - entry.stamp > self.ttl_s:
+            del self._entries[key]
+            self.expirations += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        cross = entry.era < self.era
+        if cross:
+            self.shared_hits += 1
+        self._entries.move_to_end(key)
+        return entry.value, cross
+
+    def get(self, key: Tuple):
+        """The cached result for ``key``, or None (see :meth:`lookup`)."""
+        found = self.lookup(key)
+        return None if found is None else found[0]
+
+    def put(self, key: Tuple, value, tables: Tuple[str, ...]) -> None:
+        self._entries[key] = _Entry(value, self._clock(), self.era,
+                                    tuple(tables))
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    # --------------------------------------------------------- invalidation
+    def invalidate_tables(self, tables) -> int:
+        """Eagerly drop entries touching any of ``tables``. Epoch keys
+        already make such entries unreachable (their epoch moved); this
+        frees the memory and keeps telemetry honest."""
+        drop = set(tables)
+        stale = [k for k, e in self._entries.items() if drop & set(e.tables)]
+        for k in stale:
+            del self._entries[k]
+        self.invalidations += len(stale)
+        return len(stale)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ---------------------------------------------- binding-diversity stats
+    def observe_binding(self, q: Query, tables: Tuple[str, ...],
+                        pkey: Tuple) -> None:
+        """Record one lookup at a PARAMETERIZED site (``pkey`` non-empty):
+        feeds the per-site and per-group distinct-binding fractions."""
+        self._site_stats.setdefault(query_site_key(q),
+                                    _SiteStats()).observe(pkey)
+        gkey = param_group_key(tables)
+        self._group_tables.setdefault(gkey, tuple(sorted(tables)))
+        self._group_stats.setdefault(gkey, _SiteStats()).observe(pkey)
+
+    def binding_fractions(self) -> Dict[str, float]:
+        """Distinct-binding fraction per table group (``qdiv:…`` keys) —
+        the publishable granularity (exact query trees change under
+        rewriting; table sets survive it)."""
+        return {g: s.fraction for g, s in self._group_stats.items()}
+
+    def site_binding_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per exact site (``qsite:…``): lookups, distinct bindings,
+        fraction. Telemetry granularity."""
+        return {site: {"lookups": s.total, "distinct": s.n_distinct,
+                       "fraction": s.fraction}
+                for site, s in self._site_stats.items()}
+
+    def group_tables(self, gkey: str) -> Tuple[str, ...]:
+        return self._group_tables.get(gkey, ())
+
+    # ------------------------------------------------------------ telemetry
+    def stats(self) -> Dict[str, object]:
+        lookups = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "shared_hits": self.shared_hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "expirations": self.expirations,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+            "param_sites": len(self._site_stats),
+        }
+
+    def describe(self) -> str:
+        s = self.stats()
+        return (f"SiteCache: {s['entries']} entries, "
+                f"{s['hits']} hit(s) ({s['shared_hits']} cross-batch), "
+                f"{s['misses']} miss(es), "
+                f"{s['invalidations']} invalidation(s)")

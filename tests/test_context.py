@@ -167,6 +167,131 @@ class TestObservedIterations:
 
 
 # --------------------------------------------------------------------------
+# Acceptance: observed binding diversity amortizes parameterized sites
+# --------------------------------------------------------------------------
+
+class TestBindingDiversity:
+    def _tasks_group(self):
+        from repro.core import param_group_key
+        return param_group_key(("tasks",))
+
+    def test_observed_diversity_flips_we_plan(self):
+        """THE binding-diversity flip (issue acceptance): at batch_size=64
+        with a short observed worklist, the binding-free prefetch wins under
+        the 0/1 rule (parameterized σ never amortizes) — but an observed
+        distinct-binding fraction of 1/64 (every invocation reuses the same
+        worklist key, so the site cache serves 63 of 64 fetches) amortizes
+        the σ site to C_Q/64 and the query plan wins instead. Same program,
+        same statistics, same batch size: only the observed diversity
+        differs."""
+        session = wilos_session()
+        iters = {we_loop_site(): 1.0}
+        base = session.compile(make_wilos_e(), context=ExecutionContext(
+            batch_size=64, stats=StatsProfile.of(iters)))
+        amortized = session.compile(make_wilos_e(), context=ExecutionContext(
+            batch_size=64, stats=StatsProfile.of(
+                iters, bindings={self._tasks_group(): 1.0 / 64})))
+        assert plan_kind(base) == "prefetch"
+        assert plan_kind(amortized) == "query"
+        assert amortized.est_cost_s < base.est_cost_s
+        # both compute identical results
+        assert base.run(worklist=[1, 3]).outputs == \
+            amortized.run(worklist=[1, 3]).outputs
+
+    def test_high_diversity_keeps_unamortized_winner(self):
+        """Fully diverse bindings (d=1.0) must price like no sharing at
+        all — the conservative default."""
+        session = wilos_session()
+        iters = {we_loop_site(): 1.0}
+        none = session.compile(make_wilos_e(), context=ExecutionContext(
+            batch_size=64, stats=StatsProfile.of(iters)))
+        diverse = session.compile(make_wilos_e(), context=ExecutionContext(
+            batch_size=64, stats=StatsProfile.of(
+                iters, bindings={self._tasks_group(): 1.0})))
+        assert plan_kind(diverse) == plan_kind(none) == "prefetch"
+        assert diverse.est_cost_s == none.est_cost_s
+
+    def test_param_site_amortization_floor_and_default(self):
+        cm = CostModel(wilos_session().db, CostCatalog(SLOW_REMOTE),
+                       ExecutionContext(batch_size=8, stats=StatsProfile.of(
+                           bindings={self._tasks_group(): 0.01})))
+        param_q = Select(Cmp("==", Col("t_role_id"), Param("r")),
+                         Scan("tasks"))
+        # observed 0.01 floors at 1/B (at most one fetch per distinct
+        # binding, and at least one per batch)
+        assert cm.param_site_amortization(param_q) == pytest.approx(1 / 8)
+        # unobserved group: no amortization
+        other = Select(Cmp("==", Col("r_rank"), Param("r")), Scan("roles"))
+        assert cm.param_site_amortization(other) == 1.0
+        # one-shot context: batching cannot help
+        cm1 = CostModel(wilos_session().db, CostCatalog(SLOW_REMOTE),
+                        ExecutionContext(batch_size=1, stats=StatsProfile.of(
+                            bindings={self._tasks_group(): 0.01})))
+        assert cm1.param_site_amortization(param_q) == 1.0
+
+    def test_unrelated_binding_site_leaves_plans_hot(self):
+        """A published diversity for a group the program doesn't contain
+        never invalidates its plans (fingerprint restriction)."""
+        from repro.core import param_group_key
+        db = make_orders_customer_db(100, 5000)
+        session = CobraSession(db, CostCatalog(SLOW_REMOTE),
+                               config=OptimizerConfig.preset("paper-exp1-3"))
+        session.compile(make_p0())
+        again = session.compile(make_p0(), context=ExecutionContext(
+            stats=StatsProfile.of(
+                bindings={param_group_key(("tasks",)): 0.1})))
+        assert again.from_cache
+
+    def test_program_param_sites(self):
+        from repro.api import program_param_sites
+        assert program_param_sites(make_wilos_e()) == (self._tasks_group(),)
+        assert self._tasks_group() in program_param_sites(make_scan())
+        assert program_param_sites(make_p0()) == ()      # binding-free
+
+    def test_report_carries_binding_diversity(self):
+        session = wilos_session()
+        exe = session.compile(make_wilos_e(), context=ExecutionContext(
+            batch_size=64, stats=StatsProfile.of(
+                bindings={self._tasks_group(): 0.25})))
+        assert exe.report.binding_diversity == {self._tasks_group(): 0.25}
+        assert "binding-diversity~0.25" in exe.report.describe()
+
+    def test_serving_loop_flips_both_ways_end_to_end(self):
+        """The full closed loop (issue acceptance): serve W_E at
+        batch_size=8. Registration (no observations) picks the prefetch
+        plan. A phase of IDENTICAL worklists publishes iters=1 and
+        d=1/8 -> the σ plan wins the context recompile (with iters alone
+        prefetch would still win: the flip is diversity-driven). A phase
+        of fully DIVERSE worklists pushes the published mean back up ->
+        the prefetch plan returns. Every response stays bit-identical to
+        uncached execution."""
+        session = wilos_session()
+        rt = ServingRuntime(session, batch_size=8, drift_threshold=1e9)
+        rt.register(make_wilos_e())
+        assert plan_kind(rt.executable("W_E")) == "prefetch"
+
+        identical = [("W_E", {"worklist": [1]})] * 16
+        responses = rt.serve(identical)
+        assert plan_kind(rt.executable("W_E")) == "query"   # flip #1
+        assert rt.context_recompiles >= 1
+        # iters alone (no diversity) would NOT have flipped at batch 8:
+        iters_only = session.compile(make_wilos_e(), context=ExecutionContext(
+            batch_size=8, stats=StatsProfile.of({we_loop_site(): 1.0})))
+        assert plan_kind(iters_only) == "prefetch"
+        published = rt.feedback.telemetry()["binding_sites"]
+        assert published[self._tasks_group()]["published"] == \
+            pytest.approx(1 / 8)
+
+        diverse = [("W_E", {"worklist": [i % 20]}) for i in range(16)]
+        responses += rt.serve(diverse)
+        assert plan_kind(rt.executable("W_E")) == "prefetch"  # flip #2
+        # bit-identical to uncached execution, throughout both phases
+        for (name, params), r in zip(identical + diverse, responses):
+            assert r.outputs == session.execute(make_wilos_e(),
+                                                **params).outputs
+
+
+# --------------------------------------------------------------------------
 # Context in plan identity
 # --------------------------------------------------------------------------
 
@@ -301,6 +426,93 @@ class TestRuleSet:
         assert "user-limit" not in cfg.rule_names()
         cfg2 = OptimizerConfig(rule_set=rules, rules=("toFIR", "user-limit"))
         assert cfg2.rule_names() == ("toFIR", "user-limit")
+
+
+# --------------------------------------------------------------------------
+# Satellite: declared before=/after= ordering constraints on rules
+# --------------------------------------------------------------------------
+
+class TestRuleOrdering:
+    def _noop(self, name, **kw):
+        @cobra_rule(name, match="loop", **kw)
+        def fn(memo, and_id, ctx):
+            return 0
+        return fn
+
+    def test_before_reorders_against_registry_order(self):
+        rs = RuleSet()
+        rs.register(self._noop("b"))
+        rs.register(self._noop("a", before=("b",)))
+        assert [r.name for r in rs.rules()] == ["b", "a"]      # registry
+        assert [r.name for r in rs.resolve()] == ["a", "b"]    # resolved
+        assert [r.name for r in rs.dag_rules()] == ["a", "b"]
+
+    def test_after_reorders_and_stability(self):
+        """Unconstrained rules keep their relative registry positions."""
+        rs = RuleSet()
+        for n in ("r1", "r2", "r3"):
+            rs.register(self._noop(n))
+        rs.register(self._noop("early", after=()))
+        rs.register(self._noop("r1follower", after=("r1",)))
+        assert [r.name for r in rs.resolve()] == \
+            ["r1", "r2", "r3", "early", "r1follower"]
+        rs2 = RuleSet()
+        rs2.register(self._noop("late", after=("z",)))
+        rs2.register(self._noop("z"))
+        assert [r.name for r in rs2.resolve()] == ["z", "late"]
+
+    def test_cycle_raises_clear_error(self):
+        rs = RuleSet()
+        rs.register(self._noop("x", before=("y",)))
+        rs.register(self._noop("y", before=("x",)))
+        with pytest.raises(ValueError, match="cycle"):
+            rs.resolve()
+
+    def test_constraints_on_absent_rules_ignored(self):
+        """A rule may order itself against an optional/excluded peer."""
+        rs = RuleSet()
+        rs.register(self._noop("solo", before=("not-registered",),
+                               after=("also-missing",)))
+        assert [r.name for r in rs.resolve()] == ["solo"]
+        # selection restricted to a subset ignores cross-subset edges too
+        rs.register(self._noop("other", after=("solo",)))
+        assert [r.name for r in rs.resolve(["other"])] == ["other"]
+
+    def test_config_resolution_honors_constraints(self):
+        """OptimizerConfig.resolve_rules goes through the topological sort:
+        a user rule declaring after="T5" fires after T5 even though
+        with_rule appends it... and one declaring before="toFIR" jumps the
+        whole built-in pipeline."""
+        first = self._noop("user-first", before=("toFIR",))
+        rules = RuleSet.default().with_rule(first)
+        cfg = OptimizerConfig(rule_set=rules)
+        names = [r.name for r in cfg.resolve_rules()]
+        assert names.index("user-first") < names.index("toFIR")
+        # the constrained set still compiles programs end to end
+        session = CobraSession(make_wilos_db(100, ratio=10),
+                               CostCatalog(SLOW_REMOTE), config=cfg)
+        assert session.compile(make_wilos_e()).run(worklist=[1]).outputs
+
+    def test_duplicate_selection_dedups_not_false_cycle(self):
+        """A repeated name in the selection must resolve cleanly (first
+        position wins), not misreport an empty 'cycle'."""
+        rs = RuleSet()
+        rs.register(self._noop("a", after=("b",)))
+        rs.register(self._noop("b"))
+        assert [r.name for r in rs.resolve(["a", "a", "b"])] == ["b", "a"]
+        assert [r.name for r in rs.resolve(["b", "a", "b"])] == ["b", "a"]
+
+    def test_cycle_surfaces_through_config(self):
+        rs = RuleSet()
+        rs.register(self._noop("p", after=("q",)))
+        rs.register(self._noop("q", after=("p",)))
+        with pytest.raises(ValueError, match="cycle"):
+            OptimizerConfig(rule_set=rs).resolve_rules()
+
+    def test_describe_shows_constraints(self):
+        r = self._noop("shown", before=("T5",), after=("toFIR",))
+        assert "before=['T5']" in r.describe()
+        assert "after=['toFIR']" in r.describe()
 
 
 # --------------------------------------------------------------------------

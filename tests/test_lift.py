@@ -446,9 +446,11 @@ class TestLiftErrors:
         assert "ProgramBuilder" in str(ei.value)  # escape hatch named
         return ei
 
-    def test_comprehension_rejected_with_location(self):
+    def test_dict_comprehension_rejected_with_location(self):
+        """List comprehensions lift (TestListComprehensions); dict/set/
+        generator comprehensions stay outside the vocabulary."""
         def f():
-            xs = [t for t in load_all("tasks")]
+            xs = {t.t_id: t.t_hours for t in load_all("tasks")}
             return xs
 
         ei = self._raises(f, match="comprehensions")
@@ -579,6 +581,173 @@ class TestTracePlainPython:
 
         assert isinstance(f, Executable)
         assert f.run()["total"] > 0
+
+
+# --------------------------------------------------------------------------
+# List comprehensions: lowered onto the loop-accumulation path
+# --------------------------------------------------------------------------
+
+class TestListComprehensions:
+    def _session(self):
+        return CobraSession(make_wilos_db(200, ratio=10),
+                            CostCatalog(FAST_LOCAL))
+
+    def test_basic_comprehension_matches_explicit_loop(self):
+        def comp():
+            xs = [scale(t.t_hours) for t in load_all("tasks")]
+            return xs
+
+        def explicit():
+            xs = []
+            for t in load_all("tasks"):
+                xs.append(scale(t.t_hours))
+            return xs
+
+        session = self._session()
+        assert session.compile(lift_program(comp)).run().outputs["xs"] == \
+            session.compile(lift_program(explicit)).run().outputs["xs"]
+
+    def test_comprehension_with_filter(self):
+        def comp():
+            xs = [t.t_hours for t in load_all("tasks") if t.t_state == 2]
+            return xs
+
+        def explicit():
+            xs = []
+            for t in load_all("tasks"):
+                if t.t_state == 2:
+                    xs.append(t.t_hours)
+            return xs
+
+        session = self._session()
+        got = session.compile(lift_program(comp)).run().outputs["xs"]
+        assert got == session.compile(
+            lift_program(explicit)).run().outputs["xs"]
+        assert 0 < len(got) < 200
+
+    def test_multiple_filters_nest(self):
+        def comp():
+            xs = [t.t_id for t in load_all("tasks")
+                  if t.t_state == 2 if t.t_hours > 10]
+            return xs
+
+        session = self._session()
+        out = session.compile(lift_program(comp)).run().outputs["xs"]
+        exact = [r["t_id"] for r in session.db.table("tasks").to_rows()
+                 if r["t_state"] == 2 and r["t_hours"] > 10]
+        assert out == exact
+
+    def test_comprehension_over_traced_collection_input(self):
+        def comp(worklist=()):
+            doubled = [wid + wid for wid in worklist]
+            return doubled
+
+        session = self._session()
+        exe = session.compile(lift_program(comp))
+        assert exe.run(worklist=[1, 5, 7]).outputs["doubled"] == [2, 10, 14]
+
+    def test_comprehension_over_query_handle(self):
+        def comp():
+            ranked = [r.r_rank for r in q("roles").order_by("r_id")]
+            return ranked
+
+        session = self._session()
+        out = session.compile(lift_program(comp)).run().outputs["ranked"]
+        assert out == [r["r_rank"]
+                       for r in session.db.table("roles").to_rows()]
+
+    def test_returned_comprehension(self):
+        def comp():
+            return [t.t_hours for t in load_all("tasks")]
+
+        session = self._session()
+        out = session.compile(lift_program(comp)).run()
+        assert len(out.outputs["_ret0"]) == 200
+
+    def test_comprehension_variable_scoping(self):
+        """The comprehension variable must not leak into (or clobber) the
+        enclosing scope."""
+        def comp():
+            t = 7
+            xs = [t.t_id for t in load_all("tasks")]
+            n = t + 1          # the OUTER t, untouched by the comprehension
+            return xs, n
+
+        session = self._session()
+        out = session.compile(lift_program(comp)).run()
+        assert out.outputs["n"] == 8
+        assert len(out.outputs["xs"]) == 200
+
+    def test_nested_comprehension_rejected(self):
+        def f():
+            xs = [[y for y in load_all("roles")] for t in load_all("tasks")]
+            return xs
+
+        with pytest.raises(LiftError, match="nested"):
+            lift_program(f)
+
+    def test_multiple_for_clauses_rejected(self):
+        def f():
+            xs = [combine(t.t_id, r.r_id)
+                  for t in load_all("tasks") for r in load_all("roles")]
+            return xs
+
+        with pytest.raises(LiftError, match="multiple `for`"):
+            lift_program(f)
+
+    def test_trace_time_source_rejected(self):
+        def f():
+            xs = [i + 1 for i in (1, 2, 3)]
+            return xs
+
+        with pytest.raises(LiftError, match="trace-time"):
+            lift_program(f)
+
+    def test_comprehension_in_while_guard_rejected(self):
+        """The guard is re-evaluated every iteration by the interpreter,
+        but a comprehension's accumulation loop would lower BEFORE the
+        WhileRegion and freeze at entry — silently wrong results, so it
+        must be a LiftError (the body is the right place for it)."""
+        def f():
+            n = 0
+            total = 0
+            while n < len([t.t_id for t in load_all("tasks")]):
+                total = total + 1
+                n = n + 10
+            return total, n
+
+        with pytest.raises(LiftError, match="while guard"):
+            lift_program(f)
+
+        # ...while a comprehension in the BODY (evaluated once per
+        # iteration, like Python) stays liftable
+        def ok():
+            n = 0
+            total = 0.0
+            while n < 3:
+                xs = [t.t_hours for t in load_all("tasks")]
+                total = total + xs[0]
+                n = n + 1
+            return total
+
+        session = self._session()
+        out = session.compile(lift_program(ok)).run()
+        first = session.db.table("tasks").to_rows()[0]["t_hours"]
+        assert out.outputs["total"] == pytest.approx(3 * first)
+
+    def test_setcomp_and_genexp_rejected(self):
+        def f_set():
+            xs = {t.t_id for t in load_all("tasks")}
+            return xs
+
+        def f_gen():
+            xs = list(t.t_id for t in load_all("tasks"))
+            return xs
+
+        with pytest.raises(LiftError, match="comprehensions"):
+            lift_program(f_set)
+        with pytest.raises(LiftError, match="comprehensions"):
+            lift_program(f_gen)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,463 @@
+"""The serving-level shared SiteCache: cross-batch/cross-program MQO,
+write-set-aware batching, invalidation races.
+
+Issue acceptance:
+  * a cross-batch SiteCache hit is served on the SECOND batch of an
+    identical workload (one fetch per site per stats epoch, not per batch);
+  * a mutating program shares at least one read-only site under write-set
+    analysis (the all-or-nothing sequential fallback is gone);
+  * every cached execution is bit-identical to uncached execution — in
+    particular, a concurrent ``analyze()`` / table write landing between
+    (or inside) batches must never let a stale site result be served
+    (epoch keys: per-table stats + data versions);
+  * TTL expiry, LRU bound, eager ``invalidate_tables``, and the per-site
+    binding-diversity observation the feedback loop publishes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (CobraSession, OptimizerConfig, program_read_tables,
+                       program_write_tables)
+from repro.api.lift import lift_program, load_all, update_row
+from repro.core import CostCatalog
+from repro.programs import (make_orders_customer_db, make_p0, make_wilos_a,
+                            make_wilos_b, make_wilos_db, make_wilos_e)
+from repro.relational.algebra import Scan, scan_tables
+from repro.relational.database import FAST_LOCAL, SLOW_REMOTE
+from repro.runtime import BatchClientEnv, ServingRuntime, SiteCache
+from repro.runtime.sitecache import param_key
+
+
+def paper_session(db, network=SLOW_REMOTE):
+    return CobraSession(db, CostCatalog(network),
+                        config=OptimizerConfig.preset("paper-exp1-3"))
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+# --------------------------------------------------------------------------
+# SiteCache unit behavior: epoch keys, TTL, LRU, invalidation
+# --------------------------------------------------------------------------
+
+class TestSiteCacheUnit:
+    def _db(self):
+        return make_wilos_db(100, ratio=10)
+
+    def test_epoch_key_misses_after_analyze(self):
+        db = self._db()
+        cache = SiteCache()
+        q = Scan("tasks")
+        key = cache.site_key(q, (), db.site_epoch(("tasks",)))
+        cache.put(key, "result", ("tasks",))
+        assert cache.get(key) == "result"
+        db.analyze("tasks")
+        fresh = cache.site_key(q, (), db.site_epoch(("tasks",)))
+        assert fresh != key
+        assert cache.get(fresh) is None        # stats epoch moved: miss
+
+    def test_epoch_key_misses_after_data_write_without_analyze(self):
+        """replace_table changes ROWS but not statistics — the data version
+        alone must move the epoch (this is what keeps cached executions
+        bit-identical: stale rows are unreachable, not just unlikely)."""
+        db = self._db()
+        cache = SiteCache()
+        q = Scan("tasks")
+        key = cache.site_key(q, (), db.site_epoch(("tasks",)))
+        cache.put(key, "old rows", ("tasks",))
+        v = db.table_version("tasks")
+        db.replace_table(make_wilos_db(400, ratio=10).table("tasks"))
+        assert db.table_version("tasks") == v          # stats untouched...
+        assert db.site_epoch(("tasks",)) != key[2]     # ...epoch moved anyway
+        assert cache.get(cache.site_key(q, (),
+                                        db.site_epoch(("tasks",)))) is None
+
+    def test_ttl_expires_entries(self):
+        clock = FakeClock()
+        cache = SiteCache(ttl_s=10.0, clock=clock)
+        cache.put(("k",), "v", ("tasks",))
+        clock.now = 9.0
+        assert cache.get(("k",)) == "v"
+        clock.now = 11.0
+        assert cache.get(("k",)) is None
+        assert cache.expirations == 1 and len(cache) == 0
+
+    def test_lru_bound_evicts_oldest(self):
+        cache = SiteCache(max_entries=2)
+        cache.put(("a",), 1, ())
+        cache.put(("b",), 2, ())
+        assert cache.get(("a",)) == 1      # refresh a's recency
+        cache.put(("c",), 3, ())
+        assert cache.evictions == 1
+        assert cache.get(("b",)) is None   # b was LRU
+        assert cache.get(("a",)) == 1 and cache.get(("c",)) == 3
+
+    def test_invalidate_tables_drops_matching_entries(self):
+        cache = SiteCache()
+        cache.put(("t",), 1, ("tasks",))
+        cache.put(("r",), 2, ("roles",))
+        cache.put(("tr",), 3, ("roles", "tasks"))
+        assert cache.invalidate_tables(["tasks"]) == 2
+        assert cache.invalidations == 2
+        assert cache.get(("r",)) == 2
+        assert cache.get(("t",)) is None and cache.get(("tr",)) is None
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="ttl_s"):
+            SiteCache(ttl_s=0)
+        with pytest.raises(ValueError, match="max_entries"):
+            SiteCache(max_entries=0)
+
+    def test_binding_diversity_observation(self):
+        cache = SiteCache()
+        from repro.relational.algebra import Cmp, Col, Param, Select
+        q = Select(Cmp("==", Col("t_role_id"), Param("rid")), Scan("tasks"))
+        for rid in (1, 1, 2, 1):
+            cache.observe_binding(q, scan_tables(q),
+                                  param_key({"rid": rid}))
+        (stats,) = cache.site_binding_stats().values()
+        assert stats["lookups"] == 4 and stats["distinct"] == 2
+        assert stats["fraction"] == pytest.approx(0.5)
+        (frac,) = cache.binding_fractions().values()
+        assert frac == pytest.approx(0.5)
+
+    def test_stats_and_describe_shape(self):
+        cache = SiteCache()
+        assert set(cache.stats()) >= {"entries", "hits", "shared_hits",
+                                      "misses", "hit_rate", "expirations",
+                                      "evictions", "invalidations"}
+        assert "SiteCache" in cache.describe()
+
+
+# --------------------------------------------------------------------------
+# Acceptance: cross-batch and cross-program sharing
+# --------------------------------------------------------------------------
+
+class TestCrossBatchSharing:
+    def test_second_identical_batch_hits_shared_cache(self):
+        """THE acceptance counter: the second batch of an identical
+        workload is served from the first batch's fetches — zero new round
+        trips, bit-identical outputs."""
+        session = paper_session(make_orders_customer_db(300, 100))
+        exe = session.compile(make_p0())
+        cache = SiteCache()
+        single = exe.run()
+        b1 = exe.run_batch([{}] * 4, site_cache=cache)
+        b2 = exe.run_batch([{}] * 4, site_cache=cache)
+        assert b1.shared_site_hits == 0
+        assert b2.shared_site_hits > 0
+        assert b2.n_round_trips == 0          # every site already resident
+        for r in b1.results + b2.results:
+            assert r.outputs == single.outputs
+
+    def test_serving_runtime_shares_across_batches(self):
+        session = paper_session(make_wilos_db(300, ratio=10))
+        rt = ServingRuntime(session, batch_size=4, feedback=False)
+        rt.register(make_wilos_e())
+        rt.serve([("W_E", {"worklist": [1]})] * 4)
+        assert rt.site_cache.shared_hits == 0
+        before = rt.n_round_trips
+        rt.serve([("W_E", {"worklist": [1]})] * 4)
+        assert rt.site_cache.shared_hits > 0
+        assert rt.n_round_trips == before     # second batch: all local
+        assert rt.telemetry()["site_cache_shared_hits"] > 0
+
+    def test_cross_program_site_sharing(self):
+        """MQO at the serving layer: two DIFFERENT programs whose plans
+        fetch the same site (Scan(tasks)) share one server fetch."""
+        session = paper_session(make_wilos_db(300, ratio=10), FAST_LOCAL)
+        rt = ServingRuntime(session, batch_size=4, feedback=False)
+        rt.register(make_wilos_e())           # prefetch plan: fetches tasks
+        rt.register(make_wilos_b())           # loadAll(tasks) site
+        rt.serve([("W_E", {"worklist": [1]})] * 2)
+        shared_before = rt.site_cache.shared_hits
+        rt.serve([("W_B", {})] * 2)
+        assert rt.site_cache.shared_hits > shared_before
+        # and W_B's outputs are exactly what an uncached run computes
+        base = session.execute(make_wilos_b())
+        final = rt.serve([("W_B", {})])[0]
+        assert final.outputs == base.outputs
+
+    def test_private_cache_preserves_per_batch_behavior(self):
+        """Without a serving-scoped cache, run_batch keeps the classic
+        one-fetch-per-site-per-batch behavior (a fresh private cache)."""
+        session = paper_session(make_orders_customer_db(200, 100))
+        exe = session.compile(make_p0())
+        sites = exe.run().n_round_trips
+        b1 = exe.run_batch([{}] * 3)
+        b2 = exe.run_batch([{}] * 3)
+        assert b1.n_round_trips == sites and b2.n_round_trips == sites
+        assert b1.shared_site_hits == 0 and b2.shared_site_hits == 0
+
+
+# --------------------------------------------------------------------------
+# Acceptance: write-set-aware mutating programs
+# --------------------------------------------------------------------------
+
+class TestWriteSetSharing:
+    def test_read_write_split(self):
+        wa = make_wilos_a()
+        assert program_write_tables(wa) == ("roles",)
+        assert program_read_tables(wa) == ("tasks",)
+        assert program_write_tables(make_p0()) == ()
+
+    def test_mutating_program_shares_read_only_site(self):
+        """Acceptance: W_A updates `roles` but only READS `tasks` — its
+        tasks fetch is shared across the batch's isolated invocations,
+        replacing the old all-or-nothing sequential fallback."""
+        session = paper_session(make_wilos_db(200, ratio=10), FAST_LOCAL)
+        exe = session.compile(make_wilos_a())
+        batch = exe.run_batch([{}] * 3)
+        assert not batch.batched              # still isolated invocations
+        assert batch.site_hits >= 2           # tasks site shared twice
+
+        # bit-identical to fully isolated sequential execution
+        s2 = paper_session(make_wilos_db(200, ratio=10), FAST_LOCAL)
+        e2 = s2.compile(make_wilos_a())
+        for r in batch.results:
+            assert r.outputs == e2.run().outputs
+        assert np.array_equal(
+            np.asarray(session.db.table("roles").column("r_rank")),
+            np.asarray(s2.db.table("roles").column("r_rank")))
+
+    def test_written_table_sites_never_cached(self):
+        """A site over a table the program UPDATES is fetched fresh every
+        time — each invocation must observe earlier invocations' writes."""
+        def bump_then_read(worklist=()):
+            out = []
+            for wid in worklist:
+                update_row("roles", "r_rank", 99, "r_id", wid)
+            for r in load_all("roles"):
+                out.append(r.r_rank)
+            return out
+
+        session = paper_session(make_wilos_db(100, ratio=10), FAST_LOCAL)
+        exe = session.compile(lift_program(bump_then_read))
+        cache = SiteCache()
+        batch = exe.run_batch([{"worklist": [0]}, {"worklist": [1]}],
+                              site_cache=cache)
+        # the SECOND invocation sees BOTH writes (no stale roles snapshot)
+        assert batch.results[1].outputs["out"][0] == 99
+        assert batch.results[1].outputs["out"][1] == 99
+        # and the first saw only its own
+        assert batch.results[0].outputs["out"][0] == 99
+
+
+# --------------------------------------------------------------------------
+# Satellite: invalidation races — concurrent analyze()/write vs in-flight
+# batches must never serve a stale site result
+# --------------------------------------------------------------------------
+
+class TestInvalidationRaces:
+    def _grown(self, n=1200):
+        return make_wilos_db(n, ratio=10)
+
+    def test_analyze_between_batches_refetches(self):
+        session = paper_session(make_wilos_db(200, ratio=10))
+        exe = session.compile(make_wilos_b())
+        cache = SiteCache()
+        exe.run_batch([{}] * 2, site_cache=cache)
+        session.db.analyze("tasks")
+        b2 = exe.run_batch([{}] * 2, site_cache=cache)
+        assert b2.shared_site_hits == 0       # epoch moved: nothing reused
+        assert b2.n_round_trips >= 1
+
+    def test_write_between_batches_never_serves_stale(self):
+        """The bit-identity acceptance under mutation: data replaced (no
+        ANALYZE — statistics still stale!) between two batches; the second
+        batch must compute exactly what an uncached execution computes."""
+        session = paper_session(self._grown(200), FAST_LOCAL)
+        exe = session.compile(make_wilos_b())
+        cache = SiteCache()
+        b1 = exe.run_batch([{}] * 2, site_cache=cache)
+        session.db.replace_table(self._grown().table("tasks"))
+        b2 = exe.run_batch([{}] * 2, site_cache=cache)
+        fresh = session.execute(make_wilos_b())
+        assert b2.results[0].outputs == fresh.outputs
+        assert b2.results[0].outputs != b1.results[0].outputs  # data moved
+        assert b2.shared_site_hits == 0
+
+    def test_write_mid_batch_never_serves_stale(self):
+        """The PlanStore-race pattern at the SiteCache: a write lands while
+        a batch env is in flight (between two lookups of the same site).
+        The second lookup's epoch differs, so it refetches — the in-flight
+        env observes the new rows exactly like an uncached client would."""
+        db = self._grown(100)
+        session = paper_session(db, FAST_LOCAL)
+        cache = SiteCache()
+        env = BatchClientEnv(db, FAST_LOCAL, site_cache=cache)
+        q = Scan("tasks")
+        t1 = env.execute_query(q)
+        assert env.execute_query(q) is t1     # in-batch reuse while quiet
+        db.replace_table(self._grown(300).table("tasks"))
+        t2 = env.execute_query(q)             # write raced the batch
+        assert t2.nrows == 300 and t1.nrows == 100
+        assert cache.misses == 2              # the post-write lookup missed
+
+    def test_analyze_mid_batch_refetches_same_rows(self):
+        """A concurrent ANALYZE (stats only, same rows) mid-batch: the
+        refetch is mandatory (epoch moved) but yields identical rows —
+        correctness costs one round trip, never a wrong answer."""
+        db = self._grown(100)
+        session = paper_session(db, FAST_LOCAL)
+        env = BatchClientEnv(db, FAST_LOCAL, site_cache=SiteCache())
+        q = Scan("tasks")
+        t1 = env.execute_query(q)
+        db.analyze("tasks")
+        t2 = env.execute_query(q)
+        assert env.n_round_trips == 2         # the second lookup refetched
+        assert env.site_hits == 0
+        assert t2.to_rows() == t1.to_rows()
+
+    def test_feedback_refresh_invalidates_site_cache(self):
+        """The drift path: re-analyze drops the drifted tables' entries
+        from the serving cache eagerly (epoch keys already orphaned them)."""
+        db = make_orders_customer_db(100, 5000)
+        session = paper_session(db)
+        rt = ServingRuntime(session, batch_size=4, drift_threshold=3.0)
+        rt.register(make_p0())
+        grown = make_orders_customer_db(4000, 500)
+        session.db.replace_table(grown.table("orders"))
+        session.db.replace_table(grown.table("customer"))
+        rt.serve([("P0", {})] * 8)
+        assert rt.feedback.refreshes >= 1
+        assert rt.site_cache.invalidations >= 0  # eager drop ran
+        # post-drift responses still match uncached execution
+        base = session.execute(make_p0())
+        final = rt.serve([("P0", {})])[0]
+        assert sorted(np.asarray(final["result"]).tolist()) == \
+            pytest.approx(sorted(np.asarray(base["result"]).tolist()))
+
+
+# --------------------------------------------------------------------------
+# Review regressions: db identity, written-table amortization, saturation
+# --------------------------------------------------------------------------
+
+class TestReviewRegressions:
+    def test_one_cache_two_databases_never_cross_serves(self):
+        """Identically-named tables on two servers both start at epoch
+        counters (1, 1) — the cache key's origin token (the server's
+        instance_token) must keep them apart."""
+        db_a = make_wilos_db(100, ratio=10, seed=2)
+        db_b = make_wilos_db(100, ratio=10, seed=7)   # different rows!
+        cache = SiteCache()
+        env_a = BatchClientEnv(db_a, FAST_LOCAL, site_cache=cache)
+        env_b = BatchClientEnv(db_b, FAST_LOCAL, site_cache=cache)
+        q = Scan("tasks")
+        t_a = env_a.execute_query(q)
+        t_b = env_b.execute_query(q)
+        assert cache.hits == 0 and cache.misses == 2  # no cross-db serving
+        assert np.asarray(t_a.column("t_role_id")).tolist() != \
+            np.asarray(t_b.column("t_role_id")).tolist()
+
+    def test_written_table_param_site_never_amortizes(self):
+        """A parameterized site over a table the program WRITES: the
+        runtime refetches it every invocation, so (a) no diversity is
+        observed there, (b) program_param_sites excludes its group, and
+        (c) the cost model refuses amortization even when another program
+        published a diversity for the same table group."""
+        from repro.api import (CobraSession, ExecutionContext, StatsProfile,
+                               program_param_sites)
+        from repro.api.builder import col, param, q
+        from repro.core import param_group_key
+
+        def read_then_bump(worklist=()):
+            out = []
+            for wid in worklist:
+                for r in q("roles").where(col("r_id")
+                                          .eq(param("k"))).bind(k=wid):
+                    out.append(r.r_rank)
+                update_row("roles", "r_rank", 1, "r_id", wid)
+            return out
+
+        program = lift_program(read_then_bump)
+        assert program_write_tables(program) == ("roles",)
+        assert program_param_sites(program) == ()      # group excluded
+        session = paper_session(make_wilos_db(100, ratio=10), FAST_LOCAL)
+        exe = session.compile(program)
+        batch = exe.run_batch([{"worklist": [1]}] * 3)
+        assert batch.binding_observations == []        # nothing observed
+        # a foreign published diversity for the roles group changes nothing
+        ctx = ExecutionContext(batch_size=8, stats=StatsProfile.of(
+            bindings={param_group_key(("roles",)): 0.01}))
+        priced = session.compile(program, context=ctx)
+        baseline = session.compile(program,
+                                   context=ExecutionContext(batch_size=8))
+        assert priced.est_cost_s == baseline.est_cost_s
+
+    def test_cost_model_write_guard(self):
+        from repro.api import ExecutionContext, StatsProfile
+        from repro.core import CostModel, param_group_key
+        from repro.relational.algebra import Cmp, Col, Param, Select
+        db = make_wilos_db(100, ratio=10)
+        cm = CostModel(db, CostCatalog(FAST_LOCAL), ExecutionContext(
+            batch_size=8,
+            stats=StatsProfile.of(bindings={param_group_key(("tasks",)):
+                                            0.01})))
+        pq = Select(Cmp("==", Col("t_role_id"), Param("r")), Scan("tasks"))
+        assert cm.param_site_amortization(pq) == pytest.approx(1 / 8)
+        cm.write_tables = frozenset(["tasks"])
+        assert cm.param_site_amortization(pq) == 1.0
+        assert not cm.tables_shareable(("tasks",))
+
+    def test_saturated_site_freezes_fraction(self):
+        """Past the distinct-tracking cap the fraction freezes at the
+        estimate-so-far instead of decaying toward 0 as lookups keep
+        coming."""
+        import repro.runtime.sitecache as sc
+        cache = SiteCache()
+        q = Scan("tasks")
+        old = sc._MAX_DISTINCT_TRACKED
+        sc._MAX_DISTINCT_TRACKED = 4
+        try:
+            for i in range(4):                         # fully diverse
+                cache.observe_binding(q, ("tasks",), ("k", i))
+            (s,) = cache.site_binding_stats().values()
+            assert s["fraction"] == pytest.approx(1.0)
+            for i in range(100):                       # keep it diverse
+                cache.observe_binding(q, ("tasks",), ("k", 1000 + i))
+            (s,) = cache.site_binding_stats().values()
+            assert s["fraction"] == pytest.approx(1.0)  # frozen, not 4/104
+        finally:
+            sc._MAX_DISTINCT_TRACKED = old
+
+
+# --------------------------------------------------------------------------
+# Binding observations reach BatchResult (feedback's input)
+# --------------------------------------------------------------------------
+
+class TestBindingObservations:
+    def test_run_batch_reports_group_diversity(self):
+        """The UNOPTIMIZED W_E executes one parameterized σ per worklist
+        key: 3 lookups, 2 distinct bindings."""
+        from repro.runtime import run_batch
+        session = paper_session(make_wilos_db(200, ratio=10), FAST_LOCAL)
+        batch = run_batch(session, make_wilos_e(),
+                          [{"worklist": [1]}, {"worklist": [2]},
+                           {"worklist": [1]}])
+        ((_site, total, distinct),) = batch.binding_observations
+        assert total == 3 and distinct == 2
+
+    def test_input_diversity_fallback_when_plan_has_no_param_sites(self):
+        """The compiled (prefetch) W_E executes ZERO parameterized queries;
+        the batch still reports the program-INPUT diversity for the source
+        program's parameterized groups — this is what breaks the
+        chicken-and-egg between running a binding-free plan and ever
+        observing that bindings repeat."""
+        session = paper_session(make_wilos_db(300, ratio=10))
+        exe = session.compile(make_wilos_e())
+        assert "prefetch" in repr(exe.program.body)
+        batch = exe.run_batch([{"worklist": [1]}] * 4)
+        ((_site, total, distinct),) = batch.binding_observations
+        assert total == 4 and distinct == 1
+
+    def test_binding_free_program_reports_nothing(self):
+        session = paper_session(make_orders_customer_db(100, 50))
+        batch = session.compile(make_p0()).run_batch([{}] * 3)
+        assert batch.binding_observations == []
