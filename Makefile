@@ -1,7 +1,8 @@
 PYTHON ?= python
 PYTHONPATH := src
 
-.PHONY: test test-fast lint bench-smoke bench bench-batch bench-serving examples
+.PHONY: test test-fast lint bench-smoke bench bench-batch bench-serving \
+	bench-compiled examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -37,6 +38,14 @@ bench-batch:
 # the batch sweep, so this is an alias of bench-batch; the serving section
 # lands in BENCH_runtime.json (uploaded as the existing CI artifact)
 bench-serving: bench-batch
+
+# compiled execution tier: interpreter-vs-compiled wall throughput on the
+# P0-style loop-heavy workload at batch 64 + one-time lowering latency;
+# the `compiled` section lands in BENCH_runtime.json (the full bench-batch
+# run emits it too — this target runs ONLY that section)
+bench-compiled:
+	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=compiled \
+		$(PYTHON) -m benchmarks.run bench_runtime
 
 examples:
 	$(PYTHON) examples/quickstart.py

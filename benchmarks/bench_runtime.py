@@ -24,6 +24,11 @@ distinct-binding fractions per parameterized-site group, and mutating-
 workload (W_A) throughput with write-set-aware sharing vs fully isolated
 sequential execution.
 
+The ``compiled`` section (``make bench-compiled``, or rides along with the
+full run) records interpreter-vs-compiled-tier wall throughput on the
+P0-style loop-heavy workload at batch 64 plus the one-time lowering
+latency; ``REPRO_BENCH_ONLY=compiled`` runs just that section.
+
 ``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
 to ``BENCH_runtime.json`` (uploaded as a CI workflow artifact).
 """
@@ -60,12 +65,82 @@ def _throughput(exe, param_sets):
     return len(param_sets) / batch.simulated_s, batch
 
 
+def _bench_compiled(emit, smoke):
+    """Interpreter-vs-compiled tier throughput (``make bench-compiled``).
+
+    The P0-style loop-heavy workload at batch 64: the same executable, the
+    same parameter sets, served by (a) the row-at-a-time exact interpreter,
+    (b) the vectorized fast interpreter, (c) the compiled tier (kernel-
+    backed columnar loops). All three are bit-identical; the wall clock is
+    what differs. Also records the one-time lowering latency."""
+    bs = 16 if smoke else 64
+    n_orders, n_cust = (300, 600) if smoke else (4000, 8000)
+    session = _paper_session(make_orders_customer_db(n_orders, n_cust),
+                             SLOW_REMOTE)
+    exe = session.compile(make_p0())
+    params = [{}] * bs
+
+    t0 = time.perf_counter()
+    lowered = exe.lower()
+    lower_us = (time.perf_counter() - t0) * 1e6
+    # warm every path once (imports, jit, plan analysis caches)
+    exe.run_batch(params, tier="compiled")
+    exe.run_batch(params, tier="interpreter")
+
+    t0 = time.perf_counter()
+    exact = exe.run_batch(params, mode="exact", tier="interpreter")
+    exact_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fast = exe.run_batch(params, tier="interpreter")
+    fast_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = exe.run_batch(params, tier="compiled")
+    comp_wall = time.perf_counter() - t0
+
+    # outputs agree across all three; the CLOCK identity the tier promises
+    # is vs the production (fast) interpreter — exact mode sums per-row
+    # charges in a different order, so its clock carries a float tail
+    identical = (exact.outputs == fast.outputs == compiled.outputs
+                 and fast.simulated_s == compiled.simulated_s)
+    exact_rps = bs / exact_wall
+    fast_rps = bs / fast_wall
+    comp_rps = bs / comp_wall
+    emit("bench_runtime/compiled/P0_interpreter_exact", exact_wall * 1e6,
+         f"wall_rps={exact_rps:.1f}")
+    emit("bench_runtime/compiled/P0_interpreter_fast", fast_wall * 1e6,
+         f"wall_rps={fast_rps:.1f}")
+    emit("bench_runtime/compiled/P0_compiled", comp_wall * 1e6,
+         f"wall_rps={comp_rps:.1f};backend={lowered.backend};"
+         f"speedup_vs_exact={exact_rps and comp_rps / exact_rps:.1f}x;"
+         f"identical={identical}")
+    emit("bench_runtime/compiled/P0_lower_latency", lower_us,
+         f"columnar_loops={lowered.n_columnar}")
+    return {
+        "workload": "P0",
+        "batch_size": bs,
+        "backend": lowered.backend,
+        "columnar_loops": lowered.n_columnar,
+        "lower_latency_us": lower_us,
+        "interpreter_exact_rps": exact_rps,
+        "interpreter_fast_rps": fast_rps,
+        "compiled_rps": comp_rps,
+        "speedup_vs_exact": comp_rps / exact_rps if exact_rps else None,
+        "speedup_vs_fast": comp_rps / fast_rps if fast_rps else None,
+        "bit_identical": identical,
+    }
+
+
 def main(emit):
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     n_orders, n_cust = (300, 600) if smoke else (4000, 8000)
     n_tasks = 300 if smoke else 4000
 
     traj = {"batch_sizes": list(BATCH_SIZES), "workloads": {}}
+
+    # ------------------------------------------ compiled tier vs interpreter
+    traj["compiled"] = _bench_compiled(emit, smoke)
+    if os.environ.get("REPRO_BENCH_ONLY") == "compiled":
+        return traj
 
     # ---------------------------------------------------------- P0 serving
     session = _paper_session(make_orders_customer_db(n_orders, n_cust),

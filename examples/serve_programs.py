@@ -21,11 +21,19 @@ Three acts:
      ANALYZE. The feedback controller notices observed cardinalities
      leaving the estimated band, re-analyzes only the drifted tables, and
      recompiles P0 — whose winning plan flips from P1 (join) to P2
-     (prefetch). M0's plan (sales only) stays hot throughout.
+     (prefetch). M0's plan (sales only) stays hot throughout. Before the
+     new plan replaces the running one, the anti-regression guard replays
+     the last observed bindings against both.
+  4. **Hot promotion to the compiled tier.** A runtime with
+     ``compile_hot_plans=24`` serves the same P0 stream: the first batch
+     is interpreted (heat below threshold), the pair goes hot mid-stream,
+     and every later batch runs the kernel-backed columnar executable —
+     same outputs, same simulated clock, less wall time per batch.
 """
 
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, "src")
 
@@ -145,6 +153,45 @@ def main():
           f"{t['session_memo_runs']} memo runs total, "
           f"store {t['session_store_hits']} hit(s)/"
           f"{t['session_store_puts']} put(s)")
+
+    # ---- act 4: hot promotion to the compiled tier ------------------------
+    # a fresh runtime over the (grown) database: the first 16-request batch
+    # stays interpreted (heat 16 < 24), the second crosses the threshold,
+    # is lowered ONCE, and every batch from then on runs the kernel-backed
+    # columnar executable — bit-identical outputs and simulated clock,
+    # smaller wall clock
+    print(f"\n=== compiled execution tier (compile_hot_plans=24) ===")
+    session_c = fresh_session(store)
+    rt_hot = ServingRuntime(session_c, batch_size=16, compile_hot_plans=24)
+    rt_hot.register(make_p0())
+    # an interpreter-only twin serves the IDENTICAL stream for the
+    # bit-identity check (comparing early vs late batches of one stateful
+    # stream would conflate tiers with site-cache warmth)
+    rt_cold = ServingRuntime(fresh_session(store), batch_size=16)
+    walls, tiers, hot_out, cold_out = [], [], [], []
+    for _ in range(3):
+        before = rt_hot.compiler.compiled_batches
+        t0 = time.perf_counter()
+        hot_out.extend(rt_hot.serve([("P0", {})] * 16))
+        walls.append(time.perf_counter() - t0)
+        tiers.append("compiled" if rt_hot.compiler.compiled_batches > before
+                     else "interpreter")
+    rt_cold.register(make_p0())
+    for _ in range(3):
+        cold_out.extend(rt_cold.serve([("P0", {})] * 16))
+    for i, (wall, tier) in enumerate(zip(walls, tiers)):
+        print(f"batch {i + 1}: {tier:>11s} tier, {wall * 1e3:6.1f}ms wall")
+    assert tiers[0] == "interpreter" and tiers[-1] == "compiled", \
+        "the pair should go hot (and stay hot) mid-stream"
+    assert all(a.outputs == b.outputs and a.simulated_s == b.simulated_s
+               for a, b in zip(hot_out, cold_out)), \
+        "compiled and interpreted serving must be bit-identical"
+    ct = rt_hot.compiler.telemetry()
+    print(f"compiler: {ct['compiles']} lowering(s) "
+          f"({ct['compile_s_total'] * 1e3:.1f}ms), "
+          f"{ct['interpreted_batches']} interpreted / "
+          f"{ct['compiled_batches']} compiled batch(es), "
+          f"backend={ct['backend']}")
 
 
 if __name__ == "__main__":

@@ -22,9 +22,10 @@ from typing import Dict, Optional, Tuple
 
 from ..core.context import ONE_SHOT
 
-__all__ = ["PlanCache", "PlanCacheKey", "program_fingerprint",
-           "program_tables", "program_write_tables", "program_read_tables",
-           "program_sites", "program_param_sites", "query_tables"]
+__all__ = ["ArtifactCache", "PlanCache", "PlanCacheKey",
+           "program_fingerprint", "program_tables", "program_write_tables",
+           "program_read_tables", "program_sites", "program_param_sites",
+           "query_tables"]
 
 
 def program_fingerprint(program) -> str:
@@ -277,6 +278,61 @@ class PlanCache:
                  if k.stats_version != current_stats_version]
         for k in stale:
             del self._entries[k]
+        return len(stale)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "invalidations": self.invalidations}
+
+
+class ArtifactCache:
+    """LRU over compiled execution artifacts (the lowered-executable tier).
+
+    The compiled sibling of :class:`PlanCache`: where the plan cache memoizes
+    the *optimizer's* output (which plan wins), this memoizes the *lowering's*
+    output (the columnar executable for that plan), content-addressed by the
+    same fingerprint vocabulary (see ``runtime.store.content_address``).
+    Invalidation is predicate-based because artifact staleness is decided by
+    the owner (:class:`repro.compiled.manager.CompileManager` drops artifacts
+    whose programs touch drifted tables)."""
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[object, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key) -> Optional[object]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return entry
+
+    def put(self, key, value) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, pred) -> int:
+        """Drop every entry for which ``pred(key, value)`` is true."""
+        stale = [k for k, v in self._entries.items() if pred(k, v)]
+        for k in stale:
+            del self._entries[k]
+        self.invalidations += len(stale)
         return len(stale)
 
     def clear(self) -> None:

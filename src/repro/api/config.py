@@ -70,10 +70,19 @@ class OptimizerConfig:
     max_combos: int = 4096                    # combination cross-product bound
     max_rounds: int = 64                      # saturation round limit
     use_plan_cache: bool = True               # sessions may bypass the cache
+    # promote a (program, plan, context) pair to the compiled execution tier
+    # after this many interpreted invocations (None = compiled tier off).
+    # An EXECUTION-tier knob, not plan identity: compiled and interpreted
+    # executions are bit-identical, so it is deliberately NOT part of
+    # cache_key() — flipping it must not invalidate cached/stored plans.
+    compile_hot_plans: Optional[int] = None
 
     def __post_init__(self):
         if self.choice not in ("cost", "heuristic"):
             raise ValueError(f"choice must be 'cost' or 'heuristic', got {self.choice!r}")
+        if self.compile_hot_plans is not None and self.compile_hot_plans < 1:
+            raise ValueError("compile_hot_plans must be >= 1 (or None: "
+                             "compiled tier disabled)")
         if isinstance(self.rules, list):
             object.__setattr__(self, "rules", tuple(self.rules))
         if isinstance(self.exclude_rules, list):

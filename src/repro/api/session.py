@@ -115,6 +115,7 @@ class Executable:
         self.from_cache = from_cache
         self.context = context if context is not None else ONE_SHOT
         self.n_runs = 0
+        self._lowered: Dict[str, object] = {}  # backend -> LoweredProgram
 
     # ------------------------------------------------------------ plan view
     @property
@@ -158,9 +159,23 @@ class Executable:
         return self.session.execute(self.program, network=network, mode=mode,
                                     **params)
 
+    def lower(self, backend: Optional[str] = None):
+        """The compiled-tier lowering of this plan
+        (:class:`~repro.compiled.lower.LoweredProgram`), memoized per
+        backend: columnar loops bound to vectorized kernel-backed
+        executables, everything else kept on the interpreter."""
+        from ..compiled.lower import lower_program, resolve_backend
+        be = resolve_backend(backend)
+        lowered = self._lowered.get(be)
+        if lowered is None:
+            lowered = lower_program(self.program, be)
+            self._lowered[be] = lowered
+        return lowered
+
     def run_batch(self, param_sets: Sequence[Mapping[str, object]], *,
                   network: Optional[NetworkProfile] = None,
-                  mode: str = "fast", site_cache=None):
+                  mode: str = "fast", site_cache=None,
+                  tier: str = "auto", compiler=None):
         """Execute the optimized program over a BATCH of parameter bindings.
 
         The whole batch shares one client environment: each query site is
@@ -175,11 +190,18 @@ class Executable:
         outputs match per-invocation :meth:`run` bit-for-bit. Programs
         containing updates execute sequentially on isolated environments,
         but sites over tables they never write still share the cache
-        (write-set analysis)."""
+        (write-set analysis).
+
+        ``tier``/``compiler`` select the execution tier (see
+        :func:`repro.runtime.batch.run_batch`): ``tier="compiled"`` forces
+        the kernel-backed columnar tier, ``"interpreter"`` forces it off,
+        and the default ``"auto"`` promotes through a
+        :class:`~repro.compiled.manager.CompileManager` when one is
+        passed — always bit-identical to the interpreted tier."""
         from ..runtime.batch import run_batch
         return run_batch(self.session, self.program, param_sets,
                          network=network, mode=mode, executable=self,
-                         site_cache=site_cache)
+                         site_cache=site_cache, tier=tier, compiler=compiler)
 
     def run_baseline(self, *, network: Optional[NetworkProfile] = None,
                      mode: str = "fast", **params) -> ExecutionResult:
@@ -218,6 +240,10 @@ class CobraSession:
         self.compile_calls = 0
         self.memo_runs = 0          # actual memo build+saturate+search passes
         self.executions = 0
+        self.compiled_executions = 0   # invocations served by the compiled tier
+        # feedback plan-swap guard outcomes (runtime.feedback.validate_swap)
+        self.plan_swaps_accepted = 0
+        self.plan_swaps_rejected = 0
 
     # ------------------------------------------------------------- keys
     def _catalog_key(self, catalog: CostCatalog) -> Tuple:
@@ -451,6 +477,9 @@ class CobraSession:
         t = {"compile_calls": self.compile_calls,
              "memo_runs": self.memo_runs,
              "executions": self.executions,
+             "compiled_executions": self.compiled_executions,
+             "plan_swaps_accepted": self.plan_swaps_accepted,
+             "plan_swaps_rejected": self.plan_swaps_rejected,
              "stats_version": self.db.stats_version}
         t.update({f"cache_{k}": v for k, v in self.plan_cache.stats().items()})
         if self.plan_store is not None:

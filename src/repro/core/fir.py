@@ -42,7 +42,7 @@ __all__ = [
     "FSelLookupE", "FCacheLookupE", "FCacheLookupAllE", "FQueryE", "FFoldE",
     "FSeqE", "FPrefetchE", "loop_to_fir", "FIRConversionError", "eval_fir",
     "fir_to_region", "fir_children", "fir_rebuild", "fir_map", "fold_to_loop",
-    "NameGen",
+    "NameGen", "fold_accumulators",
 ]
 
 
@@ -621,6 +621,37 @@ def _body_parts(region: Region) -> List[Tuple[object, Optional[IExpr]]]:
             raise FIRConversionError(f"region not representable: {r!r}")
 
     walk(region, None)
+    return out
+
+
+def fold_accumulators(loop: LoopRegion) -> Optional[Dict[str, str]]:
+    """Scalar-accumulator reduction ops of a cursor loop as F-IR sees them.
+
+    Converts the loop to its fold form and pattern-matches each slot's
+    update expression: ``{acc: op}`` where ``op`` is the ``FBin`` operator
+    of an ``acc = acc <op> e`` update (unwrapping one guard ``FCondE``),
+    or ``"other"`` for collection/map/non-reduction slots. Returns ``None``
+    when the loop has no F-IR form at all. The compiled tier's lowering
+    (:mod:`repro.compiled.lower`) uses this as a semantic cross-check on
+    the syntactic accumulator recognition before it folds a column with a
+    reduction kernel: a slot both analyses agree is an order-insensitive
+    ``+``/``min``/``max`` fold is safe to compute as one reduction."""
+    try:
+        fold, idx = loop_to_fir(loop)
+    except FIRConversionError:
+        return None
+    out: Dict[str, str] = {}
+    for name, i in idx.items():
+        upd = fold.func.items[i]
+        if isinstance(upd, FCondE):
+            upd = upd.then
+        if isinstance(upd, FBin):
+            l_is = isinstance(upd.left, FAcc) and upd.left.name == name
+            r_is = isinstance(upd.right, FAcc) and upd.right.name == name
+            if l_is != r_is:
+                out[name] = upd.op
+                continue
+        out[name] = "other"
     return out
 
 

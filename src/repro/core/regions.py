@@ -56,6 +56,7 @@ __all__ = [
     "Region", "BasicBlock", "SeqRegion", "LoopRegion", "CondRegion",
     "WhileRegion", "Program",
     "Interpreter", "register_function", "get_function", "write_tables",
+    "CompileNote", "compilability",
 ]
 
 # --------------------------------------------------------------------------
@@ -677,6 +678,93 @@ def write_tables(program: Program) -> Tuple[str, ...]:
 
     walk(program.body)
     return tuple(sorted(out))
+
+
+# --------------------------------------------------------------------------
+# Compilability analysis
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompileNote:
+    """Per-region verdict of the compiled tier's lowering analysis.
+
+    ``verdict`` is ``"columnar"`` (the region lowers to a vectorized
+    executable) or ``"interpreter"`` (it stays on the row-at-a-time /
+    splicing interpreter); ``reason`` names the construct that forced the
+    interpreter tier. ``site`` is the region's iteration-site key, so
+    annotations join against the feedback controller's observed counts."""
+
+    kind: str      # "loop" | "while"
+    verdict: str   # "columnar" | "interpreter"
+    reason: str
+    site: str
+
+
+def _has_early_exit(r: Region) -> bool:
+    if isinstance(r, BasicBlock):
+        return isinstance(r.stmt, (BreakStmt, ContinueStmt, ReturnStmt))
+    return any(_has_early_exit(c) for c in r.children())
+
+
+def _has_nested_iteration(r: Region) -> bool:
+    if isinstance(r, (LoopRegion, WhileRegion)):
+        return True
+    return any(_has_nested_iteration(c) for c in r.children())
+
+
+def _loop_reject_reason(r: LoopRegion) -> str:
+    """Coarse diagnosis of WHY ``analyze_loop`` rejected a loop body. The
+    authoritative accept/reject is ``vectorize.analyze_loop``; this only
+    names the blocking construct for annotations/telemetry."""
+    if _has_early_exit(r.body):
+        return "early-exit (break/continue/return pins iteration order)"
+    if _has_nested_iteration(r.body):
+        return "nested loop in body"
+
+    def has_else(x: Region) -> bool:
+        if isinstance(x, CondRegion) and x.else_r is not None:
+            return True
+        return any(has_else(c) for c in x.children())
+
+    if has_else(r.body):
+        return "if/else body (only a single guard if vectorizes)"
+    return "statement outside the columnar vocabulary"
+
+
+def compilability(program: Union[Program, Region]) -> Dict[Tuple, CompileNote]:
+    """Annotate every iteration region with its compiled-tier verdict.
+
+    Returns ``{region.key(): CompileNote}``. Loops whose bodies
+    ``vectorize.analyze_loop`` accepts are ``"columnar"`` — the compiled
+    tier lowers exactly those; ``while`` regions (data-dependent iteration
+    counts) and rejected loop bodies stay ``"interpreter"``, and the
+    compiled executable splices its columnar segments around them."""
+    from .vectorize import analyze_loop
+
+    notes: Dict[Tuple, CompileNote] = {}
+    body = program.body if isinstance(program, Program) else program
+
+    def walk(r: Region) -> None:
+        if isinstance(r, LoopRegion):
+            if analyze_loop(r, {}) is not None:
+                notes[r.key()] = CompileNote(
+                    kind="loop", verdict="columnar", reason="",
+                    site=loop_site_key(r.var, r.source))
+            else:
+                notes[r.key()] = CompileNote(
+                    kind="loop", verdict="interpreter",
+                    reason=_loop_reject_reason(r),
+                    site=loop_site_key(r.var, r.source))
+        elif isinstance(r, WhileRegion):
+            notes[r.key()] = CompileNote(
+                kind="while", verdict="interpreter",
+                reason="data-dependent iteration count",
+                site=while_site_key(r.pred))
+        for c in r.children():
+            walk(c)
+
+    walk(body)
+    return notes
 
 
 # --------------------------------------------------------------------------

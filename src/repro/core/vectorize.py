@@ -10,6 +10,14 @@ then executes the loop columnar (jnp/np bulk ops) while charging the
 Property tests (tests/test_properties.py) assert state AND clock equivalence
 between the two modes on randomized programs/data. Unrecognized loops fall
 back to exact mode — equivalence is never compromised for speed.
+
+The columnar executor is split in two layers so the compiled tier
+(:mod:`repro.compiled`) can reuse it: ``exec_loop_plan`` owns the statement
+walk and ALL simulated-time charging, while the data-movement primitives
+(navigation gather, prefetch-cache lookup, accumulator fold) are pluggable
+:class:`LoopHooks`. The fast interpreter passes the defaults; the compiled
+tier passes kernel-backed, artifact-cached implementations — both charge
+identically because the charging lives in the shared walk.
 """
 
 from __future__ import annotations
@@ -27,7 +35,8 @@ from .regions import (Assign, BasicBlock, BreakStmt, CollectionAdd, CondRegion,
                       ReturnStmt, SeqRegion, Stmt, UpdateRow, _BIN_OPS,
                       _FUNCTIONS)
 
-__all__ = ["analyze_loop", "try_exec_loop_fast"]
+__all__ = ["analyze_loop", "exec_loop_plan", "try_exec_loop_fast",
+           "LoopHooks", "LoopPlan"]
 
 _ACC_OPS = {"+", "min", "max"}
 _ACC_IDENTITY = {"+": 0.0, "min": np.inf, "max": -np.inf}
@@ -227,6 +236,26 @@ def _broadcast(v, n):
     return a
 
 
+@dataclasses.dataclass
+class LoopHooks:
+    """Pluggable data-movement primitives for the columnar walk.
+
+    Every hook must be observationally identical to the default (same
+    values, same ORM-cache mutations, same exceptions) — only HOW the
+    gather/fold is computed may differ (cached indices, Pallas kernels).
+    Simulated-time charging stays in :func:`exec_loop_plan`, shared by all
+    hook sets, so clock equivalence cannot drift."""
+
+    nav: object = None            # (env, ce, target, INav, n) -> None
+    cache_lookup: object = None   # (env, ce, target, ICacheLookup, n) -> None
+    accumulate: object = None     # (ce, stmt, IBin, mask|None, state) -> None
+    row_source: object = None     # (Table) -> {col: np.ndarray}
+
+
+def _default_row_source(src: Table) -> Dict[str, np.ndarray]:
+    return {c: np.asarray(src.column(c)) for c in src.schema.names}
+
+
 def try_exec_loop_fast(interp, r: LoopRegion, src, state: Dict[str, object]) -> bool:
     """Attempt vectorized execution. Returns False to request exact fallback."""
     if not isinstance(src, Table) or src.nrows == 0:
@@ -234,10 +263,25 @@ def try_exec_loop_fast(interp, r: LoopRegion, src, state: Dict[str, object]) -> 
     plan = analyze_loop(r, state)
     if plan is None:
         return False
-    env = interp.env
+    exec_loop_plan(interp.env, r, src, state, plan)
+    return True
+
+
+def exec_loop_plan(env, r: LoopRegion, src: Table, state: Dict[str, object],
+                   plan: LoopPlan, hooks: Optional[LoopHooks] = None) -> None:
+    """Columnar execution of a recognized loop under a precomputed plan.
+
+    Owns the statement walk and EVERY ``charge_statement``/query charge —
+    the one code path both the fast interpreter and the compiled tier run
+    through, so their simulated clocks are identical by construction."""
+    hooks = hooks or LoopHooks()
+    nav = hooks.nav or _vec_nav
+    cache_lookup = hooks.cache_lookup or _vec_cache_lookup
+    accumulate = hooks.accumulate or _vec_accumulate
+    row_source = hooks.row_source or _default_row_source
     n = src.nrows
     ce = _ColEnv(n, state)
-    ce.rows[r.var] = {c: np.asarray(src.column(c)) for c in src.schema.names}
+    ce.rows[r.var] = row_source(src)
 
     env.charge_statement(n)  # loop header per iteration
     mask = np.ones(n, dtype=bool)
@@ -254,16 +298,16 @@ def try_exec_loop_fast(interp, r: LoopRegion, src, state: Dict[str, object]) -> 
         if isinstance(stmt, Assign):
             e = stmt.expr
             if isinstance(e, INav):
-                _vec_nav(env, ce, stmt.target, e, n)
+                nav(env, ce, stmt.target, e, n)
                 env.charge_statement(nexec)  # the assign itself
                 continue
             if isinstance(e, ICacheLookup):
-                _vec_cache_lookup(env, ce, stmt.target, e, n)
+                cache_lookup(env, ce, stmt.target, e, n)
                 env.charge_statement(nexec)   # assign
                 env.charge_statement(nexec)   # lookup_cache charge
                 continue
             if stmt.target in plan.accumulators and isinstance(e, IBin) and e.op in _ACC_OPS:
-                _vec_accumulate(ce, stmt, e, mask if guard is not None else None, state)
+                accumulate(ce, stmt, e, mask if guard is not None else None, state)
                 env.charge_statement(nexec)
                 continue
             val = _eval_vec(e, ce)
@@ -295,12 +339,12 @@ def try_exec_loop_fast(interp, r: LoopRegion, src, state: Dict[str, object]) -> 
             continue
         raise AssertionError(f"unplanned stmt {stmt!r}")
 
-    # export final accumulator values
+    # export final accumulator values (a kernel-folded accumulator has
+    # already written its scalar into `state` and left no running column)
     for acc in plan.accumulators:
         col = ce.cols.get(acc)
         if isinstance(col, np.ndarray):
             state[acc] = col[-1].item()
-    return True
 
 
 def _vec_nav(env, ce: _ColEnv, target: str, e: INav, n: int) -> None:

@@ -10,11 +10,20 @@ dispatch layer. Kernels are validated in interpret mode on CPU
 (tests/test_kernels.py); on real TPUs pass interpret=False.
 """
 
-from . import ops, ref
-from .flash_attention import flash_attention
-from .join_probe import build_direct_table, join_probe
-from .rwkv6_scan import rwkv6_scan
-from .segment_reduce import segment_reduce
+from . import ref
+
+try:  # the Pallas kernels and their dispatch layer need jax
+    from . import ops
+    from .flash_attention import flash_attention
+    from .join_probe import build_direct_table, join_probe
+    from .rwkv6_scan import rwkv6_scan
+    from .segment_reduce import segment_reduce
+    HAS_JAX = True
+except ImportError:  # jax-free install: ref.py numpy fallbacks remain usable
+    ops = None
+    flash_attention = rwkv6_scan = segment_reduce = None
+    join_probe = build_direct_table = None
+    HAS_JAX = False
 
 __all__ = ["ops", "ref", "flash_attention", "rwkv6_scan", "segment_reduce",
-           "join_probe", "build_direct_table"]
+           "join_probe", "build_direct_table", "HAS_JAX"]

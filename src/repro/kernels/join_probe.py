@@ -44,6 +44,12 @@ def join_probe(probe_keys, table, block_n: int = 1024, interpret: bool = True):
     Returns (N,) int32 row indices into the build side, -1 when no match."""
     N = probe_keys.shape[0]
     M = table.shape[0]
+    if N == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if M == 0:
+        # empty build side: every probe misses (a zero-length VMEM block
+        # has no grid mapping, so short-circuit before pallas_call)
+        return jnp.full((N,), -1, jnp.int32)
     bn = min(block_n, N)
     pad = (-N) % bn
     if pad:

@@ -25,6 +25,12 @@ def use_pallas(on: bool = True, interpret: bool = True) -> None:
     _STATE["interpret"] = interpret
 
 
+def pallas_state() -> tuple:
+    """Current dispatch state as ``(use_pallas, interpret)`` — read by the
+    compiled execution tier to pick its probe path."""
+    return (_STATE["use_pallas"], _STATE["interpret"])
+
+
 def attention(q, k, v, causal=True, window=None, chunk=None, scale=None,
               block_q: int = 128, block_k: int = 128):
     """q (B,H,Tq,hd), k/v (B,KV,Tk,hd)."""

@@ -62,6 +62,12 @@ def segment_reduce(values, segment_ids, num_segments: int, op: str = "sum",
     """values (N,) float; segment_ids (N,) int32 in [0, num_segments).
     Returns (num_segments,) float32 aggregation."""
     N = values.shape[0]
+    if num_segments == 0:
+        return jnp.zeros((0,), jnp.float32)
+    if N == 0:
+        # every group is empty: sum/count identity is 0, and the min/max
+        # convention below maps empty groups to 0 as well
+        return jnp.zeros((num_segments,), jnp.float32)
     bn = min(block_n, N)
     pad = (-N) % bn
     if pad:

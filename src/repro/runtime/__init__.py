@@ -18,7 +18,10 @@ production-shaped workloads:
     observed iteration counts and binding-diversity fractions publish into
     the serving ExecutionContext;
   * :mod:`repro.runtime.serving` — ``ServingRuntime`` / ``serve()``: the
-    request loop wiring them together.
+    request loop wiring them together, including the compiled execution
+    tier (:mod:`repro.compiled`): a ``CompileManager`` promotes hot
+    (program, plan, context) pairs to kernel-backed columnar executables
+    after ``compile_hot_plans`` interpreted invocations.
 
 See ``examples/serve_programs.py`` for the end-to-end walkthrough and
 ``benchmarks/bench_runtime.py`` for the batch-size/throughput crossover.

@@ -177,6 +177,9 @@ class BatchResult(Sequence):
     # (group_site_key, total_lookups, distinct_bindings) per parameterized
     # site group — consumed by FeedbackController.observe_bindings
     binding_observations: List = dataclasses.field(default_factory=list)
+    # which execution tier served the batch: "interpreter" or "compiled"
+    # (the splicing interpreter with kernel-backed columnar loops)
+    tier: str = "interpreter"
 
     def __getitem__(self, i):
         return self.results[i]
@@ -244,17 +247,55 @@ def _input_diversity_fallback(binding_obs, source_program,
     return out
 
 
+def _resolve_lowered(program: Program, executable, tier: str, compiler,
+                     n_invocations: int):
+    """The :class:`~repro.compiled.lower.LoweredProgram` to run this batch
+    on, or None for the interpreter tier.
+
+    ``tier="compiled"`` forces a lowering (memoized on the executable when
+    one is given); ``"interpreter"`` forces it off; ``"auto"`` (default)
+    defers to the :class:`~repro.compiled.manager.CompileManager` — no
+    compiler means no promotion, matching pre-compiled-tier behavior."""
+    if tier not in ("auto", "interpreter", "compiled"):
+        raise ValueError(f"tier must be 'auto', 'interpreter' or 'compiled', "
+                         f"got {tier!r}")
+    if tier == "interpreter":
+        return None
+    if tier == "compiled":
+        if executable is not None:
+            return executable.lower()
+        from ..compiled.lower import lower_program
+        return lower_program(program)
+    if compiler is not None and executable is not None:
+        return compiler.lowered_for(executable, n_invocations)
+    return None
+
+
+def _make_interp(env, mode: str, lowered):
+    if lowered is None:
+        return Interpreter(env, mode)
+    from ..compiled.exec import SplicingInterpreter
+    return SplicingInterpreter(env, lowered, mode)
+
+
 def run_batch(session, program: Program,
               param_sets: Sequence[Mapping[str, object]], *,
               network: Optional[NetworkProfile] = None, mode: str = "fast",
               executable=None,
-              site_cache: Optional[SiteCache] = None) -> BatchResult:
+              site_cache: Optional[SiteCache] = None,
+              tier: str = "auto", compiler=None) -> BatchResult:
     """Execute ``program`` once per parameter set on a shared batch env.
 
     ``site_cache`` plugs in a serving-scoped
     :class:`~repro.runtime.sitecache.SiteCache` so fetches are shared
     across batches and programs; without one, a private per-batch cache
-    preserves the classic one-fetch-per-site-per-batch behavior."""
+    preserves the classic one-fetch-per-site-per-batch behavior.
+
+    ``tier`` selects the execution tier: ``"auto"`` (compiled when the
+    ``compiler`` — a :class:`~repro.compiled.manager.CompileManager` — says
+    the pair is hot), ``"compiled"`` (force), ``"interpreter"`` (force
+    off). Compiled batches are bit-identical to interpreted ones — same
+    outputs, same simulated clock — only wall time differs."""
     from ..api.cache import program_write_tables as _write_tables
     from ..api.session import ExecutionResult
 
@@ -273,6 +314,17 @@ def run_batch(session, program: Program,
     # executed (rewritten) program may have compiled them away entirely
     source = getattr(executable, "source", None) or program
 
+    lowered = _resolve_lowered(program, executable, tier, compiler,
+                               len(param_sets))
+    tier_used = "interpreter" if lowered is None else "compiled"
+    if lowered is not None:
+        # run the lowering's OWN program tree: compiled-loop bindings are by
+        # region identity, and the lowering was built from a program with
+        # this exact fingerprint
+        program = lowered.program
+        session.compiled_executions = getattr(
+            session, "compiled_executions", 0) + len(param_sets)
+
     if program_has_updates(program):
         # correctness first: a mutating program may change what later
         # invocations should observe, so each one gets an isolated env —
@@ -287,7 +339,7 @@ def run_batch(session, program: Program,
                                  network or session.catalog.network,
                                  c_z=session.catalog.c_z, site_cache=cache,
                                  write_set=write_set)
-            outputs = Interpreter(env, mode).run(program, p or None)
+            outputs = _make_interp(env, mode, lowered).run(program, p or None)
             results.append(ExecutionResult(
                 outputs=outputs, simulated_s=env.clock,
                 n_queries=env.n_queries, n_round_trips=env.n_round_trips))
@@ -310,11 +362,12 @@ def run_batch(session, program: Program,
             # cache-level observations only: input diversity does not bound
             # a mutating program's binding sequences (they may depend on
             # rows earlier invocations wrote)
-            binding_observations=_merge_binding_logs(envs))
+            binding_observations=_merge_binding_logs(envs),
+            tier=tier_used)
 
     env = BatchClientEnv(session.db, network or session.catalog.network,
                          c_z=session.catalog.c_z, site_cache=cache)
-    interp = Interpreter(env, mode)
+    interp = _make_interp(env, mode, lowered)
     results = []
     clock0, q0, rt0 = 0.0, 0, 0
     for p in param_sets:
@@ -335,4 +388,5 @@ def run_batch(session, program: Program,
                        observations=list(env.observations),
                        iteration_observations=list(env.iteration_log),
                        binding_observations=_input_diversity_fallback(
-                           _merge_binding_logs([env]), source, param_sets))
+                           _merge_binding_logs([env]), source, param_sets),
+                       tier=tier_used)

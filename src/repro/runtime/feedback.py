@@ -114,6 +114,11 @@ class FeedbackController:
         self._binding_sites: Dict[str, List[float]] = {}
         self._published_bindings: Dict[str, float] = {}
         self.binding_publishes = 0
+        # anti-regression plan-swap guard (validate_swap)
+        self.swap_checks = 0
+        self.swaps_accepted = 0
+        self.swaps_rejected = 0
+        self.swap_log: List[Dict[str, object]] = []
 
     # ------------------------------------------------------------- observing
     def _estimated_cost_s(self, q) -> float:
@@ -228,6 +233,62 @@ class FeedbackController:
                                site_wall_s=wall,
                                bindings=dict(self._published_bindings))
 
+    # ----------------------------------------------------- plan-swap guarding
+    def _replay_cost_s(self, program, bindings) -> float:
+        """Simulated cost of ``program`` over ``bindings`` replayed BATCHED
+        (one shared env, like the serving path runs it): a serving-context
+        plan's win comes from cross-invocation amortization — prefetch and
+        site-cache reuse pay off across a batch, not per invocation — so a
+        one-shot replay would systematically mis-rank it."""
+        from ..core.regions import Interpreter
+        from .batch import BatchClientEnv
+        env = BatchClientEnv(self.session.db, self.session.catalog.network,
+                             c_z=self.session.catalog.c_z)
+        interp = Interpreter(env, "fast")
+        for p in bindings:
+            interp.run(program, dict(p) or None)
+        return env.clock
+
+    def validate_swap(self, old_exe, new_exe, bindings) -> bool:
+        """Anti-regression guard: before a drift-triggered recompile replaces
+        a running plan, replay the last observed bindings against the old
+        and the new plan and keep the OLD one unless the new is actually at
+        least as cheap on the workload just served. Cost estimates triggered
+        the recompile; real executions decide the swap.
+
+        Accepts without replay when there is nothing to replay against, or
+        when either program mutates tables (replaying writes against the
+        live database would corrupt it). Returns True to swap."""
+        from .batch import program_has_updates
+        self.swap_checks += 1
+        bindings = list(bindings)
+        old_s = new_s = None
+        if not bindings or program_has_updates(old_exe.program) \
+                or program_has_updates(new_exe.program):
+            accept = True
+        else:
+            old_s = self._replay_cost_s(old_exe.program, bindings)
+            new_s = self._replay_cost_s(new_exe.program, bindings)
+            # epsilon-tolerant: a bit-identical replan must never be
+            # rejected over float noise
+            accept = new_s <= old_s * (1.0 + 1e-6)
+        if accept:
+            self.swaps_accepted += 1
+            self.session.plan_swaps_accepted = getattr(
+                self.session, "plan_swaps_accepted", 0) + 1
+        else:
+            self.swaps_rejected += 1
+            self.session.plan_swaps_rejected = getattr(
+                self.session, "plan_swaps_rejected", 0) + 1
+        self.swap_log.append({
+            "program": getattr(old_exe.source, "name", "?"),
+            "accepted": accept,
+            "replayed": len(bindings) if old_s is not None else 0,
+            "old_replay_s": old_s,
+            "new_replay_s": new_s,
+        })
+        return accept
+
     # -------------------------------------------------------------- reacting
     def refresh(self, tables: Sequence[str]) -> None:
         """Re-analyze the drifted tables only: their stats versions bump, so
@@ -254,6 +315,10 @@ class FeedbackController:
                                      "published": self._published_bindings.get(site)}
                               for site, (n, tot) in self._binding_sites.items()},
             "binding_publishes": self.binding_publishes,
+            "swap_checks": self.swap_checks,
+            "swaps_accepted": self.swaps_accepted,
+            "swaps_rejected": self.swaps_rejected,
+            "swaps": list(self.swap_log),
             "sites": {sql: {"n": int(n), "avg_rows": rows / max(n, 1),
                             "wall_s": wall}
                       for sql, (n, rows, wall) in self._sites.items()},

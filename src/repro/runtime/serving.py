@@ -47,9 +47,10 @@ The module-level :func:`serve` is the one-call convenience wrapper used by
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from ..api.cache import program_tables
+from ..api.cache import program_fingerprint, program_tables
 from ..core.context import ExecutionContext
 from ..core.regions import Program
 from .feedback import FeedbackController
@@ -66,9 +67,15 @@ class ServingRuntime:
                  context: Optional[ExecutionContext] = None,
                  site_cache: Optional[SiteCache] = None,
                  site_cache_ttl_s: Optional[float] = None,
-                 site_cache_entries: int = 4096):
+                 site_cache_entries: int = 4096,
+                 site_cache_max_bytes: Optional[int] = None,
+                 compile_hot_plans: Optional[int] = None,
+                 compile_backend: Optional[str] = None,
+                 replay_window: int = 8):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if replay_window < 0:
+            raise ValueError("replay_window must be >= 0")
         self.session = session
         if store is not None:
             from .store import PlanStore
@@ -77,7 +84,8 @@ class ServingRuntime:
         # the serving-scoped shared site cache: one fetch per identical
         # query site per stats epoch, across batches AND programs
         self.site_cache = site_cache if site_cache is not None else \
-            SiteCache(ttl_s=site_cache_ttl_s, max_entries=site_cache_entries)
+            SiteCache(ttl_s=site_cache_ttl_s, max_entries=site_cache_entries,
+                      max_bytes=site_cache_max_bytes)
         # the base serving context; observed stats are layered onto it as
         # the feedback controller publishes them
         self._base_context = context if context is not None else \
@@ -86,13 +94,29 @@ class ServingRuntime:
             FeedbackController(session, drift_threshold,
                                cost_drift_threshold=cost_drift_threshold)
             if feedback else None)
+        # compiled execution tier: promote hot (program, plan, context)
+        # pairs after `compile_hot_plans` interpreted invocations (argument
+        # overrides the session config's knob; None/0 = tier off)
+        threshold = compile_hot_plans if compile_hot_plans is not None \
+            else getattr(session.config, "compile_hot_plans", None)
+        if threshold:
+            from ..compiled.manager import CompileManager
+            self.compiler = CompileManager(session, threshold=threshold,
+                                           backend=compile_backend)
+        else:
+            self.compiler = None
         self._programs: Dict[str, Program] = {}
         self._executables: Dict[str, object] = {}
+        # last-K observed bindings per program — the anti-regression guard's
+        # replay workload when a recompile proposes a different plan
+        self.replay_window = replay_window
+        self._recent: Dict[str, deque] = {}
         # telemetry
         self.requests_served = 0
         self.batches_run = 0
         self.recompiles = 0
         self.context_recompiles = 0
+        self.swaps_rejected = 0
         self.simulated_s = 0.0
         self.n_round_trips = 0
 
@@ -141,8 +165,13 @@ class ServingRuntime:
             for lo in range(0, len(indices), self.batch_size):
                 chunk = indices[lo:lo + self.batch_size]
                 exe = self._executables[name]
-                batch = exe.run_batch([todo[i][1] for i in chunk],
-                                      site_cache=self.site_cache)
+                params = [todo[i][1] for i in chunk]
+                batch = exe.run_batch(params, site_cache=self.site_cache,
+                                      compiler=self.compiler)
+                if self.replay_window:
+                    recent = self._recent.setdefault(
+                        name, deque(maxlen=self.replay_window))
+                    recent.extend(dict(p) for p in params)
                 for i, result in zip(chunk, batch.results):
                     responses[i] = result
                 self.requests_served += len(chunk)
@@ -170,6 +199,11 @@ class ServingRuntime:
             # their site-cache entries are already unreachable; drop them
             # eagerly too
             self.site_cache.invalidate_tables(drifted)
+            if self.compiler is not None:
+                # same epoch discipline for compiled artifacts: drop the
+                # lowerings (and promotion heat) of plans touching the
+                # drifted tables — their replacements start cold
+                self.compiler.invalidate_tables(drifted)
             self._recompile_touching(drifted)
         if stats_moved:
             # a published iteration count or binding-diversity fraction
@@ -180,6 +214,24 @@ class ServingRuntime:
             # under this same context) hit the plan cache.
             self._recompile_for_context()
 
+    def _guarded_swap(self, name: str, new_exe) -> None:
+        """Install ``new_exe`` as the serving plan for ``name`` — unless the
+        anti-regression guard, replaying the last observed bindings against
+        both plans, finds the old plan actually cheaper on the workload just
+        served (estimates proposed the swap; real executions veto it)."""
+        old = self._executables.get(name)
+        if old is None or self.feedback is None or program_fingerprint(
+                new_exe.program) == program_fingerprint(old.program):
+            # nothing running yet, guarding disabled, or the "new" plan is
+            # the same program — no behavioral change to validate
+            self._executables[name] = new_exe
+            return
+        if self.feedback.validate_swap(old, new_exe,
+                                       list(self._recent.get(name, ()))):
+            self._executables[name] = new_exe
+        else:
+            self.swaps_rejected += 1
+
     def _recompile_touching(self, tables: Sequence[str]) -> None:
         """Recompile registered programs whose table set intersects
         ``tables``; per-table stats versions keep the others' plans hot."""
@@ -187,8 +239,8 @@ class ServingRuntime:
         ctx = self.current_context()
         for name, program in self._programs.items():
             if drifted & set(program_tables(program)):
-                self._executables[name] = self.session.compile(program,
-                                                               context=ctx)
+                self._guarded_swap(name,
+                                   self.session.compile(program, context=ctx))
                 self.recompiles += 1
 
     def _recompile_for_context(self) -> None:
@@ -201,7 +253,7 @@ class ServingRuntime:
             if not exe.from_cache:
                 self.context_recompiles += 1
                 self.recompiles += 1
-            self._executables[name] = exe
+            self._guarded_swap(name, exe)
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, object]:
@@ -213,6 +265,7 @@ class ServingRuntime:
              "round_trips": self.n_round_trips,
              "context": self.current_context().describe(),
              "programs": sorted(self._programs)}
+        t["swaps_rejected"] = self.swaps_rejected
         t.update({f"session_{k}": v for k, v in self.session.telemetry.items()})
         t.update({f"site_cache_{k}": v
                   for k, v in self.site_cache.stats().items()})
@@ -221,7 +274,11 @@ class ServingRuntime:
             fb.pop("sites", None)  # keep the summary flat
             fb.pop("iteration_sites", None)
             fb.pop("binding_sites", None)
+            fb.pop("swaps", None)
             t.update({f"feedback_{k}": v for k, v in fb.items()})
+        if self.compiler is not None:
+            t.update({f"compiled_{k}": v
+                      for k, v in self.compiler.telemetry().items()})
         return t
 
 

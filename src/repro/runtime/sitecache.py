@@ -50,7 +50,8 @@ from typing import Dict, Optional, Tuple
 from ..core.context import param_group_key, query_site_key
 from ..relational.algebra import Query
 
-__all__ = ["SiteCache", "Uncacheable", "freeze_value", "param_key"]
+__all__ = ["SiteCache", "Uncacheable", "approx_result_bytes", "freeze_value",
+           "param_key"]
 
 # a site's distinct-binding tracking stops growing here; at the cap the
 # observed fraction is frozen (the estimate up to that point) instead of
@@ -60,6 +61,27 @@ _MAX_DISTINCT_TRACKED = 4096
 
 class Uncacheable(Exception):
     """A query binding with no faithful hashable identity."""
+
+
+def approx_result_bytes(value) -> int:
+    """Approximate resident size of one cached result, in bytes.
+
+    Tables report their wire size (nrows x row_bytes — the same number the
+    cost model charges for fetching them, so a byte budget is commensurate
+    with transfer cost); arrays their buffer size; everything else a cheap
+    structural estimate. Exactness is NOT required — the budget bounds
+    memory approximately, correctness never depends on it."""
+    wb = getattr(value, "wire_bytes", None)
+    if wb is not None:
+        return int(wb() if callable(wb) else wb)
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(value, (str, bytes, bytearray)):
+        return len(value)
+    if isinstance(value, (list, tuple, set, frozenset)):
+        return 56 + 16 * len(value)
+    return 64
 
 
 def freeze_value(v):
@@ -89,14 +111,15 @@ def param_key(params) -> Tuple:
 
 
 class _Entry:
-    __slots__ = ("value", "stamp", "era", "tables")
+    __slots__ = ("value", "stamp", "era", "tables", "nbytes")
 
     def __init__(self, value, stamp: float, era: int,
-                 tables: Tuple[str, ...]):
+                 tables: Tuple[str, ...], nbytes: int):
         self.value = value
         self.stamp = stamp
         self.era = era
         self.tables = tables
+        self.nbytes = nbytes
 
 
 class _SiteStats:
@@ -142,13 +165,28 @@ class SiteCache:
     """Serving-scoped, epoch-keyed query-result cache with TTL."""
 
     def __init__(self, ttl_s: Optional[float] = None,
-                 max_entries: int = 4096, clock=time.monotonic):
+                 max_entries: int = 4096, clock=time.monotonic,
+                 max_bytes: Optional[int] = None,
+                 entry_max_bytes: Optional[int] = None):
         if ttl_s is not None and ttl_s <= 0:
             raise ValueError("ttl_s must be > 0 (or None: no TTL)")
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError("max_bytes must be >= 1 (or None: no byte bound)")
+        if entry_max_bytes is not None and entry_max_bytes < 1:
+            raise ValueError("entry_max_bytes must be >= 1 (or None)")
         self.ttl_s = ttl_s
         self.max_entries = max_entries
+        # approximate resident-byte budget (None = entry count only); a
+        # single result above entry_max_bytes (default: a quarter of the
+        # budget) is never cached at all — one oversize value would
+        # otherwise evict the whole working set for a single reuse
+        self.max_bytes = max_bytes
+        if entry_max_bytes is None and max_bytes is not None:
+            entry_max_bytes = max(1, max_bytes // 4)
+        self.entry_max_bytes = entry_max_bytes
+        self.bytes_used = 0
         self._clock = clock
         self._entries: "OrderedDict[Tuple, _Entry]" = OrderedDict()
         self.era = 0                    # batch sequence number (new_era())
@@ -159,6 +197,7 @@ class SiteCache:
         self.expirations = 0
         self.evictions = 0
         self.invalidations = 0
+        self.oversize_bypasses = 0
         # binding-diversity observation: exact site (telemetry) and table
         # group (what the feedback controller publishes into the context)
         self._site_stats: Dict[str, _SiteStats] = {}
@@ -192,6 +231,7 @@ class SiteCache:
             return None
         if self.ttl_s is not None and self._clock() - entry.stamp > self.ttl_s:
             del self._entries[key]
+            self.bytes_used -= entry.nbytes
             self.expirations += 1
             self.misses += 1
             return None
@@ -208,11 +248,25 @@ class SiteCache:
         return None if found is None else found[0]
 
     def put(self, key: Tuple, value, tables: Tuple[str, ...]) -> None:
+        nbytes = approx_result_bytes(value) if self.max_bytes is not None \
+            else 0
+        if self.entry_max_bytes is not None and nbytes > self.entry_max_bytes:
+            # bypass: caching this result would evict much of the working
+            # set for at most one reuse; skipping it only costs a re-fetch
+            self.oversize_bypasses += 1
+            return
+        old = self._entries.get(key)
+        if old is not None:
+            self.bytes_used -= old.nbytes
         self._entries[key] = _Entry(value, self._clock(), self.era,
-                                    tuple(tables))
+                                    tuple(tables), nbytes)
         self._entries.move_to_end(key)
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
+        self.bytes_used += nbytes
+        while len(self._entries) > self.max_entries or (
+                self.max_bytes is not None
+                and self.bytes_used > self.max_bytes and self._entries):
+            _, dropped = self._entries.popitem(last=False)
+            self.bytes_used -= dropped.nbytes
             self.evictions += 1
 
     # --------------------------------------------------------- invalidation
@@ -223,12 +277,14 @@ class SiteCache:
         drop = set(tables)
         stale = [k for k, e in self._entries.items() if drop & set(e.tables)]
         for k in stale:
+            self.bytes_used -= self._entries[k].nbytes
             del self._entries[k]
         self.invalidations += len(stale)
         return len(stale)
 
     def clear(self) -> None:
         self._entries.clear()
+        self.bytes_used = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -272,6 +328,9 @@ class SiteCache:
             "expirations": self.expirations,
             "evictions": self.evictions,
             "invalidations": self.invalidations,
+            "bytes_used": self.bytes_used,
+            "max_bytes": self.max_bytes,
+            "oversize_bypasses": self.oversize_bypasses,
             "param_sites": len(self._site_stats),
         }
 

@@ -47,9 +47,17 @@ import pickle
 import tempfile
 from typing import Dict, Optional
 
-__all__ = ["PlanStore"]
+__all__ = ["PlanStore", "content_address"]
 
 _FORMAT_VERSION = 1
+
+
+def content_address(ident) -> str:
+    """Stable short content hash of a repr-stable identity tuple — the
+    addressing scheme shared by the plan store and the compiled-artifact
+    cache (:mod:`repro.compiled.manager`), so the two tiers' artifacts can
+    be correlated in telemetry and on disk."""
+    return hashlib.sha256(repr(ident).encode()).hexdigest()[:32]
 
 
 class _Corrupt:
@@ -85,7 +93,7 @@ class PlanStore:
         different artifacts and coexist in the store."""
         ident = (key.program_fp, key.catalog_key, key.config_key,
                  getattr(key, "context_key", ()))
-        return hashlib.sha256(repr(ident).encode()).hexdigest()[:32]
+        return content_address(ident)
 
     def _path(self, lk: str) -> str:
         return os.path.join(self.root, f"{lk}.plan")

@@ -461,3 +461,83 @@ class TestBindingObservations:
         session = paper_session(make_orders_customer_db(100, 50))
         batch = session.compile(make_p0()).run_batch([{}] * 3)
         assert batch.binding_observations == []
+
+
+# --------------------------------------------------------------------------
+# Byte-budgeted eviction: approximate result sizes, LRU byte bound,
+# oversize bypass
+# --------------------------------------------------------------------------
+
+class TestByteBudget:
+    def _key(self, i):
+        return (0, f"q{i}", (), ())
+
+    def test_bytes_accounted_and_evicted_lru(self):
+        from repro.runtime.sitecache import approx_result_bytes
+        cache = SiteCache(max_bytes=1000, entry_max_bytes=1000)
+        v = np.zeros(50, np.float64)             # 400 bytes via .nbytes
+        assert approx_result_bytes(v) == 400
+        cache.put(self._key(0), v, ("t",))
+        cache.put(self._key(1), v, ("t",))
+        assert cache.bytes_used == 800 and len(cache) == 2
+        # third insert exceeds 1000: the LRU entry (key 0) is evicted
+        cache.put(self._key(2), v, ("t",))
+        assert cache.bytes_used == 800 and len(cache) == 2
+        assert cache.get(self._key(0)) is None
+        assert cache.get(self._key(2)) is not None
+        assert cache.evictions == 1
+        assert cache.stats()["bytes_used"] == 800
+        assert cache.stats()["max_bytes"] == 1000
+
+    def test_table_results_use_wire_bytes(self):
+        from repro.runtime.sitecache import approx_result_bytes
+        t = make_wilos_db(100, ratio=10).table("tasks")
+        assert approx_result_bytes(t) == t.wire_bytes
+
+    def test_oversize_result_bypasses_cache(self):
+        cache = SiteCache(max_bytes=1000)        # entry cap defaults to 250
+        big = np.zeros(100, np.float64)          # 800 bytes > 250
+        cache.put(self._key(0), big, ("t",))
+        assert len(cache) == 0 and cache.bytes_used == 0
+        assert cache.oversize_bypasses == 1
+        assert cache.stats()["oversize_bypasses"] == 1
+        small = np.zeros(10, np.float64)         # 80 bytes: cached
+        cache.put(self._key(1), small, ("t",))
+        assert len(cache) == 1 and cache.bytes_used == 80
+
+    def test_replace_and_invalidate_keep_accounting(self):
+        cache = SiteCache(max_bytes=10_000)
+        cache.put(self._key(0), np.zeros(10, np.float64), ("a",))
+        cache.put(self._key(0), np.zeros(20, np.float64), ("a",))  # replace
+        cache.put(self._key(1), np.zeros(10, np.float64), ("b",))
+        assert cache.bytes_used == 160 + 80
+        cache.invalidate_tables(["a"])
+        assert cache.bytes_used == 80
+        cache.clear()
+        assert cache.bytes_used == 0
+
+    def test_ttl_expiry_releases_bytes(self):
+        clk = FakeClock()
+        cache = SiteCache(ttl_s=5.0, max_bytes=10_000, clock=clk)
+        cache.put(self._key(0), np.zeros(10, np.float64), ("t",))
+        assert cache.bytes_used == 80
+        clk.now = 6.0
+        assert cache.get(self._key(0)) is None
+        assert cache.bytes_used == 0
+
+    def test_no_budget_means_no_sizing(self):
+        cache = SiteCache()                      # default: entry bound only
+        cache.put(self._key(0), np.zeros(1000, np.float64), ("t",))
+        assert cache.get(self._key(0)) is not None
+        assert cache.bytes_used == 0             # sizing skipped entirely
+
+    def test_serving_runtime_threads_budget(self):
+        session = paper_session(make_orders_customer_db(100, 20), FAST_LOCAL)
+        rt = ServingRuntime(session, batch_size=4,
+                            site_cache_max_bytes=1 << 20)
+        assert rt.site_cache.max_bytes == 1 << 20
+        rt.register(make_p0())
+        rt.serve([("P0", {})] * 8)
+        stats = rt.site_cache.stats()
+        assert stats["bytes_used"] > 0
+        assert stats["bytes_used"] <= 1 << 20
