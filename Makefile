@@ -2,7 +2,7 @@ PYTHON ?= python
 PYTHONPATH := src
 
 .PHONY: test test-fast lint bench-smoke bench bench-batch bench-serving \
-	bench-compiled examples
+	bench-compiled bench-obs examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -45,6 +45,14 @@ bench-serving: bench-batch
 # run emits it too — this target runs ONLY that section)
 bench-compiled:
 	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=compiled \
+		$(PYTHON) -m benchmarks.run bench_runtime
+
+# observability overhead: no-op tracer vs recording tracer on the P0
+# batch-64 serving loop (bit-identical outputs/simulated clock either
+# way); the `obs` section lands in BENCH_runtime.json and the traced
+# run's span tree in BENCH_trace_sample.jsonl (uploaded as a CI artifact)
+bench-obs:
+	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=obs \
 		$(PYTHON) -m benchmarks.run bench_runtime
 
 examples:

@@ -29,6 +29,13 @@ full run) records interpreter-vs-compiled-tier wall throughput on the
 P0-style loop-heavy workload at batch 64 plus the one-time lowering
 latency; ``REPRO_BENCH_ONLY=compiled`` runs just that section.
 
+The ``obs`` section (``make bench-obs``; ``REPRO_BENCH_ONLY=obs`` runs
+just it) measures the observability layer's wall overhead on the P0
+batch-64 serving loop: the default no-op tracer vs a recording
+:class:`~repro.obs.trace.Tracer`, asserting bit-identical outputs and
+simulated clock either way, and exports a sample span tree to
+``BENCH_trace_sample.jsonl`` (uploaded as a CI artifact).
+
 ``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
 to ``BENCH_runtime.json`` (uploaded as a CI workflow artifact).
 """
@@ -130,16 +137,98 @@ def _bench_compiled(emit, smoke):
     }
 
 
+def _bench_obs(emit, smoke):
+    """Tracing + metrics wall overhead on the serving loop (``make
+    bench-obs``).
+
+    The same P0 batch stream served twice from identical cold starts:
+    once with the default no-op tracer (the production configuration —
+    one ``tracer.enabled`` branch per instrumentation point) and once
+    with a recording :class:`~repro.obs.trace.Tracer`. Outputs and the
+    simulated clock must be bit-identical; the wall-clock delta is the
+    cost of observing. The traced run's span tree is exported to
+    ``BENCH_trace_sample.jsonl``."""
+    from repro.obs.trace import Tracer
+    bs = 16 if smoke else 64
+    n_rounds = 2 if smoke else 8
+    n_trials = 2 if smoke else 7
+    n_orders, n_cust = (300, 600) if smoke else (4000, 8000)
+
+    def serve_stream(tracer):
+        session = _paper_session(make_orders_customer_db(n_orders, n_cust),
+                                 SLOW_REMOTE)
+        if tracer is not None:
+            session.tracer = tracer
+        rt = ServingRuntime(session, batch_size=bs, drift_threshold=1e9)
+        rt.register(make_p0())
+        rt.serve([("P0", {})] * bs)  # warm plan, site cache, code paths
+        outs = []
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            outs.extend(rt.serve([("P0", {})] * bs))
+        wall = time.perf_counter() - t0
+        return wall, [r.outputs for r in outs], rt.simulated_s, rt
+
+    # interleave trials, ALTERNATING which config runs first (CPU boost
+    # decay systematically favors whichever config runs first in a pair),
+    # and keep the best wall per config — the overhead fraction is a ratio
+    # of small numbers, so scheduler noise dominates a single measurement
+    noop_wall = traced_wall = float("inf")
+    tracer = None
+    for trial in range(n_trials):
+        order = ("noop", "traced") if trial % 2 == 0 else ("traced", "noop")
+        for which in order:
+            if which == "noop":
+                w, noop_out, noop_sim, _rt = serve_stream(None)
+                noop_wall = min(noop_wall, w)
+            else:
+                tracer = Tracer()
+                w, traced_out, traced_sim, rt_traced = serve_stream(tracer)
+                traced_wall = min(traced_wall, w)
+
+    identical = noop_out == traced_out and noop_sim == traced_sim
+    overhead = traced_wall / noop_wall - 1.0
+    n_spans = tracer.export_jsonl("BENCH_trace_sample.jsonl")
+    snap = rt_traced.metrics_snapshot()
+
+    emit("bench_runtime/obs/P0_noop_tracer", noop_wall * 1e6,
+         f"wall_rps={bs * n_rounds / noop_wall:.1f}")
+    emit("bench_runtime/obs/P0_traced", traced_wall * 1e6,
+         f"wall_rps={bs * n_rounds / traced_wall:.1f};"
+         f"overhead={overhead * 100:+.1f}%;identical={identical}")
+    emit("bench_runtime/obs/trace_export", 0,
+         f"spans={n_spans};file=BENCH_trace_sample.jsonl")
+    return {
+        "workload": "P0",
+        "batch_size": bs,
+        "rounds": n_rounds,
+        "noop_wall_us": noop_wall * 1e6,
+        "traced_wall_us": traced_wall * 1e6,
+        "traced_overhead_frac": overhead,
+        "bit_identical": identical,
+        "spans_exported": n_spans,
+        "trace_file": "BENCH_trace_sample.jsonl",
+        "metrics_keys": len(snap),
+    }
+
+
 def main(emit):
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    only = os.environ.get("REPRO_BENCH_ONLY")
     n_orders, n_cust = (300, 600) if smoke else (4000, 8000)
     n_tasks = 300 if smoke else 4000
 
     traj = {"batch_sizes": list(BATCH_SIZES), "workloads": {}}
 
     # ------------------------------------------ compiled tier vs interpreter
-    traj["compiled"] = _bench_compiled(emit, smoke)
-    if os.environ.get("REPRO_BENCH_ONLY") == "compiled":
+    if only != "obs":
+        traj["compiled"] = _bench_compiled(emit, smoke)
+        if only == "compiled":
+            return traj
+
+    # ----------------------------------- observability overhead + trace dump
+    traj["obs"] = _bench_obs(emit, smoke)
+    if only == "obs":
         return traj
 
     # ---------------------------------------------------------- P0 serving

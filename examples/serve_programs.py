@@ -29,6 +29,11 @@ Three acts:
      is interpreted (heat below threshold), the pair goes hot mid-stream,
      and every later batch runs the kernel-backed columnar executable —
      same outputs, same simulated clock, less wall time per batch.
+  5. **Observability.** ``rt.explain("P0")`` renders the drift-flipped
+     plan with its rewrite provenance, estimated-vs-observed counts and
+     q-errors, cache/binding status, and any bad-plan signals still
+     present; ``rt.triage()`` ranks the whole fleet by traffic-weighted
+     estimated win so re-optimization effort follows the requests.
 """
 
 import sys
@@ -192,6 +197,20 @@ def main():
           f"{ct['interpreted_batches']} interpreted / "
           f"{ct['compiled_batches']} compiled batch(es), "
           f"backend={ct['backend']}")
+
+    # ---- act 5: observability — EXPLAIN the flipped plan, triage the fleet
+    # the drift-era runtime (act 3) has served real traffic: its feedback
+    # controller holds observed row/iteration counts, so EXPLAIN can show
+    # estimate-vs-observed q-errors per site on the plan the swap guard
+    # just accepted
+    print(f"\n=== EXPLAIN the drift-flipped P0 plan ===")
+    print(rt.explain("P0"))
+
+    from repro.obs import render_triage
+    rows = rt.triage()
+    print(f"\n=== fleet triage (share x drift x severity) ===")
+    print(render_triage(rows))
+    print(f"top: {rows[0].describe()}")
 
 
 if __name__ == "__main__":

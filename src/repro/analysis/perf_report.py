@@ -6,12 +6,9 @@ import glob
 import json
 import os
 
+from ..obs.render import fmt_seconds as _fmt
+
 __all__ = ["perf_section"]
-
-
-def _fmt(s):
-    return f"{s:.2f}s" if s >= 0.1 else (f"{s*1e3:.1f}ms" if s >= 1e-4
-                                         else f"{s*1e6:.0f}µs")
 
 
 def perf_section(out_dir: str = "reports/perf") -> str:

@@ -7,6 +7,8 @@ import json
 import os
 from typing import List
 
+from ..obs.render import fmt_seconds as _fmt_t
+
 __all__ = ["roofline_table", "dryrun_summary"]
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
@@ -18,16 +20,6 @@ def load(out_dir: str = "reports/dryrun") -> List[dict]:
         with open(p) as f:
             cells.append(json.load(f))
     return cells
-
-
-def _fmt_t(s):
-    if s is None:
-        return "—"
-    if s >= 1.0:
-        return f"{s:.2f}s"
-    if s >= 1e-3:
-        return f"{s*1e3:.1f}ms"
-    return f"{s*1e6:.0f}µs"
 
 
 def roofline_table(out_dir: str = "reports/dryrun", mesh: str = "16x16") -> str:

@@ -30,6 +30,8 @@ from ..core.context import ExecutionContext, ONE_SHOT
 from ..core.cost import CostCatalog
 from ..core.regions import Interpreter, Program
 from ..core.search import OptimizationResult, run_search
+from ..obs.metrics import MetricsRegistry, registry_counter
+from ..obs.trace import NOOP_TRACER
 from ..relational.database import ClientEnv, DatabaseServer, NetworkProfile, SLOW_REMOTE
 from .cache import (PlanCache, PlanCacheKey, program_fingerprint,
                     program_sites, program_tables)
@@ -58,6 +60,14 @@ class PlanReport:
     # ExecutionContext fingerprint the plan was costed under (telemetry:
     # serving plans are distinguishable from one-shot plans at a glance)
     context_fp: Tuple = ONE_SHOT.fingerprint()
+    # which execution tier last served this plan ("interpreter"|"compiled")
+    tier: str = "interpreter"
+    # anti-regression swap-guard outcome for the recompile that produced
+    # this plan (FeedbackController.validate_swap): was it checked, was the
+    # swap accepted, how many bindings were replayed
+    swap_checked: bool = False
+    swap_accepted: Optional[bool] = None
+    swap_replayed: int = 0
 
     @property
     def binding_diversity(self) -> Dict[str, float]:
@@ -116,6 +126,11 @@ class Executable:
         self.context = context if context is not None else ONE_SHOT
         self.n_runs = 0
         self._lowered: Dict[str, object] = {}  # backend -> LoweredProgram
+        # which tier served the most recent run_batch (set by runtime.batch)
+        self.last_tier = "interpreter"
+        # swap-guard verdict for the recompile that produced this executable
+        # (set by FeedbackController.validate_swap when it judged this plan)
+        self.swap_outcome: Optional[Dict[str, object]] = None
 
     # ------------------------------------------------------------ plan view
     @property
@@ -133,6 +148,7 @@ class Executable:
 
     @property
     def report(self) -> PlanReport:
+        swap = self.swap_outcome or {}
         return PlanReport(
             domain="program", name=self.source.name, choice=self.result.plan,
             est_cost_s=self.result.est_cost,
@@ -141,13 +157,37 @@ class Executable:
             opt_time_s=self.result.opt_time_s, artifact=self.result.program,
             from_cache=self.from_cache,
             context_fp=self.context.fingerprint(
-                sites=program_sites(self.source)))
+                sites=program_sites(self.source)),
+            tier=self.last_tier,
+            swap_checked=bool(swap.get("checked", False)),
+            swap_accepted=swap.get("accepted"),
+            swap_replayed=int(swap.get("replayed", 0)))
 
     def describe(self) -> str:
         body = repr(self.program.body)
         kind = ("prefetch" if "prefetch" in body
                 else "join" if "JOIN" in body else "original-shape")
         return f"{self.report.describe()} -> {kind}"
+
+    def explain(self, *, feedback=None, site_cache=None,
+                compiler=None) -> str:
+        """EXPLAIN-style rendering of the winning plan: the region tree
+        annotated per site with estimated cost, estimated-vs-observed
+        counts (q-error), cache/tier status, and which rules derived it
+        (rewrite provenance). Pass the serving runtime's ``feedback`` /
+        ``site_cache`` / ``compiler`` to annotate with observed serving
+        statistics (``ServingRuntime.explain(name)`` does)."""
+        from ..obs.explain import explain_plan
+        return explain_plan(self, feedback=feedback, site_cache=site_cache,
+                            compiler=compiler)
+
+    def scan(self, *, feedback=None, stats=None):
+        """Run the bad-plan-pattern catalog over the REWRITTEN program
+        (:func:`repro.obs.signals.scan_plan`); returns the list of
+        :class:`~repro.obs.signals.Signal`\\ s still present after the
+        optimizer had its say."""
+        from ..obs.signals import scan_plan
+        return scan_plan(self, feedback=feedback, stats=stats)
 
     # ------------------------------------------------------------ execution
     def run(self, *, network: Optional[NetworkProfile] = None,
@@ -217,13 +257,29 @@ class Executable:
 class CobraSession:
     """Compile-once / execute-many frontend over one simulated database."""
 
+    # telemetry counters live in the session's MetricsRegistry; these
+    # descriptors keep `session.memo_runs += 1`-style call sites (and the
+    # telemetry dict shape) working unchanged as backwards-compatible views
+    compile_calls = registry_counter()
+    memo_runs = registry_counter()      # actual memo build+saturate+search passes
+    executions = registry_counter()
+    compiled_executions = registry_counter()  # served by the compiled tier
+    # feedback plan-swap guard outcomes (runtime.feedback.validate_swap)
+    plan_swaps_accepted = registry_counter()
+    plan_swaps_rejected = registry_counter()
+
     def __init__(self, db: DatabaseServer,
                  catalog: Optional[CostCatalog] = None,
                  config: Optional[OptimizerConfig] = None,
                  plan_cache_entries: int = 256,
                  plan_store=None,
-                 context: Optional[ExecutionContext] = None):
+                 context: Optional[ExecutionContext] = None,
+                 tracer=None):
         self.db = db
+        # observability: the registry must exist before the first counter
+        # write below (the descriptors route attribute writes through it)
+        self.metrics = MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NOOP_TRACER
         self.catalog = catalog if catalog is not None else CostCatalog(SLOW_REMOTE)
         self.config = config if config is not None else OptimizerConfig()
         # default ExecutionContext compiles are costed for (one-shot unless
@@ -236,12 +292,11 @@ class CobraSession:
             plan_store = PlanStore.coerce(plan_store)
         self.plan_store = plan_store
         self._step_cache: Dict[Tuple, PlanReport] = {}
-        # telemetry counters
+        # zero the registry-backed telemetry counters (class descriptors)
         self.compile_calls = 0
-        self.memo_runs = 0          # actual memo build+saturate+search passes
+        self.memo_runs = 0
         self.executions = 0
-        self.compiled_executions = 0   # invocations served by the compiled tier
-        # feedback plan-swap guard outcomes (runtime.feedback.validate_swap)
+        self.compiled_executions = 0
         self.plan_swaps_accepted = 0
         self.plan_swaps_rejected = 0
 
@@ -312,12 +367,18 @@ class CobraSession:
                                       context=ctx)
 
         rule_objs = list(rules) if rules is not None else cfg.resolve_rules()
-        result = run_search(program, self.db, cat, choice=cfg.choice,
-                            rules=rule_objs, topk=cfg.topk,
-                            max_combos=cfg.max_combos,
-                            max_rounds=cfg.max_rounds,
-                            context=ctx, cost_model=cfg.cost_model)
+        with self.tracer.span("compile", program=program.name) as sp:
+            result = run_search(program, self.db, cat, choice=cfg.choice,
+                                rules=rule_objs, topk=cfg.topk,
+                                max_combos=cfg.max_combos,
+                                max_rounds=cfg.max_rounds,
+                                context=ctx, cost_model=cfg.cost_model,
+                                tracer=self.tracer)
+            if self.tracer.enabled:
+                sp.attrs["est_cost_s"] = result.est_cost
+                sp.attrs["alternatives"] = result.alternatives
         self.memo_runs += 1
+        self.metrics.observe("compile_opt_time_s", result.opt_time_s)
         if cfg.use_plan_cache:
             if self.plan_store is not None:
                 # first-writer-wins: if another session compiled the same
@@ -474,6 +535,10 @@ class CobraSession:
 
     @property
     def telemetry(self) -> Dict[str, int]:
+        # a backwards-compatible view over the metrics registry: the counter
+        # reads go through the registry_counter descriptors, and the
+        # cache/store stats are mirrored into the registry as gauges so
+        # `session.metrics.snapshot()` carries the full picture
         t = {"compile_calls": self.compile_calls,
              "memo_runs": self.memo_runs,
              "executions": self.executions,
@@ -481,8 +546,14 @@ class CobraSession:
              "plan_swaps_accepted": self.plan_swaps_accepted,
              "plan_swaps_rejected": self.plan_swaps_rejected,
              "stats_version": self.db.stats_version}
-        t.update({f"cache_{k}": v for k, v in self.plan_cache.stats().items()})
+        self.metrics.gauge("stats_version", self.db.stats_version)
+        cache_stats = {f"cache_{k}": v
+                       for k, v in self.plan_cache.stats().items()}
+        t.update(cache_stats)
+        self.metrics.ingest(cache_stats)
         if self.plan_store is not None:
-            t.update({f"store_{k}": v
-                      for k, v in self.plan_store.stats().items()})
+            store_stats = {f"store_{k}": v
+                           for k, v in self.plan_store.stats().items()}
+            t.update(store_stats)
+            self.metrics.ingest(store_stats)
         return t

@@ -298,6 +298,12 @@ class SplicingInterpreter(Interpreter):
                                    hooks=cl.hooks)
                     cl.executions += 1
                     self.lowered.columnar_execs += 1
+                    tracer = getattr(self.env, "tracer", None)
+                    if tracer is not None and tracer.enabled:
+                        tracer.event(
+                            "kernel-invoke", sim=self.env.clock,
+                            loop_var=r.var, rows=src.nrows,
+                            backend=self.lowered.backend)
                     return
                 # run-time fallback (empty or non-table source): the exact
                 # path also records collection-loop iteration observations

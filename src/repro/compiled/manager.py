@@ -31,6 +31,8 @@ from typing import Dict, FrozenSet, Optional, Tuple
 
 from ..api.cache import (ArtifactCache, program_fingerprint, program_sites,
                          program_tables)
+from ..obs.metrics import MetricsRegistry, registry_counter
+from ..obs.trace import NOOP_TRACER
 from ..runtime.store import content_address
 from .lower import LoweredProgram, lower_program, resolve_backend
 
@@ -55,18 +57,27 @@ class CompiledArtifact:
 class CompileManager:
     """Promote hot (program, plan, context) pairs to compiled executables."""
 
+    # registry-backed telemetry counters (repro.obs.metrics)
+    compiles = registry_counter()
+    noop_lowerings = registry_counter()  # plans lowered to 0 columnar loops
+    compile_s_total = registry_counter()
+    compiled_batches = registry_counter()
+    interpreted_batches = registry_counter()
+
     def __init__(self, session, threshold: int = DEFAULT_COMPILE_THRESHOLD,
                  backend: Optional[str] = None, max_artifacts: int = 64):
         if threshold < 1:
             raise ValueError("threshold must be >= 1")
         self.session = session
+        # must exist before the registry_counter descriptors are written
+        self.metrics = MetricsRegistry()
         self.threshold = int(threshold)
         self.backend = resolve_backend(backend)
         self.artifacts = ArtifactCache(max_artifacts)
         self._heat: Dict[Tuple, int] = {}
-        # telemetry
+        # zero the registry-backed counters
         self.compiles = 0
-        self.noop_lowerings = 0       # plans lowered to zero columnar loops
+        self.noop_lowerings = 0
         self.compile_s_total = 0.0
         self.compiled_batches = 0
         self.interpreted_batches = 0
@@ -98,8 +109,11 @@ class CompileManager:
             if heat < self.threshold:
                 self.interpreted_batches += 1
                 return None
+            tracer = getattr(self.session, "tracer", NOOP_TRACER)
             t0 = time.perf_counter()
-            lowered = lower_program(exe.program, self.backend)
+            with tracer.span("lowering", program=exe.program.name,
+                             backend=self.backend):
+                lowered = lower_program(exe.program, self.backend)
             dt = time.perf_counter() - t0
             if lowered.n_columnar == 0:
                 # nothing data-parallel to run: remember the verdict so the

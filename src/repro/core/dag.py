@@ -55,6 +55,12 @@ class Memo:
         self._next_and = itertools.count()
         self.merges = 0
         self.duplicates = 0
+        # rewrite provenance: and_id -> (rule name, source and_id) for every
+        # AND-node a rule created (build_memo originals have no entry), and
+        # per-rule alternative counts — recorded by expand(), consumed by
+        # search.run_search to report which rules produced the winning plan
+        self.provenance: Dict[AndId, Tuple[str, AndId]] = {}
+        self.rule_hits: Dict[str, int] = {}
 
     # -------------------------------------------------------------- groups
     def find(self, g: GroupId) -> GroupId:
@@ -149,16 +155,21 @@ class Rule:
         return self.fn(memo, and_id, ctx)
 
 
-def expand(memo: Memo, rules: Sequence[Rule], ctx, max_rounds: int = 64) -> Dict[str, int]:
+def expand(memo: Memo, rules: Sequence[Rule], ctx, max_rounds: int = 64,
+           tracer=None) -> Dict[str, int]:
     """Saturate: apply every rule to every matching AND-node until fixpoint.
 
     Each (and_id, rule) fires at most once — with hash-consing this guarantees
-    termination even for cyclic rule sets (Sec. III-A)."""
+    termination even for cyclic rule sets (Sec. III-A). Every AND-node a rule
+    creates is attributed to it in ``memo.provenance`` (AND-ids are issued
+    sequentially, so the nodes created by one ``apply`` call are exactly the
+    id range that appeared across it). ``tracer`` (an
+    :class:`repro.obs.trace.Tracer`) gets one span per saturation round."""
     fired: Set[Tuple[AndId, str]] = set()
     rounds = 0
     total_new = 0
-    while rounds < max_rounds:
-        rounds += 1
+
+    def _round() -> int:
         new = 0
         for a in list(memo._ands):
             node = memo._ands[a]
@@ -169,7 +180,24 @@ def expand(memo: Memo, rules: Sequence[Rule], ctx, max_rounds: int = 64) -> Dict
                 if tag in fired:
                     continue
                 fired.add(tag)
-                new += r.apply(memo, a, ctx)
+                n_before = len(memo._ands)
+                added = r.apply(memo, a, ctx)
+                if added:
+                    memo.rule_hits[r.name] = \
+                        memo.rule_hits.get(r.name, 0) + added
+                    for nid in range(n_before, len(memo._ands)):
+                        memo.provenance.setdefault(nid, (r.name, a))
+                new += added
+        return new
+
+    while rounds < max_rounds:
+        rounds += 1
+        if tracer is not None and tracer.enabled:
+            with tracer.span("saturate-round", round=rounds) as sp:
+                new = _round()
+                sp.attrs["new_alternatives"] = new
+        else:
+            new = _round()
         total_new += new
         if new == 0:
             break

@@ -466,28 +466,81 @@ class OptimizationResult:
     memo_stats: Dict[str, int]
     opt_time_s: float
     alternatives: int
+    # per-phase optimizer wall time (build/saturate/search/codegen) and
+    # rewrite provenance: total alternatives per rule across the whole memo,
+    # plus the ordered rule chain that derived the WINNING plan's nodes.
+    # Defaults keep plans pickled by older PlanStores loadable.
+    phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    rule_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    rules_fired: Tuple[str, ...] = ()
+
+
+def _plan_rules(plan: Plan, memo: Memo) -> Tuple[str, ...]:
+    """The rules that derived the winning plan's AND-nodes, ancestors first
+    (via the provenance chain), deduped preserving order."""
+    out: List[str] = []
+    seen_rules = set()
+
+    def chase(and_id: int) -> None:
+        seen_ids = set()
+        chain: List[str] = []
+        a = and_id
+        while a in memo.provenance and a not in seen_ids:
+            seen_ids.add(a)
+            rule, src = memo.provenance[a]
+            chain.append(rule)
+            a = src
+        for rule in reversed(chain):  # ancestors (earliest rewrites) first
+            if rule not in seen_rules:
+                seen_rules.add(rule)
+                out.append(rule)
+
+    def walk(p: Plan) -> None:
+        chase(p.and_id)
+        for c in p.children:
+            walk(c)
+
+    walk(plan)
+    return tuple(out)
 
 
 def run_search(program: Program, db, catalog: CostCatalog, *,
                choice: str = "cost", rules: Optional[Sequence] = None,
                topk: int = _TOPK, max_combos: int = _MAX_COMBOS,
                max_rounds: int = 64, context=None,
-               cost_model=None) -> OptimizationResult:
+               cost_model=None, tracer=None) -> OptimizationResult:
     """One full memo pass: build → saturate rules → search → codegen.
 
     ``context`` is an :class:`~repro.core.context.ExecutionContext` (batch
     size + observed iteration stats) the plan is costed for; ``cost_model``
     is a pluggable :class:`~repro.core.cost.CostModel`-protocol class,
-    constructed as ``cost_model(db, catalog, context)``.
+    constructed as ``cost_model(db, catalog, context)``. ``tracer`` (an
+    :class:`repro.obs.trace.Tracer`) records one span per phase and per
+    saturation round.
 
     This is the uncached engine; callers wanting compile-once/execute-many
     semantics should go through ``repro.api.CobraSession``, which fronts
     this with a stats-versioned plan cache."""
+    import contextlib
+
+    def _span(name):
+        if tracer is not None and tracer.enabled:
+            return tracer.span(name)
+        return contextlib.nullcontext()
+
+    phases: Dict[str, float] = {}
     t0 = time.perf_counter()
     ctx = RuleContext(db=db)
-    memo, root = build_memo(program, ctx)
-    stats = expand(memo, list(rules) if rules is not None else default_rules(),
-                   ctx, max_rounds=max_rounds)
+    with _span("build-memo"):
+        memo, root = build_memo(program, ctx)
+    t1 = time.perf_counter()
+    phases["build_memo"] = t1 - t0
+    with _span("saturate"):
+        stats = expand(memo,
+                       list(rules) if rules is not None else default_rules(),
+                       ctx, max_rounds=max_rounds, tracer=tracer)
+    t2 = time.perf_counter()
+    phases["saturate"] = t2 - t1
     cm = (cost_model or CostModel)(db, catalog, context)
     # sites over tables the program writes are refetched every invocation
     # (the serving cache refuses them), so the model must not amortize them
@@ -495,16 +548,25 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
     cm.write_tables = frozenset(write_tables(program))
     searcher = Searcher(memo, cm, ctx, choice=choice, topk=topk,
                         max_combos=max_combos)
-    plans = searcher.group_plans(root)
+    with _span("search"):
+        plans = searcher.group_plans(root)
+    t3 = time.perf_counter()
+    phases["search"] = t3 - t2
     if not plans:
         raise RuntimeError("no plan found")
     best = plans[0]
-    region = hoist_prefetches(plan_to_region(best))
+    with _span("codegen"):
+        region = hoist_prefetches(plan_to_region(best))
     out = Program(f"{program.name}_{choice}", region, program.outputs,
                   program.inputs)
-    dt = time.perf_counter() - t0
+    t4 = time.perf_counter()
+    phases["codegen"] = t4 - t3
+    dt = t4 - t0
     return OptimizationResult(out, best, best.total, stats, dt,
-                              stats.get("alternatives_added", 0))
+                              stats.get("alternatives_added", 0),
+                              phase_times=phases,
+                              rule_hits=dict(memo.rule_hits),
+                              rules_fired=_plan_rules(best, memo))
 
 
 def optimize(program: Program, db, catalog: CostCatalog,

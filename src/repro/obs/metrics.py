@@ -1,0 +1,151 @@
+"""Unified metrics registry: labeled counters / gauges / histograms.
+
+One :class:`MetricsRegistry` per component (session, serving runtime,
+feedback controller, compile manager) replaces the scattered ad-hoc
+telemetry dicts. The legacy attributes and telemetry-dict shapes are kept
+as views: a :class:`registry_counter` descriptor routes ``obj.counter += 1``
+mutations — including external call sites like
+``session.executions += n`` — through the owning component's registry, so
+the registry value and the telemetry dict reconcile bit-for-bit by
+construction.
+
+``snapshot()`` flattens everything to ``{name{label=value,...}: number}``;
+``diff(older)`` returns the numeric deltas — the two primitives every
+"what changed during this serve cycle?" question needs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+__all__ = ["MetricsRegistry", "registry_counter", "merge_snapshots"]
+
+_LabelKey = Tuple[Tuple[str, object], ...]
+
+
+def _key(name: str, labels: Mapping[str, object]) -> Tuple[str, _LabelKey]:
+    return (name, tuple(sorted(labels.items())))
+
+
+def _flat_name(name: str, labels: _LabelKey) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={v}" for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Labeled counters, gauges, and histograms with snapshot/diff."""
+
+    def __init__(self):
+        self._counters: Dict[Tuple[str, _LabelKey], float] = {}
+        self._gauges: Dict[Tuple[str, _LabelKey], object] = {}
+        self._hists: Dict[Tuple[str, _LabelKey], Dict[str, float]] = {}
+
+    # ------------------------------------------------------------- counters
+    def inc(self, name: str, value: float = 1, **labels) -> None:
+        k = _key(name, labels)
+        self._counters[k] = self._counters.get(k, 0) + value
+
+    def set_counter(self, name: str, value, **labels) -> None:
+        """Absolute assignment — the hook legacy ``obj.counter = 0`` /
+        ``obj.counter += 1`` attribute writes route through."""
+        self._counters[_key(name, labels)] = value
+
+    def value(self, name: str, default=0, **labels):
+        return self._counters.get(_key(name, labels), default)
+
+    # --------------------------------------------------------------- gauges
+    def gauge(self, name: str, value, **labels) -> None:
+        self._gauges[_key(name, labels)] = value
+
+    def gauge_value(self, name: str, default=None, **labels):
+        return self._gauges.get(_key(name, labels), default)
+
+    def ingest(self, mapping: Mapping[str, object], prefix: str = "") -> None:
+        """Fold an existing telemetry dict's numeric leaves into gauges
+        (the migration path for stats dicts owned by other components,
+        e.g. SiteCache / PlanStore / ArtifactCache)."""
+        for k, v in mapping.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                self.gauge(prefix + k, v)
+
+    # ----------------------------------------------------------- histograms
+    def observe(self, name: str, value: float, **labels) -> None:
+        k = _key(name, labels)
+        h = self._hists.get(k)
+        if h is None:
+            self._hists[k] = {"count": 1, "sum": value,
+                              "min": value, "max": value}
+        else:
+            h["count"] += 1
+            h["sum"] += value
+            h["min"] = min(h["min"], value)
+            h["max"] = max(h["max"], value)
+
+    def histogram(self, name: str, **labels) -> Optional[Dict[str, float]]:
+        h = self._hists.get(_key(name, labels))
+        return dict(h) if h is not None else None
+
+    # ------------------------------------------------------- snapshot / diff
+    def snapshot(self) -> Dict[str, object]:
+        out: Dict[str, object] = {}
+        for (name, labels), v in self._counters.items():
+            out[_flat_name(name, labels)] = v
+        for (name, labels), v in self._gauges.items():
+            out[_flat_name(name, labels)] = v
+        for (name, labels), h in self._hists.items():
+            base = _flat_name(name, labels)
+            for stat, v in h.items():
+                out[f"{base}_{stat}"] = v
+        return out
+
+    def diff(self, older: Mapping[str, object]) -> Dict[str, object]:
+        """Numeric deltas of the current snapshot against an older one
+        (new keys diff against zero; non-numeric values compare-and-keep)."""
+        now = self.snapshot()
+        out: Dict[str, object] = {}
+        for k, v in now.items():
+            prev = older.get(k, 0)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and isinstance(prev, (int, float)):
+                d = v - prev
+                if d:
+                    out[k] = d
+            elif v != prev:
+                out[k] = v
+        return out
+
+
+class registry_counter:
+    """Class-level descriptor turning a legacy counter attribute into a
+    registry-backed metric. ``obj.<name>`` reads the registry value;
+    ``obj.<name> = v`` (hence ``+=``) writes it — the metric name defaults
+    to the attribute name, the registry lives at ``obj.<registry_attr>``."""
+
+    def __init__(self, metric: Optional[str] = None,
+                 registry_attr: str = "metrics"):
+        self.metric = metric
+        self.registry_attr = registry_attr
+
+    def __set_name__(self, owner, name):
+        if self.metric is None:
+            self.metric = name
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return getattr(obj, self.registry_attr).value(self.metric)
+
+    def __set__(self, obj, value):
+        getattr(obj, self.registry_attr).set_counter(self.metric, value)
+
+
+def merge_snapshots(**named: Mapping[str, object]) -> Dict[str, object]:
+    """Combine component snapshots under name prefixes:
+    ``merge_snapshots(serving=a, session=b) -> {"serving_...", ...}``."""
+    out: Dict[str, object] = {}
+    for prefix, snap in named.items():
+        for k, v in snap.items():
+            out[f"{prefix}_{k}"] = v
+    return out

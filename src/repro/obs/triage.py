@@ -1,0 +1,81 @@
+"""Fleet triage: rank served programs by traffic-weighted estimated win.
+
+Re-optimization effort should follow the traffic: a mildly-bad plan
+serving 80% of requests is worth more attention than a terrible plan
+served twice. :func:`triage_fleet` scores every program registered on a
+:class:`~repro.runtime.serving.ServingRuntime` as
+
+    score = invocation_share × drift × (1 + Σ signal severity)
+
+where *drift* is the worst observed estimate-vs-reality ratio among the
+feedback controller's drift events touching the program's tables (1.0
+when estimates held), and the signal severities come from
+:func:`~repro.obs.signals.scan_plan` over the CURRENT serving plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from .render import markdown_table
+
+__all__ = ["TriageRow", "triage_fleet", "render_triage"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TriageRow:
+    name: str
+    requests: int
+    share: float            # fraction of all served requests
+    drift: float            # worst observed drift ratio on its tables (>= 1)
+    severity: float         # Σ scan_plan signal severities on current plan
+    signals: Tuple[str, ...]
+    score: float
+
+    def describe(self) -> str:
+        sig = ",".join(self.signals) or "-"
+        return (f"{self.name}: score {self.score:.3f} "
+                f"(share {self.share:.2f}, drift {self.drift:.1f}x, "
+                f"signals {sig})")
+
+
+def triage_fleet(rt) -> List[TriageRow]:
+    """Score and rank every program registered on ``rt`` (a
+    :class:`~repro.runtime.serving.ServingRuntime`), highest first."""
+    from ..api.cache import program_tables
+    from .signals import scan_plan
+
+    counts = dict(getattr(rt, "_requests_by_program", {}))
+    total = sum(counts.values())
+    events = rt.feedback.events if rt.feedback is not None else []
+
+    rows: List[TriageRow] = []
+    for name in sorted(rt._programs):
+        program = rt._programs[name]
+        exe = rt._executables[name]
+        requests = counts.get(name, 0)
+        share = requests / total if total else 0.0
+        tables = set(program_tables(program))
+        drift = 1.0
+        for e in events:
+            if tables & set(e.tables):
+                drift = max(drift, float(e.ratio))
+        found = scan_plan(exe, feedback=rt.feedback)
+        severity = sum(s.severity for s in found)
+        rows.append(TriageRow(
+            name=name, requests=requests, share=share, drift=drift,
+            severity=severity,
+            signals=tuple(sorted({s.kind for s in found})),
+            score=share * drift * (1.0 + severity)))
+    rows.sort(key=lambda r: (-r.score, r.name))
+    return rows
+
+
+def render_triage(rows: List[TriageRow]) -> str:
+    return markdown_table(
+        ["program", "requests", "share", "drift", "severity",
+         "signals", "score"],
+        [(r.name, r.requests, f"{r.share:.2f}", f"{r.drift:.1f}x",
+          f"{r.severity:.2f}", ",".join(r.signals) or "—",
+          f"{r.score:.3f}") for r in rows])

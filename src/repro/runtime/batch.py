@@ -44,6 +44,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 from ..core.context import param_group_key
 from ..core.regions import (BasicBlock, Interpreter, Program, Region,
                             UpdateRow)
+from ..obs.trace import NOOP_TRACER
 from ..relational.algebra import scan_tables
 from ..relational.database import ClientEnv, NetworkProfile
 from .sitecache import SiteCache, Uncacheable, param_key
@@ -81,10 +82,17 @@ class BatchClientEnv(ClientEnv):
     def __init__(self, db, network: NetworkProfile, c_z: float = 30e-9,
                  orm_cache: bool = True,
                  site_cache: Optional[SiteCache] = None,
-                 write_set: Sequence[str] = ()):
+                 write_set: Sequence[str] = (),
+                 tracer=None):
         super().__init__(db, network, c_z=c_z, orm_cache=orm_cache)
         self.site_cache = site_cache if site_cache is not None else SiteCache()
         self.write_set: Set[str] = set(write_set)
+        self.tracer = tracer if tracer is not None else NOOP_TRACER
+        # id(query) -> [query, hits, shared_hits, fetches, fetched_rows];
+        # flushed as ONE aggregated span event per site per batch
+        # (flush_site_events) so per-invocation tracing cost stays at a
+        # dict update, not a span allocation
+        self._site_log: Dict[int, list] = {}
         self.site_hits = 0          # in-batch reuse
         self.shared_site_hits = 0   # cross-batch / cross-program reuse
         # (query, observed rows, observed wall-clock) per true execution —
@@ -94,6 +102,26 @@ class BatchClientEnv(ClientEnv):
         # (+ total lookups) at PARAMETERIZED sites, merged by run_batch
         self.binding_sets: Dict[str, set] = {}
         self.binding_totals: Dict[str, int] = {}
+
+    def _site_rec(self, q) -> list:
+        rec = self._site_log.get(id(q))
+        if rec is None:
+            rec = self._site_log[id(q)] = [q, 0, 0, 0, 0]
+        return rec
+
+    def flush_site_events(self) -> None:
+        """Emit one aggregated ``site-hit``/``site-fetch`` event per query
+        site touched this batch (called by ``run_batch`` inside its batch
+        span while the tracer is enabled)."""
+        for q, hits, shared, fetches, rows in self._site_log.values():
+            sql = q.sql()
+            if fetches:
+                self.tracer.event("site-fetch", sim=self.clock, sql=sql,
+                                  n=fetches, rows=rows)
+            if hits or shared:
+                self.tracer.event("site-hit", sim=self.clock, sql=sql,
+                                  n=hits + shared, shared=shared)
+        self._site_log.clear()
 
     # ----------------------------------------------------------------- exec
     def _fetch(self, q, params):
@@ -141,8 +169,14 @@ class BatchClientEnv(ClientEnv):
             else:
                 self.site_hits += 1
             self.charge_statement()
+            if self.tracer.enabled:
+                self._site_rec(q)[2 if cross else 1] += 1
             return result
         t = self._fetch(q, params)
+        if self.tracer.enabled:
+            rec = self._site_rec(q)
+            rec[3] += 1
+            rec[4] += t.nrows
         cache.put(key, t, tables)
         return t
 
@@ -314,9 +348,12 @@ def run_batch(session, program: Program,
     # executed (rewritten) program may have compiled them away entirely
     source = getattr(executable, "source", None) or program
 
+    tracer = getattr(session, "tracer", NOOP_TRACER)
     lowered = _resolve_lowered(program, executable, tier, compiler,
                                len(param_sets))
     tier_used = "interpreter" if lowered is None else "compiled"
+    if executable is not None:
+        executable.last_tier = tier_used
     if lowered is not None:
         # run the lowering's OWN program tree: compiled-loop bindings are by
         # region identity, and the lowering was built from a program with
@@ -334,18 +371,28 @@ def run_batch(session, program: Program,
         # the feedback loop's StatsProfile too
         write_set = _write_tables(program)
         envs, results, iteration_obs, observations = [], [], [], []
-        for p in param_sets:
-            env = BatchClientEnv(session.db,
-                                 network or session.catalog.network,
-                                 c_z=session.catalog.c_z, site_cache=cache,
-                                 write_set=write_set)
-            outputs = _make_interp(env, mode, lowered).run(program, p or None)
-            results.append(ExecutionResult(
-                outputs=outputs, simulated_s=env.clock,
-                n_queries=env.n_queries, n_round_trips=env.n_round_trips))
-            iteration_obs.extend(env.iteration_log)
-            observations.extend(env.observations)
-            envs.append(env)
+        with tracer.span("batch", program=program.name, n=len(param_sets),
+                         tier=tier_used, batched=False) as bsp:
+            for p in param_sets:
+                env = BatchClientEnv(session.db,
+                                     network or session.catalog.network,
+                                     c_z=session.catalog.c_z,
+                                     site_cache=cache,
+                                     write_set=write_set, tracer=tracer)
+                outputs = _make_interp(env, mode, lowered).run(program,
+                                                               p or None)
+                results.append(ExecutionResult(
+                    outputs=outputs, simulated_s=env.clock,
+                    n_queries=env.n_queries,
+                    n_round_trips=env.n_round_trips))
+                iteration_obs.extend(env.iteration_log)
+                observations.extend(env.observations)
+                envs.append(env)
+            if tracer.enabled:
+                for e in envs:
+                    e.flush_site_events()
+                bsp.attrs["simulated_s"] = sum(r.simulated_s
+                                               for r in results)
         session.executions += len(param_sets)
         if executable is not None:
             executable.n_runs += len(param_sets)
@@ -366,17 +413,23 @@ def run_batch(session, program: Program,
             tier=tier_used)
 
     env = BatchClientEnv(session.db, network or session.catalog.network,
-                         c_z=session.catalog.c_z, site_cache=cache)
+                         c_z=session.catalog.c_z, site_cache=cache,
+                         tracer=tracer)
     interp = _make_interp(env, mode, lowered)
     results = []
-    clock0, q0, rt0 = 0.0, 0, 0
-    for p in param_sets:
-        outputs = interp.run(program, p or None)
-        results.append(ExecutionResult(
-            outputs=outputs, simulated_s=env.clock - clock0,
-            n_queries=env.n_queries - q0,
-            n_round_trips=env.n_round_trips - rt0))
-        clock0, q0, rt0 = env.clock, env.n_queries, env.n_round_trips
+    with tracer.span("batch", sim_clock=lambda: env.clock,
+                     program=program.name, n=len(param_sets),
+                     tier=tier_used, batched=True):
+        clock0, q0, rt0 = 0.0, 0, 0
+        for p in param_sets:
+            outputs = interp.run(program, p or None)
+            results.append(ExecutionResult(
+                outputs=outputs, simulated_s=env.clock - clock0,
+                n_queries=env.n_queries - q0,
+                n_round_trips=env.n_round_trips - rt0))
+            clock0, q0, rt0 = env.clock, env.n_queries, env.n_round_trips
+        if tracer.enabled:
+            env.flush_site_events()
     session.executions += len(param_sets)
     if executable is not None:
         executable.n_runs += len(param_sets)

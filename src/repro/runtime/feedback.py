@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..api.cache import query_tables
 from ..core.context import StatsProfile
+from ..obs.metrics import MetricsRegistry, registry_counter
 
 __all__ = ["DriftEvent", "FeedbackController"]
 
@@ -79,6 +80,17 @@ class DriftEvent:
 class FeedbackController:
     """Observes served executions; decides when statistics must be refreshed."""
 
+    # registry-backed telemetry counters (see repro.obs.metrics): legacy
+    # `controller.refreshes` reads/writes stay valid as views
+    refreshes = registry_counter()
+    observed_queries = registry_counter()
+    observed_wall_s = registry_counter()
+    iters_publishes = registry_counter()
+    binding_publishes = registry_counter()
+    swap_checks = registry_counter()
+    swaps_accepted = registry_counter()
+    swaps_rejected = registry_counter()
+
     def __init__(self, session, drift_threshold: float = 3.0,
                  cost_drift_threshold: Optional[float] = 10.0,
                  iters_publish_threshold: float = 1.5,
@@ -94,6 +106,8 @@ class FeedbackController:
             raise ValueError("binding_publish_delta must be in (0, 1) "
                              "(an absolute delta on a fraction)")
         self.session = session
+        # must exist before the registry_counter descriptors are written
+        self.metrics = MetricsRegistry()
         self.drift_threshold = drift_threshold
         self.cost_drift_threshold = cost_drift_threshold
         self.iters_publish_threshold = iters_publish_threshold
@@ -280,13 +294,24 @@ class FeedbackController:
             self.swaps_rejected += 1
             self.session.plan_swaps_rejected = getattr(
                 self.session, "plan_swaps_rejected", 0) + 1
-        self.swap_log.append({
+        outcome = {
             "program": getattr(old_exe.source, "name", "?"),
             "accepted": accept,
             "replayed": len(bindings) if old_s is not None else 0,
             "old_replay_s": old_s,
             "new_replay_s": new_s,
-        })
+        }
+        self.swap_log.append(outcome)
+        # the judged executable carries its own verdict (PlanReport's
+        # swap_checked/swap_accepted/swap_replayed fields read it)
+        try:
+            new_exe.swap_outcome = {"checked": True, **outcome}
+        except AttributeError:
+            pass  # stub executables in tests need not carry the field
+        tracer = getattr(self.session, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            tracer.event("swap-verdict", program=outcome["program"],
+                         accepted=accept, replayed=outcome["replayed"])
         return accept
 
     # -------------------------------------------------------------- reacting

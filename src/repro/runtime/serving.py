@@ -53,6 +53,8 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 from ..api.cache import program_fingerprint, program_tables
 from ..core.context import ExecutionContext
 from ..core.regions import Program
+from ..obs.metrics import MetricsRegistry, merge_snapshots, registry_counter
+from ..obs.trace import NOOP_TRACER
 from .feedback import FeedbackController
 from .sitecache import SiteCache
 
@@ -60,6 +62,16 @@ __all__ = ["ServingRuntime", "serve"]
 
 
 class ServingRuntime:
+    # registry-backed telemetry counters (repro.obs.metrics); the legacy
+    # attribute reads/writes and telemetry() dict shape are unchanged views
+    requests_served = registry_counter()
+    batches_run = registry_counter()
+    recompiles = registry_counter()
+    context_recompiles = registry_counter()
+    swaps_rejected = registry_counter()
+    simulated_s = registry_counter()
+    n_round_trips = registry_counter()
+
     def __init__(self, session, *, store=None, batch_size: int = 16,
                  drift_threshold: float = 3.0,
                  cost_drift_threshold: Optional[float] = 10.0,
@@ -71,12 +83,19 @@ class ServingRuntime:
                  site_cache_max_bytes: Optional[int] = None,
                  compile_hot_plans: Optional[int] = None,
                  compile_backend: Optional[str] = None,
-                 replay_window: int = 8):
+                 replay_window: int = 8,
+                 tracer=None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         if replay_window < 0:
             raise ValueError("replay_window must be >= 0")
         self.session = session
+        # observability: the runtime's OWN registry (sharing the session's
+        # would collide when several runtimes front one session); the tracer
+        # defaults to the session's so compile + serve spans share one tree
+        self.metrics = MetricsRegistry()
+        self.tracer = tracer if tracer is not None else \
+            getattr(session, "tracer", NOOP_TRACER)
         if store is not None:
             from .store import PlanStore
             session.plan_store = PlanStore.coerce(store)
@@ -111,7 +130,7 @@ class ServingRuntime:
         # replay workload when a recompile proposes a different plan
         self.replay_window = replay_window
         self._recent: Dict[str, deque] = {}
-        # telemetry
+        # zero the registry-backed telemetry counters (class descriptors)
         self.requests_served = 0
         self.batches_run = 0
         self.recompiles = 0
@@ -119,6 +138,8 @@ class ServingRuntime:
         self.swaps_rejected = 0
         self.simulated_s = 0.0
         self.n_round_trips = 0
+        # per-program request counts — the traffic shares triage() weights by
+        self._requests_by_program: Dict[str, int] = {}
 
     # -------------------------------------------------------------- context
     def current_context(self) -> ExecutionContext:
@@ -161,24 +182,27 @@ class ServingRuntime:
             self.executable(name)  # fail fast on unknown programs
             by_program.setdefault(name, []).append(i)
 
-        for name, indices in by_program.items():
-            for lo in range(0, len(indices), self.batch_size):
-                chunk = indices[lo:lo + self.batch_size]
-                exe = self._executables[name]
-                params = [todo[i][1] for i in chunk]
-                batch = exe.run_batch(params, site_cache=self.site_cache,
-                                      compiler=self.compiler)
-                if self.replay_window:
-                    recent = self._recent.setdefault(
-                        name, deque(maxlen=self.replay_window))
-                    recent.extend(dict(p) for p in params)
-                for i, result in zip(chunk, batch.results):
-                    responses[i] = result
-                self.requests_served += len(chunk)
-                self.batches_run += 1
-                self.simulated_s += batch.simulated_s
-                self.n_round_trips += batch.n_round_trips
-                self._after_batch(batch)
+        with self.tracer.span("serve", n_requests=len(todo)):
+            for name, indices in by_program.items():
+                self._requests_by_program[name] = \
+                    self._requests_by_program.get(name, 0) + len(indices)
+                for lo in range(0, len(indices), self.batch_size):
+                    chunk = indices[lo:lo + self.batch_size]
+                    exe = self._executables[name]
+                    params = [todo[i][1] for i in chunk]
+                    batch = exe.run_batch(params, site_cache=self.site_cache,
+                                          compiler=self.compiler)
+                    if self.replay_window:
+                        recent = self._recent.setdefault(
+                            name, deque(maxlen=self.replay_window))
+                        recent.extend(dict(p) for p in params)
+                    for i, result in zip(chunk, batch.results):
+                        responses[i] = result
+                    self.requests_served += len(chunk)
+                    self.batches_run += 1
+                    self.simulated_s += batch.simulated_s
+                    self.n_round_trips += batch.n_round_trips
+                    self._after_batch(batch)
         return responses
 
     def _after_batch(self, batch) -> None:
@@ -254,6 +278,42 @@ class ServingRuntime:
                 self.context_recompiles += 1
                 self.recompiles += 1
             self._guarded_swap(name, exe)
+
+    # --------------------------------------------------------- observability
+    def explain(self, name: str) -> str:
+        """EXPLAIN the named program's CURRENT serving plan, annotated with
+        this runtime's observed statistics (feedback sites, site-cache
+        binding diversity, compiled-tier status)."""
+        return self.executable(name).explain(feedback=self.feedback,
+                                             site_cache=self.site_cache,
+                                             compiler=self.compiler)
+
+    def scan(self, name: str):
+        """Bad-plan signals still present in the named program's current
+        serving plan (:func:`repro.obs.signals.scan_plan`)."""
+        return self.executable(name).scan(feedback=self.feedback)
+
+    def triage(self):
+        """Rank every served program by traffic-weighted estimated win
+        (observed drift × invocation share × signal severity) — the fleet
+        view that routes re-optimization effort where the traffic is.
+        Returns :class:`~repro.obs.triage.TriageRow`\\ s, highest first."""
+        from ..obs.triage import triage_fleet
+        return triage_fleet(self)
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """One flat snapshot across every component registry (serving,
+        session, feedback) plus the site-cache / compiler stats dicts
+        ingested as gauges — diff two snapshots to see a serve cycle."""
+        self.metrics.ingest(self.site_cache.stats(), prefix="site_cache_")
+        if self.compiler is not None:
+            self.metrics.ingest(self.compiler.metrics.snapshot(),
+                                prefix="compiled_")
+        parts = {"serving": self.metrics.snapshot(),
+                 "session": self.session.metrics.snapshot()}
+        if self.feedback is not None:
+            parts["feedback"] = self.feedback.metrics.snapshot()
+        return merge_snapshots(**parts)
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, object]:
