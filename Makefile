@@ -2,7 +2,7 @@ PYTHON ?= python
 PYTHONPATH := src
 
 .PHONY: test test-fast lint bench-smoke bench bench-batch bench-serving \
-	bench-compiled bench-obs examples
+	bench-compiled bench-obs bench-cluster examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -53,6 +53,16 @@ bench-compiled:
 # run's span tree in BENCH_trace_sample.jsonl (uploaded as a CI artifact)
 bench-obs:
 	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=obs \
+		$(PYTHON) -m benchmarks.run bench_runtime
+
+# sharded serving cluster: simulated W_E/SCAN throughput at 1 vs 2 vs 4
+# shard workers, deadline-driven batch formation (burst reaches the
+# batch-64 SCAN plan flip with no fixed-size batching; sparse stays on
+# the per-iteration plan), and skewed-vs-uniform affinity routing with
+# the triage hot-shard flag; the `cluster` section lands in
+# BENCH_runtime.json (the full bench-batch run emits it too)
+bench-cluster:
+	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=cluster \
 		$(PYTHON) -m benchmarks.run bench_runtime
 
 examples:

@@ -36,6 +36,16 @@ batch-64 serving loop: the default no-op tracer vs a recording
 simulated clock either way, and exports a sample span tree to
 ``BENCH_trace_sample.jsonl`` (uploaded as a CI artifact).
 
+The ``cluster`` section (``make bench-cluster``; ``REPRO_BENCH_ONLY=cluster``
+runs just it) measures the sharded serving tier: simulated W_E and SCAN
+throughput (requests per simulated makespan second) at 1 vs 2 vs 4 shard
+workers, the deadline-driven batch former's formed sizes under burst vs
+sparse arrivals — including the formation-driven SCAN plan flip, where a
+burst forming size-64 batches republishes the worker context and the
+serving plan flips from the per-iteration query to the batch-64 prefetch
+WITHOUT any fixed-size batch config — and skewed vs uniform affinity-key
+routing (hot-shard makespan + triage skew flag).
+
 ``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
 to ``BENCH_runtime.json`` (uploaded as a CI workflow artifact).
 """
@@ -212,6 +222,146 @@ def _bench_obs(emit, smoke):
     }
 
 
+def _bench_cluster(emit, smoke):
+    """Sharded serving cluster (``make bench-cluster``): worker scaling,
+    deadline-driven batch formation, and skewed-vs-uniform routing."""
+    from repro.cluster import ClusterRuntime, uniform_arrivals
+    from repro.obs.triage import render_triage
+
+    n_tasks = 300 if smoke else 2000
+    n_req = 24 if smoke else 128
+    out = {}
+
+    def build(n_workers, paper=False, **kw):
+        kw.setdefault("partition_keys", {"tasks": "t_role_id"})
+        kw.setdefault("affinity", {"W_E": "worklist"})
+        kw.setdefault("deadline_s", 0.01)
+        kw.setdefault("max_batch", 8)
+        if paper:
+            # the SLOW_REMOTE paper catalog: round-trip-dominated costs,
+            # where the SCAN batch-64 plan flip lives
+            kw.setdefault("catalog", CostCatalog(SLOW_REMOTE))
+            kw.setdefault("config", OptimizerConfig.preset("paper-exp1-3"))
+        return ClusterRuntime(make_wilos_db(n_tasks, ratio=10),
+                              n_workers=n_workers, **kw)
+
+    # ----------------------------------- worker scaling on W_E and SCAN
+    # throughput = requests per simulated MAKESPAN second. Every request
+    # carries a DISTINCT worklist key (repeating keys would be absorbed by
+    # the per-worker SiteCache and measure warm-up, not serving): each
+    # per-key query is pruned to the key's shard, the affinity router
+    # sends it to that shard's worker, so the slowest worker's clock (the
+    # makespan) shrinks with the fleet
+    scaling = {"W_E": {}, "SCAN": {}}
+    for nw in (1, 2, 4):
+        cl = build(nw)
+        cl.register(make_wilos_e())
+        cl.register(make_scan())
+        we = [("W_E", {"worklist": [i]}) for i in range(n_req)]
+        t0 = time.perf_counter()
+        cl.serve(we)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        we_rps = n_req / cl.last_makespan_s
+        scaling["W_E"][str(nw)] = {
+            "throughput_rps": we_rps, "makespan_s": cl.last_makespan_s,
+            "worker_requests": [w.requests_served for w in cl.workers]}
+        emit(f"bench_runtime/cluster/W_E/workers{nw}", wall_us,
+             f"rps={we_rps:.3f};makespan={cl.last_makespan_s:.3f}s")
+        # SCAN spread across workers by a varying (inert) threshold binding
+        sc = [("SCAN", {"threshold": 1e9 + i}) for i in range(n_req // 2)]
+        t0 = time.perf_counter()
+        cl.serve(sc)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        sc_rps = (n_req // 2) / cl.last_makespan_s
+        scaling["SCAN"][str(nw)] = {
+            "throughput_rps": sc_rps, "makespan_s": cl.last_makespan_s}
+        emit(f"bench_runtime/cluster/SCAN/workers{nw}", wall_us,
+             f"rps={sc_rps:.3f};makespan={cl.last_makespan_s:.3f}s")
+    speedup = (scaling["W_E"]["4"]["throughput_rps"]
+               / scaling["W_E"]["1"]["throughput_rps"])
+    scaling["W_E"]["speedup_4_vs_1"] = speedup
+    emit("bench_runtime/cluster/W_E/speedup_4_vs_1", 0,
+         f"speedup={speedup:.2f}x")
+    out["scaling"] = scaling
+
+    # ---------------------- deadline-driven formation: the batch-64 flip
+    # workers START costed for batch 1 (initial_batch_size=1 — the SCAN
+    # plan is the per-iteration query). A burst arrives, the former flushes
+    # size-64 batches, the worker republishes its observed formed size into
+    # the serving context and recompiles: the serving plan flips to the
+    # batch-64 prefetch because the former MADE batches of 64, with no
+    # fixed-size batch config anywhere. (bit_guard_swaps off: the flip's
+    # plan pair differs in float low bits, which the default guard vetoes;
+    # feedback off: observed-iteration stats would re-cost the per-key
+    # query below the prefetch and legitimately swap back — this section
+    # isolates the formation->context->recompile mechanism.)
+    cl = build(1, paper=True, max_batch=64, initial_batch_size=1,
+               bit_guard_swaps=False, feedback=False)
+    cl.register(make_scan())
+    plan_before = _plan_kind(cl.workers[0].executable("SCAN"))
+    burst = [("SCAN", {}) for _ in range(128 if not smoke else 64)]
+    t0 = time.perf_counter()
+    cl.serve(burst)                       # all arrivals at t=0: full flushes
+    wall_us = (time.perf_counter() - t0) * 1e6
+    plan_after = _plan_kind(cl.workers[0].executable("SCAN"))
+    w = cl.workers[0]
+    formation = {
+        "plan_before": plan_before, "plan_after": plan_after,
+        "published_batch_size": w._base_context.batch_size,
+        "batch_publishes": w.batch_publishes,
+        "flushes_full": cl.former.flushes_full,
+        "flushes_deadline": cl.former.flushes_deadline,
+        "formed_sizes": sorted(set(w._formed_sizes)),
+    }
+    emit("bench_runtime/cluster/formation/burst_flip", wall_us,
+         f"plan={plan_before}->{plan_after};"
+         f"published_batch={w._base_context.batch_size}")
+    # sparse contrast: one request per deadline window keeps batches at 1,
+    # so the per-iteration query plan never flips
+    cl2 = build(1, paper=True, max_batch=64, initial_batch_size=1,
+                bit_guard_swaps=False, feedback=False)
+    cl2.register(make_scan())
+    sparse = [("SCAN", {}) for _ in range(8)]
+    cl2.serve(sparse, arrivals=uniform_arrivals(8, rps=10.0))
+    formation["sparse_plan"] = _plan_kind(cl2.workers[0].executable("SCAN"))
+    formation["sparse_flushes_deadline"] = cl2.former.flushes_deadline
+    emit("bench_runtime/cluster/formation/sparse", 0,
+         f"plan={formation['sparse_plan']};"
+         f"deadline_flushes={cl2.former.flushes_deadline}")
+    out["formation"] = formation
+
+    # --------------------------- skewed vs uniform affinity-key routing
+    # uniform: distinct keys land round-robin across the 4 workers; skewed:
+    # every key is a multiple of 4, so affinity routing pins ALL of the
+    # fleet's work on worker 0 and triage flags its shard
+    n_roles = n_tasks // 10
+    skew = {}
+    for label, key in (("uniform", lambda i: i),
+                       ("skewed", lambda i: 4 * (i % (n_roles // 4)))):
+        cl = build(4)
+        cl.register(make_wilos_e())
+        reqs = [("W_E", {"worklist": [key(i)]}) for i in range(n_req)]
+        cl.serve(reqs)
+        rows = cl.triage()
+        top = rows[0]
+        skew[label] = {
+            "makespan_s": cl.last_makespan_s,
+            "router_skew": cl.router.skew(),
+            "triage_hot_shard": top.hot_shard,
+            "triage_skew": top.skew,
+            "worker_requests": [w.requests_served for w in cl.workers]}
+        emit(f"bench_runtime/cluster/routing/{label}", 0,
+             f"makespan={cl.last_makespan_s:.3f}s;"
+             f"router_skew={cl.router.skew():.2f};"
+             f"hot_shard={top.hot_shard}")
+        if label == "skewed" and not smoke:
+            print(render_triage(rows))
+    skew["makespan_ratio"] = (skew["skewed"]["makespan_s"]
+                              / max(skew["uniform"]["makespan_s"], 1e-12))
+    out["routing"] = skew
+    return out
+
+
 def main(emit):
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     only = os.environ.get("REPRO_BENCH_ONLY")
@@ -219,6 +369,12 @@ def main(emit):
     n_tasks = 300 if smoke else 4000
 
     traj = {"batch_sizes": list(BATCH_SIZES), "workloads": {}}
+
+    # ------------------------------------------------ sharded serving tier
+    if only in (None, "cluster"):
+        traj["cluster"] = _bench_cluster(emit, smoke)
+        if only == "cluster":
+            return traj
 
     # ------------------------------------------ compiled tier vs interpreter
     if only != "obs":

@@ -34,6 +34,12 @@ Three acts:
      q-errors, cache/binding status, and any bad-plan signals still
      present; ``rt.triage()`` ranks the whole fleet by traffic-weighted
      estimated win so re-optimization effort follows the requests.
+  6. **Sharded cluster + hot-shard triage.** A 4-worker
+     ``ClusterRuntime`` partitions ``tasks`` by ``t_role_id`` and routes
+     W_E requests by their worklist key. A uniform key stream spreads
+     across the fleet; a skewed stream (every key a multiple of 4) pins
+     ALL the work on worker 0 — cluster ``triage()`` grows per-shard
+     request columns and flags the hot shard with its skew factor.
 """
 
 import sys
@@ -211,6 +217,40 @@ def main():
     print(f"\n=== fleet triage (share x drift x severity) ===")
     print(render_triage(rows))
     print(f"top: {rows[0].describe()}")
+
+    # ---- act 6: sharded cluster, skewed fleet, hot-shard triage -----------
+    # tasks is hash-partitioned on t_role_id over 4 shard workers; W_E is
+    # affinity-routed by its worklist key, so a request's per-key query
+    # lands on the worker whose shard holds that key. Distinct keys make
+    # real per-request work (repeats would just hit the SiteCache).
+    from repro.cluster import ClusterRuntime
+    from repro.programs import make_wilos_e
+
+    print(f"\n=== sharded cluster: 4 workers, skewed vs uniform keys ===")
+    makespans = {}
+    for label, key in (("uniform", lambda i: i),
+                       ("skewed", lambda i: 4 * i)):
+        cl = ClusterRuntime(make_wilos_db(2000), n_workers=4,
+                            partition_keys={"tasks": "t_role_id"},
+                            affinity={"W_E": "worklist"},
+                            deadline_s=0.01, max_batch=8)
+        cl.register(make_wilos_e())
+        cl.serve([("W_E", {"worklist": [key(i)]}) for i in range(48)])
+        makespans[label] = cl.last_makespan_s
+        served = [w.requests_served for w in cl.workers]
+        print(f"{label:>8s}: worker requests {served}, "
+              f"router skew {cl.router.skew():.1f}x, "
+              f"makespan {cl.last_makespan_s:.2f}s simulated")
+    print(f"skew costs {makespans['skewed'] / makespans['uniform']:.1f}x "
+          f"the uniform makespan — and triage points at the hot shard:")
+    rows = cl.triage()                      # cl is the skewed cluster
+    print(render_triage(rows))
+    hot = rows[0]
+    assert hot.shard_requests[hot.hot_shard] == 48 and hot.skew == 4.0, \
+        "every skewed key is 0 mod 4 — shard 0 must own all 48 requests"
+    print(f"hot shard {hot.hot_shard} owns "
+          f"{hot.shard_requests[hot.hot_shard]}/48 requests "
+          f"({hot.skew:.1f}x its fair share)")
 
 
 if __name__ == "__main__":

@@ -184,26 +184,37 @@ class ServingRuntime:
 
         with self.tracer.span("serve", n_requests=len(todo)):
             for name, indices in by_program.items():
-                self._requests_by_program[name] = \
-                    self._requests_by_program.get(name, 0) + len(indices)
                 for lo in range(0, len(indices), self.batch_size):
                     chunk = indices[lo:lo + self.batch_size]
-                    exe = self._executables[name]
-                    params = [todo[i][1] for i in chunk]
-                    batch = exe.run_batch(params, site_cache=self.site_cache,
-                                          compiler=self.compiler)
-                    if self.replay_window:
-                        recent = self._recent.setdefault(
-                            name, deque(maxlen=self.replay_window))
-                        recent.extend(dict(p) for p in params)
+                    batch = self.serve_batch(name,
+                                             [todo[i][1] for i in chunk])
                     for i, result in zip(chunk, batch.results):
                         responses[i] = result
-                    self.requests_served += len(chunk)
-                    self.batches_run += 1
-                    self.simulated_s += batch.simulated_s
-                    self.n_round_trips += batch.n_round_trips
-                    self._after_batch(batch)
         return responses
+
+    def serve_batch(self, name: str,
+                    params: Sequence[Mapping[str, object]]):
+        """Execute ONE already-formed batch of same-program requests through
+        the full serving path — site cache, compiled tier, replay capture,
+        feedback/recompile — and return the BatchResult (``.results`` in
+        request order). ``serve()`` forms fixed-size batches and calls this;
+        a cluster's deadline-driven batch former calls it directly with the
+        batches the router actually coalesced."""
+        exe = self.executable(name)
+        self._requests_by_program[name] = \
+            self._requests_by_program.get(name, 0) + len(params)
+        batch = exe.run_batch(params, site_cache=self.site_cache,
+                              compiler=self.compiler)
+        if self.replay_window:
+            recent = self._recent.setdefault(
+                name, deque(maxlen=self.replay_window))
+            recent.extend(dict(p) for p in params)
+        self.requests_served += len(params)
+        self.batches_run += 1
+        self.simulated_s += batch.simulated_s
+        self.n_round_trips += batch.n_round_trips
+        self._after_batch(batch)
+        return batch
 
     def _after_batch(self, batch) -> None:
         if self.feedback is None:

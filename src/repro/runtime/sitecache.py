@@ -39,10 +39,26 @@ the serving :class:`~repro.core.context.ExecutionContext`, where
 Entries carry the *era* (batch sequence number) they were inserted in, so
 ``run_batch`` can tell in-batch reuse (``site_hits``) from cross-batch /
 cross-program sharing (``shared_site_hits``) in its telemetry.
+
+**Oversize spilling.** A result above ``entry_max_bytes`` would evict most
+of the working set for at most one reuse, so the byte-budgeted cache never
+admits it to memory. With a ``spill_dir`` configured, such results spill to
+a content-addressed disk tier (the same addressing scheme as the plan
+store, :func:`~repro.runtime.store.content_address`) instead of being
+dropped: a later lookup at the same epoch-keyed key reloads the pickled
+result from disk (``spill_hits``), still saving the server round trip. The
+spill index lives in memory keyed identically to resident entries, so
+epoch keys, TTL, and ``invalidate_tables`` govern spilled results exactly
+like resident ones — a spilled result can never be served over rows it
+was not computed from. Without a ``spill_dir`` the pre-existing bypass
+behavior (count and drop) is unchanged.
 """
 
 from __future__ import annotations
 
+import os
+import pickle
+import tempfile
 import time
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
@@ -122,6 +138,42 @@ class _Entry:
         self.nbytes = nbytes
 
 
+class _SpillEntry:
+    """Index record for one oversize result spilled to disk: everything a
+    resident entry carries except the value itself, which lives at
+    ``path``."""
+
+    __slots__ = ("path", "stamp", "era", "tables", "nbytes")
+
+    def __init__(self, path: str, stamp: float, era: int,
+                 tables: Tuple[str, ...], nbytes: int):
+        self.path = path
+        self.stamp = stamp
+        self.era = era
+        self.tables = tables
+        self.nbytes = nbytes
+
+
+def _spill_encode(value):
+    """Picklable form of a cached result. Tables decompose to host numpy
+    columns (device arrays round-trip through host anyway; this keeps the
+    on-disk format jax-version-independent)."""
+    from ..relational.table import Table
+    if isinstance(value, Table):
+        import numpy as np
+        return ("table", value.name, value.schema,
+                {n: np.asarray(c) for n, c in value.columns.items()})
+    return ("pickle", value)
+
+
+def _spill_decode(obj):
+    if obj[0] == "table":
+        from ..relational.table import Table
+        _, name, schema, cols = obj
+        return Table(name, schema, cols)
+    return obj[1]
+
+
 class _SiteStats:
     """Per-site binding-diversity aggregate (one observation per lookup).
 
@@ -167,7 +219,8 @@ class SiteCache:
     def __init__(self, ttl_s: Optional[float] = None,
                  max_entries: int = 4096, clock=time.monotonic,
                  max_bytes: Optional[int] = None,
-                 entry_max_bytes: Optional[int] = None):
+                 entry_max_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
         if ttl_s is not None and ttl_s <= 0:
             raise ValueError("ttl_s must be > 0 (or None: no TTL)")
         if max_entries < 1:
@@ -186,6 +239,11 @@ class SiteCache:
         if entry_max_bytes is None and max_bytes is not None:
             entry_max_bytes = max(1, max_bytes // 4)
         self.entry_max_bytes = entry_max_bytes
+        # oversize disk tier: None keeps the bypass behavior (drop + count)
+        self.spill_dir = spill_dir
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+        self._spilled: "OrderedDict[Tuple, _SpillEntry]" = OrderedDict()
         self.bytes_used = 0
         self._clock = clock
         self._entries: "OrderedDict[Tuple, _Entry]" = OrderedDict()
@@ -198,6 +256,8 @@ class SiteCache:
         self.evictions = 0
         self.invalidations = 0
         self.oversize_bypasses = 0
+        self.spills = 0                 # oversize results written to disk
+        self.spill_hits = 0             # lookups served from the disk tier
         # binding-diversity observation: exact site (telemetry) and table
         # group (what the feedback controller publishes into the context)
         self._site_stats: Dict[str, _SiteStats] = {}
@@ -227,8 +287,7 @@ class SiteCache:
         cross-program share)."""
         entry = self._entries.get(key)
         if entry is None:
-            self.misses += 1
-            return None
+            return self._lookup_spilled(key)
         if self.ttl_s is not None and self._clock() - entry.stamp > self.ttl_s:
             del self._entries[key]
             self.bytes_used -= entry.nbytes
@@ -247,10 +306,74 @@ class SiteCache:
         found = self.lookup(key)
         return None if found is None else found[0]
 
+    def _lookup_spilled(self, key: Tuple) -> Optional[Tuple[object, bool]]:
+        """Disk-tier fallthrough for a key absent from memory. Same TTL and
+        era semantics as resident entries; an unreadable spill file is a
+        plain miss (the value is a cache, never the source of truth)."""
+        sp = self._spilled.get(key)
+        if sp is None:
+            self.misses += 1
+            return None
+        if self.ttl_s is not None and self._clock() - sp.stamp > self.ttl_s:
+            self._drop_spilled(key)
+            self.expirations += 1
+            self.misses += 1
+            return None
+        try:
+            with open(sp.path, "rb") as f:
+                value = _spill_decode(pickle.load(f))
+        except (OSError, pickle.PickleError, EOFError):
+            self._drop_spilled(key)
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.spill_hits += 1
+        cross = sp.era < self.era
+        if cross:
+            self.shared_hits += 1
+        return value, cross
+
+    def _drop_spilled(self, key: Tuple) -> None:
+        sp = self._spilled.pop(key, None)
+        if sp is not None:
+            try:
+                os.unlink(sp.path)
+            except OSError:
+                pass
+
+    def _spill(self, key: Tuple, value, tables: Tuple[str, ...],
+               nbytes: int) -> None:
+        from .store import content_address
+        path = os.path.join(self.spill_dir, content_address(key) + ".pkl")
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.spill_dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(_spill_encode(value), f,
+                            protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)
+        except Exception:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            self.oversize_bypasses += 1   # spill failed: behave as a bypass
+            return
+        self._spilled[key] = _SpillEntry(path, self._clock(), self.era,
+                                         tuple(tables), nbytes)
+        self.spills += 1
+
     def put(self, key: Tuple, value, tables: Tuple[str, ...]) -> None:
-        nbytes = approx_result_bytes(value) if self.max_bytes is not None \
-            else 0
+        nbytes = approx_result_bytes(value) \
+            if (self.max_bytes is not None
+                or self.entry_max_bytes is not None
+                or self.spill_dir is not None) else 0
         if self.entry_max_bytes is not None and nbytes > self.entry_max_bytes:
+            if self.spill_dir is not None:
+                # too big for memory, still worth a round trip: disk tier
+                self._spill(key, value, tables, nbytes)
+                return
             # bypass: caching this result would evict much of the working
             # set for at most one reuse; skipping it only costs a re-fetch
             self.oversize_bypasses += 1
@@ -279,11 +402,17 @@ class SiteCache:
         for k in stale:
             self.bytes_used -= self._entries[k].nbytes
             del self._entries[k]
-        self.invalidations += len(stale)
-        return len(stale)
+        stale_spilled = [k for k, e in self._spilled.items()
+                         if drop & set(e.tables)]
+        for k in stale_spilled:
+            self._drop_spilled(k)
+        self.invalidations += len(stale) + len(stale_spilled)
+        return len(stale) + len(stale_spilled)
 
     def clear(self) -> None:
         self._entries.clear()
+        for k in list(self._spilled):
+            self._drop_spilled(k)
         self.bytes_used = 0
 
     def __len__(self) -> int:
@@ -331,6 +460,9 @@ class SiteCache:
             "bytes_used": self.bytes_used,
             "max_bytes": self.max_bytes,
             "oversize_bypasses": self.oversize_bypasses,
+            "spills": self.spills,
+            "spill_hits": self.spill_hits,
+            "spilled_entries": len(self._spilled),
             "param_sites": len(self._site_stats),
         }
 

@@ -1,0 +1,595 @@
+"""Sharded multi-worker serving cluster (repro.cluster).
+
+Issue acceptance:
+  * ``ClusterRuntime.serve()`` is bit-identical to single-worker
+    ``ServingRuntime.serve()`` for every example program — outputs AND
+    final database state — including under mid-stream writes,
+    ``analyze()``, and drift-triggered plan swaps;
+  * horizontal partitioning: scatter-gather merges (ordered merge /
+    partial-aggregate combine) are bit-exact per query shape; equality on
+    the partition key prunes to one shard; replicated tables never
+    scatter;
+  * per-shard ``site_epoch``/``data_version`` semantics: a direct write to
+    ONE shard moves the coordinator epoch; ``replace_table`` on one shard
+    keeps merged-view order; a mutating program touching rows on two
+    shards still applies exactly;
+  * deadline-driven batch formation (flush on deadline-expiry or
+    max-batch) and the worker's published formed-batch context;
+  * shared plan store warm-starts across workers; merged metrics
+    reconcile bit-for-bit with per-worker sums; triage carries per-shard
+    share and skew columns.
+"""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.api import CobraSession
+from repro.api.lift import lift_program, load_all, update_row
+from repro.cluster import (BatchFormer, ClusterRuntime, GPOS, Partitioner,
+                           Request, Router, ShardedDatabase, uniform_arrivals)
+from repro.obs.trace import Tracer
+from repro.obs.triage import render_triage
+from repro.programs import (make_scan, make_wilos_a, make_wilos_db,
+                            make_wilos_e, make_wilos_f)
+from repro.relational.algebra import (Aggregate, AggSpec, BoolOp, Cmp, Col,
+                                      Join, Limit, Lit, OrderBy, Param,
+                                      Project, Scan, Select)
+from repro.relational.database import DatabaseServer
+from repro.runtime import ServingRuntime
+
+
+def fresh_db(n=1000, seed=5):
+    src = make_wilos_db(n, seed=seed)
+    return DatabaseServer(dict(src.tables), src.model)
+
+
+def sharded(n_shards, n=1000, seed=5):
+    return ShardedDatabase.shard(fresh_db(n, seed), n_shards,
+                                 keys={"tasks": "t_role_id"})
+
+
+def assert_tables_equal(t0, t1, ctx=""):
+    assert t1.schema.names == t0.schema.names, ctx
+    for c in t0.schema.names:
+        a, b = np.asarray(t0.column(c)), np.asarray(t1.column(c))
+        assert a.dtype == b.dtype, (ctx, c, a.dtype, b.dtype)
+        assert np.array_equal(a, b), (ctx, c)
+
+
+# --------------------------------------------------------------------------
+# Partitioner
+# --------------------------------------------------------------------------
+
+class TestPartitioner:
+    def test_split_preserves_rows_and_order(self):
+        db = fresh_db(300)
+        p = Partitioner(4, {"tasks": "t_role_id"})
+        t = db.table("tasks")
+        parts = p.split(t)
+        assert sum(q.nrows for q in parts) == t.nrows
+        for k, q in enumerate(parts):
+            assert q.schema.has(GPOS)
+            roles = np.asarray(q.column("t_role_id"))
+            assert np.all(roles % 4 == k)
+            g = np.asarray(q.column(GPOS))
+            # rows keep their global relative order inside a partition
+            assert np.all(np.diff(g) > 0)
+        # gpos values partition the full index space exactly
+        allg = np.sort(np.concatenate(
+            [np.asarray(q.column(GPOS)) for q in parts]))
+        assert np.array_equal(allg, np.arange(t.nrows))
+
+    def test_gpos_does_not_change_row_bytes(self):
+        db = fresh_db(100)
+        p = Partitioner(2, {"tasks": "t_role_id"})
+        part = p.split(db.table("tasks"))[0]
+        assert part.row_bytes == db.table("tasks").row_bytes
+
+    def test_replicated_tables(self):
+        db = fresh_db(100)
+        p = Partitioner(3, {"tasks": "t_role_id"})
+        copies = p.shard_tables(db.table("roles"))
+        assert len(copies) == 3
+        for c in copies:
+            assert c.nrows == db.table("roles").nrows
+            assert not c.schema.has(GPOS)
+        assert p.shard_of("roles", 5) is None
+        assert p.shard_of("tasks", 7) == 7 % 3
+
+
+# --------------------------------------------------------------------------
+# ShardedDatabase: query bit-identity
+# --------------------------------------------------------------------------
+
+QUERY_SHAPES = [
+    ("scan_part", Scan("tasks"), None),
+    ("scan_repl", Scan("roles"), None),
+    ("prune_lit", Select(Cmp("==", Col("t_role_id"), Lit(7)),
+                         Scan("tasks")), None),
+    ("prune_param", Select(Cmp("==", Col("t_role_id"), Param("rid")),
+                           Scan("tasks")), {"rid": 11}),
+    ("prune_and", Select(BoolOp("and",
+                                Cmp("==", Col("t_role_id"), Lit(5)),
+                                Cmp("<", Col("t_state"), Lit(3))),
+                         Scan("tasks")), None),
+    ("scatter_select", Select(Cmp("<", Col("t_state"), Lit(2)),
+                              Scan("tasks")), None),
+    ("scatter_project", Project(("t_id", "t_state"),
+                                Select(Cmp("<", Col("t_state"), Lit(2)),
+                                       Scan("tasks"))), None),
+    ("join_part_repl", Join(Scan("tasks"), Scan("roles"),
+                            "t_role_id", "r_id"), None),
+    ("join_repl_part", Join(Scan("roles"), Scan("tasks"),
+                            "r_id", "t_role_id"), None),
+    ("agg_grouped_combinable",
+     Aggregate(("t_state",), (AggSpec("count", None, "n"),
+                              AggSpec("min", "t_id", "lo"),
+                              AggSpec("max", "t_id", "hi"),
+                              AggSpec("sum", "t_role_id", "s")),
+               Scan("tasks")), None),
+    ("agg_grouped_float_sum",
+     Aggregate(("t_state",), (AggSpec("sum", "t_hours", "h"),),
+               Scan("tasks")), None),
+    ("agg_global_combinable",
+     Aggregate((), (AggSpec("count", None, "n"),
+                    AggSpec("max", "t_id", "hi")), Scan("tasks")), None),
+    ("agg_global_float",
+     Aggregate((), (AggSpec("sum", "t_hours", "h"),
+                    AggSpec("avg", "t_hours", "a")), Scan("tasks")), None),
+    ("agg_empty_input",
+     Aggregate((), (AggSpec("sum", "t_hours", "h"),),
+               Select(Cmp("==", Col("t_state"), Lit(99)),
+                      Scan("tasks"))), None),
+    ("orderby_limit", Limit(10, OrderBy(("t_state", "t_id"),
+                                        Scan("tasks"))), None),
+]
+
+
+class TestShardedQueries:
+    @pytest.mark.parametrize("n_shards", [1, 2, 4])
+    @pytest.mark.parametrize(
+        "tag,query,params", QUERY_SHAPES, ids=[s[0] for s in QUERY_SHAPES])
+    def test_bit_identical_to_unsharded(self, n_shards, tag, query, params):
+        base = fresh_db()
+        sh = sharded(n_shards)
+        r0, _, _ = base.run(query, params)
+        r1, _, _ = sh.run(query, params)
+        assert_tables_equal(r0, r1, tag)
+        assert not any(c.endswith(GPOS) for c in r1.schema.names)
+
+    def test_prune_routes_to_single_shard(self):
+        sh = sharded(4)
+        q = Select(Cmp("==", Col("t_role_id"), Lit(6)), Scan("tasks"))
+        sh.run(q)
+        assert sh.pruned_queries == 1
+        assert sh.scattered_queries == 0
+        assert sh.shard_queries[6 % 4] == 1
+
+    def test_replicated_only_never_scatters(self):
+        sh = sharded(4)
+        sh.run(Scan("roles"))
+        assert sh.replicated_queries == 1
+        assert sh.scattered_queries == 0
+
+    def test_float_sum_never_partial_combines(self):
+        # float addition is order-sensitive: sum(t_hours) must gather the
+        # child rows and fold them in the unsharded order, not combine
+        # per-shard partials
+        sh = sharded(4)
+        node = Aggregate((), (AggSpec("sum", "t_hours", "h"),),
+                         Scan("tasks"))
+        assert not sh._combinable(node)
+        intnode = Aggregate((), (AggSpec("sum", "t_role_id", "s"),),
+                            Scan("tasks"))
+        assert sh._combinable(intnode)
+
+    def test_estimates_match_unsharded(self):
+        base = fresh_db()
+        sh = sharded(4)
+        q = Select(Cmp("==", Col("t_role_id"), Lit(3)), Scan("tasks"))
+        e0, e1 = base.estimate(q), sh.estimate(q)
+        assert e0 == e1
+        assert base.stats_fingerprint(["tasks", "roles"]) == \
+            sh.stats_fingerprint(["tasks", "roles"])
+
+
+# --------------------------------------------------------------------------
+# ShardedDatabase: writes, per-shard epochs (issue satellite)
+# --------------------------------------------------------------------------
+
+class TestShardedWrites:
+    def test_direct_shard_write_moves_coordinator_epoch(self):
+        sh = sharded(4)
+        e0 = sh.site_epoch(("tasks",))
+        r0 = sh.site_epoch(("roles",))
+        dv0 = sh.data_version("tasks")
+        sv0 = sh.shard_versions("tasks")
+        part = sh.shards[1].table("tasks")
+        sh.shards[1].replace_table(part.head(max(1, part.nrows // 2)))
+        sv1 = sh.shard_versions("tasks")
+        # only shard 1's data version moved...
+        assert sv1[1][1] == sv0[1][1] + 1
+        assert [v for i, v in enumerate(sv1) if i != 1] == \
+            [v for i, v in enumerate(sv0) if i != 1]
+        # ...and the summed coordinator epoch moved with it
+        assert sh.data_version("tasks") == dv0 + 1
+        assert sh.site_epoch(("tasks",)) != e0
+        # an untouched table's epoch stays put
+        assert sh.site_epoch(("roles",)) == r0
+        # the merged view reflects the shrunken shard
+        roles = np.asarray(sh.table("tasks").column("t_role_id"))
+        assert np.count_nonzero(roles % 4 == 1) == max(1, part.nrows // 2)
+
+    def test_replace_table_on_one_shard_remerges_in_order(self):
+        sh = sharded(2)
+        before = sh.table("tasks")
+        part = sh.shards[0].table("tasks")
+        keep = np.arange(part.nrows // 2)
+        sh.shards[0].replace_table(part.take(keep))
+        after = sh.table("tasks")
+        assert after.nrows == before.nrows - (part.nrows - len(keep))
+        # surviving rows keep their original relative order
+        ids_before = list(np.asarray(before.column("t_id")))
+        ids_after = list(np.asarray(after.column("t_id")))
+        it = iter(ids_before)
+        assert all(any(x == y for y in it) for x in ids_after)
+
+    def test_coordinator_replace_keeps_stats_stale(self):
+        base = fresh_db()
+        sh = sharded(4)
+        q = Scan("tasks")
+        small = base.table("tasks").head(50)
+        base.replace_table(small)
+        sh.replace_table(small)
+        # estimates still from the OLD stats — identically stale
+        assert base.estimate(q) == sh.estimate(q)
+        r0, _, _ = base.run(q)
+        r1, _, _ = sh.run(q)
+        assert_tables_equal(r0, r1, "post-replace")
+        base.analyze("tasks")
+        sh.analyze("tasks")
+        assert base.estimate(q) == sh.estimate(q)
+        assert base.stats_fingerprint(["tasks"]) == \
+            sh.stats_fingerprint(["tasks"])
+
+    def test_mutating_program_touching_two_shards(self):
+        # one program whose UPDATEs key on t_role_id values living on
+        # DIFFERENT shards: every row must land exactly as unsharded
+        def W2():
+            for x in load_all("roles"):
+                update_row("tasks", "t_state", x.r_rank,
+                           "t_role_id", x.r_id)
+        prog = lift_program(W2)
+
+        base = fresh_db()
+        CobraSession(base).compile(prog).run()
+
+        sh = sharded(2)
+        CobraSession(sh).compile(prog).run()
+        assert_tables_equal(base.table("tasks"), sh.table("tasks"),
+                            "two-shard update")
+        # the write re-partitioned: each shard holds only its own keys
+        for k, s in enumerate(sh.shards):
+            roles = np.asarray(s.table("tasks").column("t_role_id"))
+            assert np.all(roles % 2 == k)
+
+
+# --------------------------------------------------------------------------
+# Router + BatchFormer
+# --------------------------------------------------------------------------
+
+class TestRouter:
+    def test_affinity_routes_by_key_identity(self):
+        r = Router(4, {"W_E": "worklist"})
+        assert r.route("W_E", {"worklist": [6]}) == 6 % 4
+        assert r.route("W_E", {"worklist": [6, 99]}) == 6 % 4
+        assert r.route("W_E", {"worklist": [9]}) == 9 % 4
+        assert r.affinity_routed == 3
+
+    def test_hash_routing_is_deterministic(self):
+        a = Router(4)
+        b = Router(4)
+        for i in range(20):
+            params = {"x": i, "y": [i, i + 1]}
+            assert a.route("P", params) == b.route("P", params)
+
+    def test_skew_measures_hot_worker(self):
+        r = Router(4, {"P": "k"})
+        for _ in range(12):
+            r.route("P", {"k": 8})   # 8 % 4 == 0: everything on worker 0
+        assert r.skew() == pytest.approx(4.0)
+        u = Router(4, {"P": "k"})
+        for i in range(12):
+            u.route("P", {"k": i})
+        assert u.skew() == pytest.approx(1.0)
+
+
+class TestBatchFormer:
+    def test_burst_flushes_full_batches(self):
+        f = BatchFormer(deadline_s=0.01, max_batch=8)
+        reqs = [Request(i, "P", {}, worker=0) for i in range(20)]
+        batches = f.form(reqs)
+        assert [b.size for b in batches] == [8, 8, 4]
+        assert [b.reason for b in batches] == ["full", "full", "deadline"]
+        # request order is preserved through forming
+        assert [r.index for b in batches for r in b.requests] == \
+            list(range(20))
+
+    def test_sparse_arrivals_flush_on_deadline(self):
+        f = BatchFormer(deadline_s=0.05, max_batch=64)
+        arr = uniform_arrivals(10, rps=50.0)   # 20ms apart
+        reqs = [Request(i, "P", {}, worker=0, arrival_s=arr[i])
+                for i in range(10)]
+        batches = f.form(reqs)
+        assert all(b.reason == "deadline" for b in batches)
+        assert all(b.size < 64 for b in batches)
+        assert sum(b.size for b in batches) == 10
+        # a queue's flush time is its oldest member + deadline
+        assert batches[0].flush_s == pytest.approx(arr[0] + 0.05)
+
+    def test_forming_is_deterministic(self):
+        reqs = [Request(i, "PQ"[i % 2], {}, worker=i % 3,
+                        arrival_s=0.001 * (i % 5)) for i in range(30)]
+        a = BatchFormer(deadline_s=0.002, max_batch=4).form(reqs)
+        b = BatchFormer(deadline_s=0.002, max_batch=4).form(reqs)
+        assert [(x.worker, x.program, x.flush_s, x.reason,
+                 tuple(r.index for r in x.requests)) for x in a] == \
+               [(x.worker, x.program, x.flush_s, x.reason,
+                 tuple(r.index for r in x.requests)) for x in b]
+
+
+# --------------------------------------------------------------------------
+# ClusterRuntime: the non-negotiable invariant
+# --------------------------------------------------------------------------
+
+def example_stream(n=30):
+    reqs = []
+    for i in range(n):
+        reqs.append(("W_E", {"worklist": [i % 7]}))
+        if i % 10 == 0:
+            reqs.append(("W_F", {}))
+        if i % 11 == 3:
+            reqs.append(("W_A", {}))       # mid-stream writes
+        if i % 13 == 6:
+            reqs.append(("SCAN", {}))      # while-loop + early exit
+    return reqs
+
+
+def serve_single(reqs, batch_size=8, mid=None):
+    db = fresh_db()
+    rt = ServingRuntime(CobraSession(db), batch_size=batch_size)
+    for mk in (make_wilos_e, make_wilos_f, make_wilos_a, make_scan):
+        rt.register(mk())
+    if mid is None:
+        return rt.serve(reqs), db, rt
+    out = rt.serve(reqs[:len(reqs) // 2])
+    mid(db)
+    out += rt.serve(reqs[len(reqs) // 2:])
+    return out, db, rt
+
+
+def serve_cluster(reqs, n_workers, store=None, mid=None, **kw):
+    cl = ClusterRuntime(fresh_db(), n_workers=n_workers,
+                        partition_keys={"tasks": "t_role_id"},
+                        affinity={"W_E": "worklist"},
+                        deadline_s=0.01, max_batch=8, store=store, **kw)
+    for mk in (make_wilos_e, make_wilos_f, make_wilos_a, make_scan):
+        cl.register(mk())
+    if mid is None:
+        return cl.serve(reqs), cl
+    out = cl.serve(reqs[:len(reqs) // 2])
+    mid(cl.db)
+    out += cl.serve(reqs[len(reqs) // 2:])
+    return out, cl
+
+
+def assert_bit_identical(r_single, db_single, r_cluster, cl):
+    assert len(r_single) == len(r_cluster)
+    for i, (a, b) in enumerate(zip(r_single, r_cluster)):
+        assert a.outputs == b.outputs, f"request {i} outputs diverged"
+    for name in db_single.tables:
+        assert_tables_equal(db_single.table(name), cl.db.table(name), name)
+
+
+class TestClusterBitIdentity:
+    @pytest.mark.parametrize("n_workers", [1, 2, 4])
+    def test_mixed_stream_with_writes(self, n_workers):
+        reqs = example_stream()
+        r1, db1, _ = serve_single(reqs)
+        r2, cl = serve_cluster(reqs, n_workers)
+        assert_bit_identical(r1, db1, r2, cl)
+
+    def test_mid_stream_analyze(self):
+        reqs = example_stream(24)
+        r1, db1, _ = serve_single(reqs, mid=lambda db: db.analyze())
+        r2, cl = serve_cluster(reqs, 2, mid=lambda db: db.analyze())
+        assert_bit_identical(r1, db1, r2, cl)
+
+    def test_drift_triggered_replans(self):
+        # a mid-stream bulk replace (no ANALYZE) makes every estimate
+        # stale; the feedback controllers detect the drift, re-analyze,
+        # and may swap plans — outputs must not budge
+        def grow(db):
+            t = db.table("tasks")
+            db.replace_table(t.take(np.tile(np.arange(t.nrows), 4)))
+
+        reqs = example_stream(24)
+        r1, db1, rt1 = serve_single(reqs, mid=grow)
+        r2, cl = serve_cluster(reqs, 2, mid=grow)
+        assert_bit_identical(r1, db1, r2, cl)
+        moved = rt1.recompiles + sum(w.recompiles for w in cl.workers)
+        assert moved > 0  # the drift machinery actually fired
+
+    def test_responses_in_request_order(self):
+        reqs = [("W_E", {"worklist": [i % 5]}) for i in range(17)]
+        r2, cl = serve_cluster(reqs, 4)
+        db = fresh_db()
+        session = CobraSession(db)
+        exe = session.compile(make_wilos_e())
+        for i, res in enumerate(r2):
+            assert res.outputs == exe.run(worklist=[i % 5]).outputs
+
+
+# --------------------------------------------------------------------------
+# ClusterRuntime: formed batches drive the serving context
+# --------------------------------------------------------------------------
+
+class TestFormedBatchContext:
+    def test_worker_publishes_observed_batch_size(self):
+        cl = ClusterRuntime(fresh_db(), n_workers=1,
+                            partition_keys={"tasks": "t_role_id"},
+                            deadline_s=0.01, max_batch=64)
+        cl.register(make_wilos_e())
+        # a sparse stream forms batches of 1: the worker must stop costing
+        # plans for batch 64 and republish the observed size
+        reqs = [("W_E", {"worklist": [i]}) for i in range(6)]
+        cl.serve(reqs, arrivals=uniform_arrivals(6, rps=10.0))
+        w = cl.workers[0]
+        assert w.batch_publishes >= 1
+        assert w._base_context.batch_size < 64
+        h = w.metrics.histogram("formed_batch_size")
+        assert h is not None and h["count"] >= 1
+
+    def test_burst_forms_max_batches(self):
+        cl = ClusterRuntime(fresh_db(), n_workers=1,
+                            partition_keys={"tasks": "t_role_id"},
+                            deadline_s=0.01, max_batch=16)
+        cl.register(make_wilos_e())
+        reqs = [("W_E", {"worklist": [3]}) for _ in range(32)]
+        cl.serve(reqs)
+        assert cl.former.flushes_full == 2
+        assert cl.workers[0]._formed_sizes.count(16) == 2
+
+
+class TestFormationPlanFlip:
+    """The deadline-driven former reaches the batch-64 SCAN plan flip with
+    no fixed-size batch configuration anywhere — and the default
+    bit-identity guard vetoes exactly that flip, because the batch-1 and
+    batch-64 SCAN plans differ in float low bits."""
+
+    def _build(self, **kw):
+        from repro.api import OptimizerConfig
+        from repro.core import CostCatalog
+        from repro.relational.database import SLOW_REMOTE
+        return ClusterRuntime(fresh_db(), n_workers=1,
+                              partition_keys={"tasks": "t_role_id"},
+                              deadline_s=0.01, max_batch=64,
+                              initial_batch_size=1,
+                              catalog=CostCatalog(SLOW_REMOTE),
+                              config=OptimizerConfig.preset("paper-exp1-3"),
+                              **kw)
+
+    def test_burst_reaches_batch64_flip(self):
+        # guard off + feedback off isolates the formation->publish->
+        # recompile mechanism: the worker starts costed for batch 1 (the
+        # per-iteration query plan), the burst forms one batch of 64, the
+        # published context flips the plan to the amortized prefetch
+        cl = self._build(bit_guard_swaps=False, feedback=False)
+        cl.register(make_scan())
+        w = cl.workers[0]
+        assert w._base_context.batch_size == 1       # initial_batch_size
+        assert "prefetch" not in repr(w.executable("SCAN").program.body)
+        cl.serve([("SCAN", {}) for _ in range(64)])
+        assert cl.former.flushes_full == 1
+        assert w.batch_publishes >= 1
+        assert w._base_context.batch_size == 64
+        assert "prefetch" in repr(w.executable("SCAN").program.body)
+
+    def test_default_bit_guard_vetoes_divergent_flip(self):
+        # same burst under defaults: the publish still happens, but the
+        # guard replays the candidate and vetoes the swap (the prefetch
+        # plan's float64 client fold differs from the query plan's float32
+        # DB-side SUM in the low bits), so outputs stay bit-identical to
+        # batch-1 single-worker serving
+        from repro.api import OptimizerConfig
+        from repro.core import CostCatalog
+        from repro.relational.database import SLOW_REMOTE
+        cl = self._build()
+        cl.register(make_scan())
+        w = cl.workers[0]
+        out = cl.serve([("SCAN", {}) for _ in range(64)])
+        assert w.bit_vetoes >= 1
+        assert w.swaps_rejected >= 1
+        assert "prefetch" not in repr(w.executable("SCAN").program.body)
+        rt = ServingRuntime(
+            CobraSession(fresh_db(), catalog=CostCatalog(SLOW_REMOTE),
+                         config=OptimizerConfig.preset("paper-exp1-3")),
+            batch_size=1)
+        rt.register(make_scan())
+        ref = rt.serve([("SCAN", {}) for _ in range(64)])
+        assert [r.outputs for r in out] == [r.outputs for r in ref]
+
+
+# --------------------------------------------------------------------------
+# Shared plan store, metrics aggregation, triage, tracing
+# --------------------------------------------------------------------------
+
+class TestClusterObservability:
+    def test_shared_store_warm_starts_other_workers(self):
+        with tempfile.TemporaryDirectory() as d:
+            cl = ClusterRuntime(fresh_db(), n_workers=4,
+                                partition_keys={"tasks": "t_role_id"},
+                                store=d)
+            cl.register(make_wilos_e())
+            # the first worker searches; the shared store hands the same
+            # plan to the remaining three
+            assert cl.store.hits >= 3
+
+    def test_metrics_reconcile_with_worker_sums(self):
+        r2, cl = serve_cluster(example_stream(20), 3)
+        snap = cl.metrics_snapshot()
+        assert snap["workers_serving_requests_served"] == \
+            sum(w.requests_served for w in cl.workers)
+        assert snap["workers_serving_batches_run"] == \
+            sum(w.batches_run for w in cl.workers)
+        assert snap["workers_serving_simulated_s"] == pytest.approx(
+            sum(w.simulated_s for w in cl.workers))
+        assert snap["cluster_requests_served"] == len(r2)
+        # structured dumps stay associative over workers
+        from repro.obs.metrics import combine_snapshots
+        dumps = cl.metrics_dump()
+        left = combine_snapshots(combine_snapshots(dumps[0], dumps[1]),
+                                 dumps[2])
+        right = combine_snapshots(dumps[0],
+                                  combine_snapshots(dumps[1], dumps[2]))
+        assert left == right
+
+    def test_triage_flags_hot_shard_under_skew(self):
+        cl = ClusterRuntime(fresh_db(), n_workers=4,
+                            partition_keys={"tasks": "t_role_id"},
+                            affinity={"W_E": "worklist"}, max_batch=8)
+        cl.register(make_wilos_e())
+        # every key ≡ 0 (mod 4): all traffic piles onto worker 0
+        cl.serve([("W_E", {"worklist": [4 * (i % 3)]}) for i in range(24)])
+        rows = cl.triage()
+        row = next(r for r in rows if r.name == "W_E")
+        assert row.shard_requests == (24, 0, 0, 0)
+        assert row.hot_shard == 0
+        assert row.skew == pytest.approx(4.0)
+        rendered = render_triage(rows)
+        assert "hot" in rendered and "skew" in rendered
+        assert "24/0/0/0" in rendered
+
+    def test_tracer_sees_flush_and_scatter_spans(self):
+        tracer = Tracer()
+        cl = ClusterRuntime(fresh_db(), n_workers=2,
+                            partition_keys={"tasks": "t_role_id"},
+                            affinity={"W_E": "worklist"},
+                            max_batch=4, tracer=tracer)
+        cl.register(make_wilos_e())
+        cl.serve([("W_E", {"worklist": [i]}) for i in range(8)])
+        names = {s.name for s in tracer.spans()}
+        assert "cluster_serve" in names
+        assert "flush" in names
+        assert "scatter-gather" in names
+
+    def test_telemetry_shape(self):
+        r2, cl = serve_cluster(example_stream(12), 2)
+        t = cl.telemetry()
+        assert t["requests_served"] == len(r2)
+        assert len(t["worker_requests"]) == 2
+        assert sum(t["worker_requests"]) == len(r2)
+        assert t["router_routed"] == len(r2)
+        assert t["makespan_s"] > 0

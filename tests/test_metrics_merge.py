@@ -1,0 +1,197 @@
+"""Multi-worker metrics merging (repro.obs.metrics).
+
+``combine_snapshots`` is the unit a cluster folds per-worker registries
+with, so its algebra has to be exact: associative, commutative, and
+lossless (the combined dump equals the dump of one registry that observed
+every worker's samples). The hypothesis property tests pin
+
+    combine(a, combine(b, c)) == combine(combine(a, b), c)
+
+over randomized registries with disjoint and overlapping label sets;
+hypothesis is an optional dev dependency, so a seeded deterministic
+generator runs the same properties in tier-1 regardless.
+"""
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (MetricsRegistry, combine_snapshots,
+                               merge_snapshots)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dev dependency — see pyproject.toml
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------------
+# deterministic registry generator (integer-valued, so every combine is
+# bit-exact and associativity holds with == rather than approx)
+# --------------------------------------------------------------------------
+
+NAMES = ["requests", "hits", "evictions", "bytes", "spills"]
+LABELS = [{}, {"worker": 0}, {"worker": 1}, {"table": "tasks"}]
+
+
+def random_registry(rng) -> MetricsRegistry:
+    reg = MetricsRegistry()
+    for name in NAMES:
+        for labels in LABELS:
+            if rng.random() < 0.4:
+                reg.inc(name, int(rng.integers(0, 1000)), **labels)
+            if rng.random() < 0.3:
+                reg.gauge("g_" + name, int(rng.integers(0, 1000)), **labels)
+            for _ in range(int(rng.integers(0, 4))):
+                reg.observe("h_" + name, int(rng.integers(-50, 50)),
+                            **labels)
+    return reg
+
+
+def registries(seed, k=3):
+    rng = np.random.default_rng(seed)
+    return [random_registry(rng) for _ in range(k)]
+
+
+class TestCombineSeeded:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+    def test_associative(self, seed):
+        a, b, c = (r.dump() for r in registries(seed))
+        left = combine_snapshots(combine_snapshots(a, b), c)
+        right = combine_snapshots(a, combine_snapshots(b, c))
+        assert left == right
+        assert combine_snapshots(a, b, c) == left
+
+    @pytest.mark.parametrize("seed", [10, 11, 12, 13])
+    def test_commutative(self, seed):
+        a, b = (r.dump() for r in registries(seed, k=2))
+        assert combine_snapshots(a, b) == combine_snapshots(b, a)
+
+    def test_identity(self):
+        (a,) = (r.dump() for r in registries(99, k=1))
+        empty = MetricsRegistry().dump()
+        assert combine_snapshots(a, empty)["counters"] == a["counters"]
+        assert combine_snapshots(a, empty)["hists"] == a["hists"]
+
+    @pytest.mark.parametrize("seed", [20, 21, 22])
+    def test_lossless_vs_single_registry(self, seed):
+        # combining N dumps == one registry that saw every sample
+        rng = np.random.default_rng(seed)
+        samples = [(n, l, int(rng.integers(-100, 100)))
+                   for n in NAMES for l in range(2)
+                   for _ in range(int(rng.integers(1, 5)))]
+        split = [MetricsRegistry() for _ in range(3)]
+        whole = MetricsRegistry()
+        for i, (name, lab, v) in enumerate(samples):
+            split[i % 3].inc(name, v, worker=lab)
+            split[i % 3].observe("h_" + name, v, worker=lab)
+            whole.inc(name, v, worker=lab)
+            whole.observe("h_" + name, v, worker=lab)
+        combined = combine_snapshots(*(r.dump() for r in split))
+        assert combined["counters"] == whole.dump()["counters"]
+        assert combined["hists"] == whole.dump()["hists"]
+
+    def test_disjoint_label_sets_union(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.inc("req", 3, worker=0)
+        b.inc("req", 5, worker=1)
+        out = combine_snapshots(a.dump(), b.dump())
+        assert out["counters"] == {'req{worker=0}': 3, 'req{worker=1}': 5}
+
+    def test_nonnumeric_gauges_first_wins(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.gauge("backend", "jax")
+        b.gauge("backend", "numpy")
+        b.gauge("entries", 7)
+        out = combine_snapshots(a.dump(), b.dump())
+        assert out["gauges"]["backend"] == "jax"
+        assert out["gauges"]["entries"] == 7
+
+    def test_flat_snapshot_rejected(self):
+        reg = MetricsRegistry()
+        reg.inc("x")
+        reg.observe("lat", 1.0)
+        with pytest.raises(TypeError):
+            combine_snapshots(reg.dump(), reg.snapshot())
+
+    def test_ingest_round_trips_structured_dump(self):
+        src = registries(42, k=1)[0]
+        dst = MetricsRegistry()
+        dst.ingest(src.dump())
+        assert dst.dump() == src.dump()
+        # and ingesting a combined dump reproduces the combined registry
+        a, b = (r.dump() for r in registries(43, k=2))
+        agg = MetricsRegistry()
+        agg.ingest(combine_snapshots(a, b))
+        assert agg.dump() == combine_snapshots(a, b)
+
+    def test_merge_hist_equals_observing_samples(self):
+        xs = [3, -1, 4, 1, 5, -9, 2, 6]
+        by_obs, by_merge = MetricsRegistry(), MetricsRegistry()
+        for x in xs:
+            by_obs.observe("lat", x)
+        by_merge.merge_hist("lat", {"count": 3, "sum": sum(xs[:3]),
+                                    "min": min(xs[:3]), "max": max(xs[:3])})
+        by_merge.merge_hist("lat", {"count": 5, "sum": sum(xs[3:]),
+                                    "min": min(xs[3:]), "max": max(xs[3:])})
+        assert by_merge.histogram("lat") == by_obs.histogram("lat")
+        by_merge.merge_hist("lat", {"count": 0, "sum": 99, "min": 0,
+                                    "max": 0})   # empty hists are no-ops
+        assert by_merge.histogram("lat") == by_obs.histogram("lat")
+
+    def test_namespacing_merge_is_distinct_from_combine(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.inc("req", 2)
+        b.inc("req", 3)
+        named = merge_snapshots(w0=a.snapshot(), w1=b.snapshot())
+        assert named == {"w0_req": 2, "w1_req": 3}
+
+
+# --------------------------------------------------------------------------
+# hypothesis property tests (skipped when hypothesis is not installed)
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    label_sets = st.sampled_from([(), (("worker", 0),), (("worker", 1),),
+                                  (("table", "tasks"), ("worker", 2))])
+
+    @st.composite
+    def registry_dumps(draw):
+        reg = MetricsRegistry()
+        for _ in range(draw(st.integers(0, 8))):
+            name = draw(st.sampled_from(NAMES))
+            labels = dict(draw(label_sets))
+            kind = draw(st.integers(0, 2))
+            v = draw(st.integers(-1000, 1000))
+            if kind == 0:
+                reg.inc(name, v, **labels)
+            elif kind == 1:
+                reg.gauge("g_" + name, v, **labels)
+            else:
+                reg.observe("h_" + name, v, **labels)
+        return reg.dump()
+
+    class TestCombineProperties:
+        @settings(max_examples=200, deadline=None)
+        @given(registry_dumps(), registry_dumps(), registry_dumps())
+        def test_associative(self, a, b, c):
+            assert combine_snapshots(a, combine_snapshots(b, c)) == \
+                combine_snapshots(combine_snapshots(a, b), c)
+
+        @settings(max_examples=200, deadline=None)
+        @given(registry_dumps(), registry_dumps())
+        def test_commutative(self, a, b):
+            assert combine_snapshots(a, b) == combine_snapshots(b, a)
+
+        @settings(max_examples=100, deadline=None)
+        @given(registry_dumps())
+        def test_empty_identity(self, a):
+            out = combine_snapshots(a, MetricsRegistry().dump())
+            assert out["counters"] == a["counters"]
+            assert out["hists"] == a["hists"]
+else:
+    @pytest.mark.skip(reason="optional dev dependency (pip install "
+                             "hypothesis) — see pyproject.toml")
+    def test_hypothesis_properties():
+        pass

@@ -541,3 +541,124 @@ class TestByteBudget:
         stats = rt.site_cache.stats()
         assert stats["bytes_used"] > 0
         assert stats["bytes_used"] <= 1 << 20
+
+
+# --------------------------------------------------------------------------
+# Oversize-entry spilling to the content-addressed disk tier
+# --------------------------------------------------------------------------
+
+class TestOversizeSpilling:
+    """An oversize result spills to disk instead of bypassing: the round
+    trip is still saved (spill_hits), while epoch keys, TTL, and eager
+    invalidation govern the disk tier exactly like resident entries."""
+
+    def _key(self, i=0):
+        return ("origin", f"q{i}", (), (("t", 1, 1),))
+
+    def _cache(self, tmp_path, **kw):
+        kw.setdefault("entry_max_bytes", 256)
+        return SiteCache(spill_dir=str(tmp_path / "spill"), **kw)
+
+    def test_oversize_put_spills_and_serves_from_disk(self, tmp_path):
+        cache = self._cache(tmp_path)
+        big = np.arange(1000, dtype=np.float64)
+        cache.put(self._key(), big, ("t",))
+        s = cache.stats()
+        assert s["spills"] == 1 and s["spilled_entries"] == 1
+        assert s["entries"] == 0          # never admitted to memory
+        assert len(list((tmp_path / "spill").iterdir())) == 1
+        found = cache.lookup(self._key())
+        assert found is not None
+        value, crossed = found
+        assert np.array_equal(value, big) and value.dtype == big.dtype
+        assert crossed is False
+        s = cache.stats()
+        assert s["spill_hits"] == 1 and s["hits"] == 1
+
+    def test_table_round_trips_bit_identical(self, tmp_path):
+        cache = self._cache(tmp_path)
+        t = make_wilos_db(200, ratio=10).table("tasks")
+        cache.put(self._key(), t, ("tasks",))
+        assert cache.stats()["spills"] == 1
+        back = cache.get(self._key())
+        assert back.name == t.name
+        assert back.schema.names == t.schema.names
+        for c in t.schema.names:
+            a, b = np.asarray(t.column(c)), np.asarray(back.column(c))
+            assert a.dtype == b.dtype and np.array_equal(a, b)
+
+    def test_small_entries_stay_resident(self, tmp_path):
+        cache = self._cache(tmp_path, max_bytes=1 << 20)
+        cache.put(self._key(), np.zeros(4, np.float32), ("t",))
+        s = cache.stats()
+        assert s["entries"] == 1 and s["spills"] == 0
+
+    def test_without_spill_dir_oversize_still_bypasses(self):
+        cache = SiteCache(entry_max_bytes=256)
+        cache.put(self._key(), np.arange(1000, dtype=np.float64), ("t",))
+        s = cache.stats()
+        assert s["oversize_bypasses"] == 1 and s["spills"] == 0
+        assert cache.get(self._key()) is None
+
+    def test_spilled_entries_honor_ttl(self, tmp_path):
+        clk = FakeClock()
+        cache = self._cache(tmp_path, ttl_s=5.0, clock=clk)
+        cache.put(self._key(), np.arange(1000, dtype=np.float64), ("t",))
+        clk.now = 6.0
+        assert cache.get(self._key()) is None
+        s = cache.stats()
+        assert s["expirations"] == 1 and s["spill_hits"] == 0
+        assert s["spilled_entries"] == 0  # index dropped with the file
+        assert list((tmp_path / "spill").iterdir()) == []
+
+    def test_invalidate_tables_unlinks_spilled_files(self, tmp_path):
+        cache = self._cache(tmp_path)
+        cache.put(self._key(0), np.arange(1000, dtype=np.float64), ("t",))
+        cache.put(("o", "q_other", (), ()),
+                  np.arange(1000, dtype=np.float64), ("other",))
+        assert cache.invalidate_tables(["t"]) == 1
+        assert cache.stats()["spilled_entries"] == 1
+        assert len(list((tmp_path / "spill").iterdir())) == 1
+        assert cache.get(self._key(0)) is None
+        assert cache.get(("o", "q_other", (), ())) is not None
+
+    def test_clear_drops_the_disk_tier(self, tmp_path):
+        cache = self._cache(tmp_path)
+        for i in range(3):
+            cache.put(self._key(i), np.arange(1000, dtype=np.float64),
+                      ("t",))
+        cache.clear()
+        assert cache.stats()["spilled_entries"] == 0
+        assert list((tmp_path / "spill").iterdir()) == []
+
+    def test_cross_era_spill_hit_counts_as_shared(self, tmp_path):
+        cache = self._cache(tmp_path)
+        cache.put(self._key(), np.arange(1000, dtype=np.float64), ("t",))
+        cache.new_era()
+        value, crossed = cache.lookup(self._key())
+        assert crossed is True
+        assert cache.stats()["shared_hits"] == 1
+
+    def test_spill_failure_degrades_to_bypass(self, tmp_path):
+        cache = self._cache(tmp_path)
+        import shutil
+        shutil.rmtree(tmp_path / "spill")   # yank the disk tier away
+        cache.put(self._key(), np.arange(1000, dtype=np.float64), ("t",))
+        s = cache.stats()
+        assert s["oversize_bypasses"] == 1 and s["spills"] == 0
+        assert cache.get(self._key()) is None
+
+    def test_serving_runtime_threads_spill_dir(self, tmp_path):
+        session = paper_session(make_orders_customer_db(400, 40), FAST_LOCAL)
+        rt = ServingRuntime(session, batch_size=4,
+                            site_cache=SiteCache(
+                                entry_max_bytes=64,
+                                spill_dir=str(tmp_path / "s")))
+        rt.register(make_p0())
+        rt.serve([("P0", {})] * 8)
+        s = rt.site_cache.stats()
+        # every site result is oversize for a 64-byte bound: all spilled,
+        # and repeat batches hit the disk tier instead of the server
+        assert s["spills"] >= 1
+        assert s["spill_hits"] >= 1
+        assert s["oversize_bypasses"] == 0
