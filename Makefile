@@ -2,7 +2,7 @@ PYTHON ?= python
 PYTHONPATH := src
 
 .PHONY: test test-fast lint bench-smoke bench bench-batch bench-serving \
-	bench-compiled bench-obs bench-cluster examples
+	bench-compiled bench-obs bench-cluster bench-stats examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -63,6 +63,16 @@ bench-obs:
 # BENCH_runtime.json (the full bench-batch run emits it too)
 bench-cluster:
 	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=cluster \
+		$(PYTHON) -m benchmarks.run bench_runtime
+
+# histogram statistics subsystem: the histogram-vs-scalar selectivity
+# plan flip (bit-identical outputs either way), per-site q-error before
+# and after the feedback controller's targeted re-analyze, and ANALYZE
+# overhead (histograms vs scalar cardinalities) at three table sizes;
+# the `stats` section lands in BENCH_runtime.json (the full bench-batch
+# run and the bench-smoke CI pass emit it too)
+bench-stats:
+	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=stats \
 		$(PYTHON) -m benchmarks.run bench_runtime
 
 examples:

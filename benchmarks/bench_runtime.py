@@ -46,6 +46,13 @@ serving plan flips from the per-iteration query to the batch-64 prefetch
 WITHOUT any fixed-size batch config — and skewed vs uniform affinity-key
 routing (hot-shard makespan + triage skew flag).
 
+The ``stats`` section (``make bench-stats``; ``REPRO_BENCH_ONLY=stats``
+runs just it) exercises the histogram statistics subsystem: the
+histogram-vs-scalar selectivity plan flip on the skewed probe workload
+(with bit-identical outputs across the flip), per-site q-error before and
+after the feedback controller's targeted re-analyze, and the ANALYZE wall
+overhead of full histograms vs scalar cardinalities at three table sizes.
+
 ``main(emit)`` returns the trajectory dict; ``benchmarks/run.py`` writes it
 to ``BENCH_runtime.json`` (uploaded as a CI workflow artifact).
 """
@@ -362,6 +369,121 @@ def _bench_cluster(emit, smoke):
     return out
 
 
+def _bench_stats(emit, smoke):
+    """Histogram statistics subsystem (``make bench-stats``): the
+    selectivity-driven plan flip, per-site q-error before/after the
+    feedback controller's targeted re-analyze, and ANALYZE wall overhead
+    (scalar cardinalities vs full histograms) at three table sizes."""
+    from repro.core import LoopRegion, loop_site_key
+    from repro.core.context import StatsProfile
+    from repro.programs import make_skew_db, make_skew_probe
+    from repro.relational.algebra import Cmp, Col, Param, Scan, Select
+    from repro.runtime.feedback import FeedbackController
+    from repro.stats import StatsConfig
+
+    n_rows = 4000 if smoke else 20000
+    out = {}
+
+    # ------------------------------ histogram-vs-scalar selectivity flip
+    # the skewed `events` probe: the scalar 1/NDV rule prices a per-key
+    # fetch at N/NDV rows, so correlated per-key queries win; the
+    # histogram's param_eq_fraction knows the binding is drawn from the
+    # skewed data itself (the hot key dominates), so the prefetch wins —
+    # and the integral payload keeps the outputs bit-identical either way
+    prog = make_skew_probe()
+
+    def probe_loop_site(region):
+        if isinstance(region, LoopRegion):
+            return loop_site_key(region.var, region.source)
+        for c in region.children():
+            s = probe_loop_site(c)
+            if s is not None:
+                return s
+    ctx = ExecutionContext(
+        batch_size=1,
+        stats=StatsProfile.of({probe_loop_site(prog.body): 4.0}))
+    flip = {}
+    for arm, cfg in (("hist", None),
+                     ("scalar", StatsConfig(histograms=False))):
+        db = make_skew_db(n=n_rows, stats_config=cfg)
+        sess = _paper_session(db, SLOW_REMOTE)
+        t0 = time.perf_counter()
+        exe = sess.compile(prog, context=ctx)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        run = exe.run(worklist=[0, 3, 7, 11])
+        flip[arm] = {"plan": _plan_kind(exe), "est_cost_s": exe.est_cost_s,
+                     "rows": len(run.outputs["result"]),
+                     "outputs": run.outputs}
+        emit(f"bench_runtime/stats/flip/{arm}", wall_us,
+             f"plan={flip[arm]['plan']};est={exe.est_cost_s:.4g}s")
+    identical = flip["hist"].pop("outputs") == flip["scalar"].pop("outputs")
+    emit("bench_runtime/stats/flip/identical", 0,
+         f"plans={flip['scalar']['plan']}->{flip['hist']['plan']};"
+         f"outputs_identical={identical}")
+    out["plan_flip"] = {"scalar": flip["scalar"], "hist": flip["hist"],
+                        "flipped": flip["scalar"]["plan"]
+                        != flip["hist"]["plan"],
+                        "outputs_identical": identical}
+
+    # ------------------- q-error feedback: stale stats -> re-analyze
+    # uniform data analyzed, then silently replaced by the skewed build (a
+    # bulk load nobody ran ANALYZE after): the hot-key estimate is ~NDV×
+    # off until the controller's targeted per-column re-analyze lands
+    db = make_skew_db(n=n_rows, hot=0.0, seed=7)
+    db.replace_table(make_skew_db(n=n_rows, hot=0.9, seed=7)
+                     .table("events"))
+    sess = _paper_session(db, SLOW_REMOTE)
+    fb = FeedbackController(sess)
+    q = Select(Cmp("==", Col("e_key"), Param("kid")), Scan("events"))
+
+    def observe():
+        result, _, _ = sess.db.run(q, {"kid": 0})
+        fb.observe([(q, result.nrows, 0.0)])
+        return fb.qerrors.site(q.sql()).last
+
+    before = observe()
+    hb0 = db.histogram_builds
+    t0 = time.perf_counter()
+    fb.refresh(["events"])
+    refresh_us = (time.perf_counter() - t0) * 1e6
+    after = observe()
+    out["qerror"] = {
+        "before": before, "after": after,
+        "histogram_builds": db.histogram_builds - hb0,
+        "analyzes_fired": fb.analyzes_fired,
+        "refresh_us": refresh_us,
+    }
+    emit("bench_runtime/stats/qerror/reanalyze", refresh_us,
+         f"qerror_before={before:.1f};qerror_after={after:.2f};"
+         f"hist_builds={db.histogram_builds - hb0}")
+
+    # --------------------------- ANALYZE overhead at three table sizes
+    # what the richer statistics cost to maintain: wall clock of a full
+    # ANALYZE with histograms+sketches vs the scalar-only baseline,
+    # best-of-3 per configuration
+    sizes = (500, 2000, 8000) if smoke else (2000, 20000, 100000)
+    overhead = {}
+    for n in sizes:
+        walls = {}
+        for arm, cfg in (("scalar", StatsConfig(histograms=False)),
+                         ("hist", None)):
+            db = make_skew_db(n=n, stats_config=cfg)
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                db.analyze("events")
+                best = min(best, time.perf_counter() - t0)
+            walls[arm] = best * 1e6
+        overhead[str(n)] = {
+            "scalar_us": walls["scalar"], "hist_us": walls["hist"],
+            "overhead_x": walls["hist"] / max(walls["scalar"], 1e-3)}
+        emit(f"bench_runtime/stats/analyze/rows{n}", walls["hist"],
+             f"scalar_us={walls['scalar']:.0f};"
+             f"overhead={overhead[str(n)]['overhead_x']:.1f}x")
+    out["analyze_overhead"] = overhead
+    return out
+
+
 def main(emit):
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     only = os.environ.get("REPRO_BENCH_ONLY")
@@ -374,6 +496,12 @@ def main(emit):
     if only in (None, "cluster"):
         traj["cluster"] = _bench_cluster(emit, smoke)
         if only == "cluster":
+            return traj
+
+    # --------------------------------------- histogram statistics subsystem
+    if only in (None, "stats"):
+        traj["stats"] = _bench_stats(emit, smoke)
+        if only == "stats":
             return traj
 
     # ------------------------------------------ compiled tier vs interpreter

@@ -145,6 +145,29 @@ def program_param_sites(program) -> Tuple[str, ...]:
     too (its ``write_tables`` guard) and keying plans on it would only
     cause spurious recompiles."""
     from ..core.context import param_group_key
+    return _param_site_keys(program,
+                            lambda q: param_group_key(query_tables(q)))
+
+
+def program_param_prov_sites(program) -> Tuple[str, ...]:
+    """The parameterized sites' PROVENANCE keys (``qprov:…``,
+    :func:`~repro.core.context.param_prov_key`): one per distinct
+    (base-table set, param-compared columns) pair among the program's
+    parameterized sites. Finer than :func:`program_param_sites`'s table
+    groups — this is what lets two differently-diverse sites over one
+    table carry separately-published diversities — with the same
+    write-table exclusion."""
+    from ..core.context import param_prov_key
+    from ..core.cost import query_param_cols
+    return _param_site_keys(
+        program,
+        lambda q: param_prov_key(query_tables(q), query_param_cols(q)))
+
+
+def _param_site_keys(program, key_of) -> Tuple[str, ...]:
+    """Shared walk behind :func:`program_param_sites` /
+    :func:`program_param_prov_sites`: apply ``key_of`` to every
+    parameterized (or pre-bound) query site over non-written tables."""
     from ..core.cost import query_has_params
     from ..core.regions import (BasicBlock, IExpr, LoopRegion, Prefetch,
                                 Region)
@@ -154,7 +177,7 @@ def program_param_sites(program) -> Tuple[str, ...]:
     def from_query(q, bindings=()):
         if (bindings or query_has_params(q)) \
                 and not written & set(query_tables(q)):
-            out.add(param_group_key(query_tables(q)))
+            out.add(key_of(q))
 
     def from_expr(e):
         if not isinstance(e, IExpr):
@@ -216,6 +239,7 @@ def program_sites(program) -> Tuple[str, ...]:
 
     walk(program.body)
     out.extend(program_param_sites(program))
+    out.extend(program_param_prov_sites(program))
     return tuple(sorted(set(out)))
 
 

@@ -31,11 +31,13 @@ Supported constructs (all lower to the same IR the builder emits by hand):
     and subscript reads on traced values (``xs[0]``, ``m[key]`` —
     :class:`~repro.core.regions.IIndex`), augmented assignment, scalar
     arithmetic/comparisons/boolean operators;
-  * **list comprehensions** over traced collections/queries
-    (``[f(t.x) for t in load_all("tasks") if t.y > 0]``) — lowered to the
+  * **list/set/dict comprehensions** over traced collections/queries
+    (``[f(t.x) for t in load_all("tasks") if t.y > 0]``,
+    ``{t.k: t.x for t in ...}``, ``{t.x for t in ...}``) — lowered to the
     same loop-accumulation IR an explicit loop emits (fresh accumulator +
-    ``LoopRegion`` + guarded ``CollectionAdd``); dict/set comprehensions,
-    generator expressions and nested comprehensions stay ``LiftError``;
+    ``LoopRegion`` + guarded ``CollectionAdd``/``MapPut``; a set is the
+    keyed map with the member as its own key); generator expressions and
+    nested comprehensions stay ``LiftError``;
   * calls to :func:`~repro.core.regions.register_function`-registered pure
     functions by name, plus ``len``/``min``/``max`` builtins;
   * ORM attribute navigation (``row.customer``) via the ``relations``
@@ -194,7 +196,7 @@ class _Lifter:
         for pname, default in inputs:
             self.scope[pname] = self.b.input(pname, default)
         self.out_names: Tuple[str, ...] = self._scan_outputs(fnode)
-        self._comp_depth = 0           # list comprehensions never nest
+        self._comp_depth = 0           # comprehensions never nest
         self._in_while_test = False    # comprehensions can't lower there
 
     # ------------------------------------------------------------ diagnostics
@@ -536,11 +538,15 @@ class _Lifter:
                                       f"trace-time {type(key).__name__}")
             return base[key]
         if isinstance(node, ast.ListComp):
-            return self._list_comp(node)
-        if isinstance(node, (ast.SetComp, ast.DictComp, ast.GeneratorExp)):
-            raise self._err(node, "dict/set/generator comprehensions — only "
-                                  "list comprehensions are liftable; write "
-                                  "an explicit loop")
+            return self._comp(node, "list")
+        if isinstance(node, ast.SetComp):
+            return self._comp(node, "set")
+        if isinstance(node, ast.DictComp):
+            return self._comp(node, "dict")
+        if isinstance(node, ast.GeneratorExp):
+            raise self._err(node, "generator expressions — materialize with "
+                                  "a list/set/dict comprehension or an "
+                                  "explicit loop")
         if isinstance(node, ast.IfExp):
             raise self._err(node, "conditional expressions — write an "
                                   "explicit if statement")
@@ -571,12 +577,17 @@ class _Lifter:
             raise self._err(node, f"trace-time {opname!r} failed: {e}")
 
     # -------------------------------------------------------- comprehensions
-    def _list_comp(self, node: ast.ListComp):
-        """Lower ``[elt for v in src if cond ...]`` onto the loop-
-        accumulation path an explicit loop takes: a fresh empty-list
-        accumulator, a ``LoopRegion`` over the source, one nested
-        ``CondRegion`` per ``if`` clause, and a ``CollectionAdd`` of the
-        element. The value of the expression is the accumulator variable."""
+    def _comp(self, node, kind: str):
+        """Lower ``[elt for v in src if cond ...]`` (and the ``{...}`` set
+        and ``{k: v ...}`` dict forms) onto the loop-accumulation path an
+        explicit loop takes: a fresh empty accumulator (``empty_list`` for
+        lists, ``empty_map`` for sets and dicts), a ``LoopRegion`` over the
+        source, one nested ``CondRegion`` per ``if`` clause, and the
+        accumulation statement — ``CollectionAdd`` of the element for
+        lists, ``MapPut`` of (key, value) for dicts, and ``MapPut`` of
+        (element, element) for sets (a set IS the keyed map with the member
+        as its own key, exactly what ``m[e] = e`` in an explicit loop
+        emits). The value of the expression is the accumulator variable."""
         if self._in_while_test:
             raise self._err(node, "a comprehension in a while guard — its "
                                   "loop would run once at entry instead of "
@@ -603,9 +614,20 @@ class _Lifter:
                           f"traced collection variables")
         var = gen.target.id
         acc_name = self.b._fresh_var("comp")
-        acc = self.b.let(acc_name, self.b.empty_list())
+        init = self.b.empty_list() if kind == "list" else self.b.empty_map()
+        acc = self.b.let(acc_name, init)
         _missing = object()
         saved = self.scope.get(var, _missing)
+
+        def lowered(part: ast.expr, what: str):
+            val = self._expr(part)
+            if not isinstance(val, (Expr,) + _SCALARS):
+                raise self._err(
+                    part, f"comprehension {what} must be a traced "
+                          f"expression or scalar, not a trace-time "
+                          f"{type(val).__name__}")
+            return val
+
         self._comp_depth += 1
         try:
             with self.b.loop(src, var=var) as cursor:
@@ -613,14 +635,15 @@ class _Lifter:
 
                 def emit(i: int) -> None:
                     if i == len(gen.ifs):
-                        val = self._expr(node.elt)
-                        if not isinstance(val, (Expr,) + _SCALARS):
-                            raise self._err(
-                                node.elt, f"comprehension element must be a "
-                                          f"traced expression or scalar, not "
-                                          f"a trace-time "
-                                          f"{type(val).__name__}")
-                        self.b.add(acc_name, val)
+                        if kind == "dict":
+                            k = lowered(node.key, "key")
+                            self.b.put(acc_name, k,
+                                       lowered(node.value, "value"))
+                        elif kind == "set":
+                            e = lowered(node.elt, "element")
+                            self.b.put(acc_name, e, e)
+                        else:
+                            self.b.add(acc_name, lowered(node.elt, "element"))
                         return
                     pred = self._expr(gen.ifs[i])
                     if not isinstance(pred, Expr):

@@ -526,11 +526,16 @@ class CobraSession:
         return decorate(fn) if fn is not None else decorate
 
     # ------------------------------------------------------------- telemetry
-    def analyze(self, *tables: str) -> int:
+    def analyze(self, *tables: str,
+                columns: Optional[Tuple[str, ...]] = None) -> int:
         """Refresh table statistics (bumps the named tables' stats versions,
         or every table's when none are named, invalidating exactly the
-        cached plans that touch them); returns the new global version."""
-        self.db.analyze(*tables)
+        cached plans that touch them); returns the new global version.
+        ``columns`` restricts the (comparatively expensive) histogram
+        rebuilds to the named columns — scalar statistics always refresh —
+        which is how the feedback controller's q-error path re-analyzes
+        only the columns whose estimates drifted."""
+        self.db.analyze(*tables, columns=columns)
         return self.db.stats_version
 
     @property

@@ -18,10 +18,11 @@ query sites shard-parallel where a bit-exact merge exists:
     every shard, partials are concatenated and stable-sorted by the hidden
     ``__gpos`` provenance column: exactly the unsharded row order;
   * **partial-aggregate combine** — aggregates whose fold is exact under
-    re-association (count, min, max, and sum over integer columns — the
-    fold shapes the compiled tier already classifies) run per shard and
-    combine; float sums/avgs are NOT combined (float addition is order-
-    sensitive) and fall back to gathering the child;
+    re-association (count, min, max, and sum/avg over integer columns —
+    avg ships as a (sum, count) partial-state pair with one final
+    division) run per shard and combine; float sums/avgs are NOT combined
+    (float addition is order-sensitive) and fall back to gathering the
+    child;
   * **gather** — anything else executes against the coordinator's merged
     views, which are themselves rebuilt from the shards — always correct,
     never shard-parallel.
@@ -91,17 +92,20 @@ class ShardedDatabase(DatabaseServer):
                  keys: Optional[Mapping[str, str]] = None,
                  model: ServerModel = ServerModel(),
                  merge_rows_per_s: Optional[float] = None,
-                 tracer=None):
+                 tracer=None, stats_config=None):
         # base init computes GLOBAL stats over the unsharded tables and
         # calls the (guarded) analyze(); cluster structures come after
         self._cluster_ready = False
-        super().__init__(tables, model)
+        super().__init__(tables, model, stats_config=stats_config)
         self.tracer = tracer if tracer is not None else NOOP_TRACER
         self.partitioner = Partitioner(n_shards, keys)
         self.n_shards = n_shards
         self.merge_rows_per_s = merge_rows_per_s or model.agg_rows_per_s
+        # shards share the coordinator's histogram config: merging
+        # per-shard histograms requires identical bucket/MCV/sketch shapes
         self.shards: List[DatabaseServer] = [
-            DatabaseServer({}, model) for _ in range(n_shards)]
+            DatabaseServer({}, model, stats_config=self.stats_config)
+            for _ in range(n_shards)]
         for t in self.tables.values():
             for k, part in enumerate(self.partitioner.shard_tables(t)):
                 self.shards[k].add_table(part)
@@ -216,18 +220,56 @@ class ShardedDatabase(DatabaseServer):
             self.shards[k].replace_table(part)
         self._merged_sync[t.name] = self._shard_data_versions(t.name)
 
-    def analyze(self, *tables: str) -> int:
+    def analyze(self, *tables: str,
+                columns: Optional[Tuple[str, ...]] = None) -> int:
         if not self._cluster_ready:
-            return super().analyze(*tables)
+            return super().analyze(*tables, columns=columns)
         names = tables or tuple(self.tables)
         for name in names:
             # GLOBAL statistics over the merged content: estimate() stays
             # bit-identical to an unsharded server's
             self._refresh_merged(name)
-            self._stats[name] = self._compute_stats(self.tables[name])
             for s in self.shards:
-                s.analyze(name)
+                s.analyze(name, columns=columns)
+            prev = self._stats.get(name) if columns is not None else None
+            if self._partitioned(name):
+                self._stats[name] = self._merged_stats(
+                    name, columns=columns, prev=prev)
+            else:
+                self._stats[name] = self._compute_stats(
+                    self.tables[name], columns=columns, prev=prev)
         return self.stats_version
+
+    def _merged_stats(self, name: str,
+                      columns: Optional[Tuple[str, ...]] = None,
+                      prev=None):
+        """Coordinator statistics for a PARTITIONED table: scalars over the
+        merged content, histograms by the lossless merge of the freshly
+        analyzed per-shard histograms — ``merge_histograms`` is associative
+        and the bucket/MCV/sketch derivation deterministic, so every merged
+        histogram is bit-for-bit what a direct build over the merged rows
+        produces (the reconciliation property ``tests/test_stats.py``
+        asserts). The shards' hidden ``__gpos`` provenance column never has
+        a coordinator-side field, so it drops out here by construction."""
+        from ..stats.histogram import merge_all
+        t = self.tables[name]
+        # columns=() computes the scalar statistics without building (or
+        # charging histogram_builds for) any coordinator-side histogram
+        st = self._compute_stats(t, columns=())
+        if not self.stats_config.histograms:
+            return st
+        hists = {}
+        for f in t.schema.fields:
+            if columns is not None and f.name not in columns:
+                carried = prev.hist(f.name) if prev is not None else None
+                if carried is not None:
+                    hists[f.name] = carried
+                continue
+            shard_hists = [h for h in (s._stats[name].hist(f.name)
+                                       for s in self.shards) if h is not None]
+            if shard_hists:
+                hists[f.name] = merge_all(shard_hists)
+        return dataclasses.replace(st, hists=hists)
 
     # ------------------------------------------------------------ execution
     def run(self, query: Query, params: Optional[Mapping[str, object]] = None
@@ -306,13 +348,15 @@ class ShardedDatabase(DatabaseServer):
 
     def _combinable(self, node: Aggregate) -> bool:
         """True when every fold is exact under re-association: count / min /
-        max always, sum only over integer columns — float addition is
-        order-sensitive, and bit-identity outranks shard-parallel sums."""
+        max always, sum and avg only over integer columns — float addition
+        is order-sensitive, and bit-identity outranks shard-parallel sums.
+        avg distributes as (sum, count) partial states with one final
+        division (see :meth:`_scatter_agg`), so its guard is sum's."""
         for a in node.aggs:
             if a.func in ("count", "min", "max"):
                 continue
-            if a.func != "sum":
-                return False        # avg: needs an order-sensitive division
+            if a.func not in ("sum", "avg"):
+                return False
             try:
                 f = node.child.output_schema(self).field(a.col)
             except Exception:
@@ -426,13 +470,61 @@ class ShardedDatabase(DatabaseServer):
         t = last + merged.nrows / self.merge_rows_per_s
         return merged, t, t
 
+    @staticmethod
+    def _partial_aggs(node: Aggregate
+                      ) -> Tuple[Tuple[AggSpec, ...], Tuple[AggSpec, ...]]:
+        """(per-shard probe aggs, coordinator combine aggs). An avg fold
+        has no associative partial of its own, so it ships as a (sum,
+        count) partial-state pair — ``out__avs`` / ``out__avn`` — whose
+        partials ADD; :meth:`_finalize_avg` performs the single final
+        division."""
+        probe, combine = [], []
+        for a in node.aggs:
+            if a.func == "avg":
+                probe.append(AggSpec("sum", a.col, a.out + "__avs"))
+                probe.append(AggSpec("count", None, a.out + "__avn"))
+                combine.append(AggSpec("sum", a.out + "__avs",
+                                       a.out + "__avs"))
+                combine.append(AggSpec("sum", a.out + "__avn",
+                                       a.out + "__avn"))
+            else:
+                probe.append(a)
+                combine.append(AggSpec(_COMBINE_FUNC[a.func], a.out, a.out))
+        return tuple(probe), tuple(combine)
+
+    def _finalize_avg(self, node: Aggregate, result: Table) -> Table:
+        """Collapse each avg fold's combined (sum, count) state into the
+        output column, reproducing the unsharded grouped-avg math —
+        ``float32(s) / max(float32(c), 1)`` — with ONE division after all
+        partials have been added."""
+        import jax.numpy as jnp
+        fields, cols = [], {}
+        for g in node.group_by:
+            fields.append(result.schema.field(g))
+            cols[g] = np.asarray(result.column(g))
+        for a in node.aggs:
+            if a.func == "avg":
+                s = jnp.asarray(result.column(a.out + "__avs"),
+                                dtype=jnp.float32)
+                c = jnp.asarray(result.column(a.out + "__avn"),
+                                dtype=jnp.float32)
+                fields.append(Field(a.out, "float32"))
+                cols[a.out] = s / jnp.maximum(c, 1.0)
+            else:
+                fields.append(result.schema.field(a.out))
+                cols[a.out] = np.asarray(result.column(a.out))
+        return Table("agg", Schema(tuple(fields)), cols)
+
     def _scatter_agg(self, node: Aggregate, params
                      ) -> Tuple[Table, float, float]:
-        """Partial-aggregate combine: run the whole Aggregate per shard,
-        fold the partials (count/sum add, min/max fold) — exact for the
-        folds :meth:`_combinable` admits."""
-        probe = node if node.group_by else Aggregate(
-            (), node.aggs + (AggSpec("count", None, "__pn"),), node.child)
+        """Partial-aggregate combine: run the probe Aggregate per shard,
+        fold the partials (count/sum/avg-states add, min/max fold) — exact
+        for the folds :meth:`_combinable` admits."""
+        probe_aggs, combine_aggs = self._partial_aggs(node)
+        probe = Aggregate(node.group_by, probe_aggs, node.child) \
+            if node.group_by else Aggregate(
+                (), probe_aggs + (AggSpec("count", None, "__pn"),),
+                node.child)
         parts, last = [], 0.0
         for k, s in enumerate(self.shards):
             r, _, l = s.run(probe, params)
@@ -443,12 +535,11 @@ class ShardedDatabase(DatabaseServer):
             merged = parts[0]
             for p in parts[1:]:
                 merged = merged.concat_rows(p)
-            combine = Aggregate(
-                node.group_by,
-                tuple(AggSpec(_COMBINE_FUNC[a.func], a.out, a.out)
-                      for a in node.aggs),
-                Scan("__partials"))
+            combine = Aggregate(node.group_by, combine_aggs,
+                                Scan("__partials"))
             result = combine.execute(_GatheredView(merged), None)
+            if any(a.func == "avg" for a in node.aggs):
+                result = self._finalize_avg(node, result)
         else:
             result = self._combine_global(node, parts)
         t = last + max(1, result.nrows) / self.merge_rows_per_s
@@ -471,6 +562,18 @@ class ShardedDatabase(DatabaseServer):
                 dt = "int32"
             elif not live:
                 val, dt = 0, "float32"   # the unsharded empty-input branch
+            elif a.func == "avg":
+                # (sum, count) partial state: integer partial sums and row
+                # counts add exactly. jnp.mean lowers its division to a
+                # reciprocal multiply, so the single final fold must too —
+                # a true divide rounds differently (499.5 vs 499.50003).
+                s = sum(int(np.asarray(p.column(a.out + "__avs"))[0])
+                        for p in live)
+                n = sum(int(np.asarray(p.column(a.out + "__avn"))[0])
+                        for p in live)
+                val = jnp.float32(s) * (jnp.float32(1)
+                                        / jnp.float32(max(n, 1)))
+                dt = "float32"
             else:
                 vals = [p.column(a.out)[0] for p in live]
                 val = vals[0]

@@ -37,7 +37,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 __all__ = ["ExecutionContext", "StatsProfile", "ONE_SHOT",
            "while_site_key", "loop_site_key", "query_site_key",
-           "param_group_key"]
+           "param_group_key", "param_prov_key"]
 
 
 def _site_hash(key: Tuple) -> str:
@@ -72,6 +72,22 @@ def param_group_key(tables) -> str:
     return "qdiv:" + _site_hash(tuple(sorted(tables)))
 
 
+def param_prov_key(tables, param_cols) -> str:
+    """Stable PROVENANCE id of a parameterized query site: the site's
+    base-table set *plus the columns its parameters are compared
+    against*. Finer than :func:`param_group_key` — two differently-diverse
+    sites over one table filter different columns (W_E's
+    ``t_role_id = :rid`` vs SCAN's ``t_state = :k``), so their diversity
+    observations publish (and price) separately — yet still coarse enough
+    to survive every rewrite: T2/T5-style transformations rebuild the
+    query tree (even renaming the parameter to a synthetic ``:k``) but
+    preserve the tables scanned and the predicate column, which becomes
+    the rewritten form's lookup key column. The cost model consults the
+    provenance key first and falls back to the table-group key."""
+    return "qprov:" + _site_hash((tuple(sorted(tables)),
+                                  tuple(sorted(param_cols))))
+
+
 @dataclasses.dataclass(frozen=True)
 class StatsProfile:
     """Observed runtime statistics, published by the feedback controller.
@@ -88,24 +104,35 @@ class StatsProfile:
     to observed mean wall-clock seconds — the default
     :class:`~repro.core.cost.CostModel` does not consume it (wall-clock
     drift feeds the stats-version invalidation path instead), but custom
-    cost models may calibrate against it. ``iters`` and ``bindings``
-    participate in plan identity; ``site_wall_s`` does not.
+    cost models may calibrate against it. ``qerrors`` maps query sites
+    (by SQL text) to their latest observed q-error — max(est/act, act/est)
+    of the site's cardinality estimate, tracked by the feedback
+    controller's :class:`~repro.stats.qerror.QErrorTracker`; it is the
+    signal behind targeted re-analyzes and the per-site column
+    ``explain()``/``triage()`` surface. ``iters`` and ``bindings``
+    participate in plan identity; ``site_wall_s`` and ``qerrors`` do not
+    (q-error moves with every observation — keying plans on it would
+    thrash the caches re-analyze exists to protect).
     """
 
     iters: Tuple[Tuple[str, float], ...] = ()
     site_wall_s: Tuple[Tuple[str, float], ...] = ()
     bindings: Tuple[Tuple[str, float], ...] = ()
+    qerrors: Tuple[Tuple[str, float], ...] = ()
 
     @classmethod
     def of(cls, iters: Optional[Mapping[str, float]] = None,
            site_wall_s: Optional[Mapping[str, float]] = None,
-           bindings: Optional[Mapping[str, float]] = None) -> "StatsProfile":
+           bindings: Optional[Mapping[str, float]] = None,
+           qerrors: Optional[Mapping[str, float]] = None) -> "StatsProfile":
         return cls(
             iters=tuple(sorted((k, float(v)) for k, v in (iters or {}).items())),
             site_wall_s=tuple(sorted((k, float(v))
                               for k, v in (site_wall_s or {}).items())),
             bindings=tuple(sorted((k, float(v))
-                           for k, v in (bindings or {}).items())))
+                           for k, v in (bindings or {}).items())),
+            qerrors=tuple(sorted((k, float(v))
+                          for k, v in (qerrors or {}).items())))
 
     def iters_for(self, site: str) -> Optional[float]:
         for k, v in self.iters:
@@ -121,6 +148,12 @@ class StatsProfile:
 
     def wall_for(self, sql: str) -> Optional[float]:
         for k, v in self.site_wall_s:
+            if k == sql:
+                return v
+        return None
+
+    def qerror_for(self, sql: str) -> Optional[float]:
+        for k, v in self.qerrors:
             if k == sql:
                 return v
         return None

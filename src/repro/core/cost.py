@@ -52,11 +52,12 @@ from ..relational.algebra import (Cmp, Col, Param, Query, Scalar, Scan,
                                   Select, scan_tables)
 from ..relational.database import DatabaseServer, NetworkProfile
 from .context import (ExecutionContext, ONE_SHOT, loop_site_key,
-                      param_group_key, while_site_key)
+                      param_group_key, param_prov_key, while_site_key)
 from .fir import (FCacheLookupAllE, FCacheLookupE, FCondE, FExpr, FFoldE,
                   FPointLookup, FQueryE, FSelLookupE, FTupleE, fir_children)
 
-__all__ = ["CostCatalog", "CostModel", "query_has_params"]
+__all__ = ["CostCatalog", "CostModel", "query_has_params",
+           "query_param_cols", "query_pred_cols"]
 
 
 def _embedded_scalars(node):
@@ -87,6 +88,63 @@ def query_has_params(q: Query) -> bool:
     if any(scalar_has(s) for s in _embedded_scalars(q)):
         return True
     return any(query_has_params(c) for c in q.children())
+
+
+def query_param_cols(q: Query) -> Tuple[str, ...]:
+    """Sorted names of the columns a relational tree compares against a
+    ``Param`` — with the table set, the rewrite-stable identity of a
+    parameterized site (:func:`~repro.core.context.param_prov_key`):
+    rewrites rename parameters, but a σ's predicate column survives as the
+    rewritten form's lookup key column."""
+    cols = set()
+
+    def scalar_has_param(s: Scalar) -> bool:
+        if isinstance(s, Param):
+            return True
+        return any(scalar_has_param(k) for k in _embedded_scalars(s))
+
+    def from_scalar(s: Scalar) -> None:
+        if isinstance(s, Cmp):
+            for a, b in ((s.left, s.right), (s.right, s.left)):
+                if isinstance(a, Col) and scalar_has_param(b):
+                    cols.add(a.name)
+        for k in _embedded_scalars(s):
+            from_scalar(k)
+
+    def walk(node: Query) -> None:
+        for s in _embedded_scalars(node):
+            from_scalar(s)
+        for c in node.children():
+            walk(c)
+
+    walk(q)
+    return tuple(sorted(cols))
+
+
+def query_pred_cols(q: Query) -> Tuple[str, ...]:
+    """Sorted names of every column a relational tree COMPARES (either side
+    of any ``Cmp``, against params, literals or other columns) — the
+    columns whose histograms a targeted re-analyze rebuilds when the
+    site's cardinality estimate drifts (the feedback controller's q-error
+    path)."""
+    cols = set()
+
+    def from_scalar(s: Scalar) -> None:
+        if isinstance(s, Cmp):
+            for side in (s.left, s.right):
+                if isinstance(side, Col):
+                    cols.add(side.name)
+        for k in _embedded_scalars(s):
+            from_scalar(k)
+
+    def walk(node: Query) -> None:
+        for s in _embedded_scalars(node):
+            from_scalar(s)
+        for c in node.children():
+            walk(c)
+
+    walk(q)
+    return tuple(sorted(cols))
 
 
 @dataclasses.dataclass
@@ -144,17 +202,26 @@ class CostModel:
         by the serving site cache through the feedback controller), only
         the distinct bindings in a batch pay a server fetch — the repeats
         are local cache hits — so the per-invocation share is
-        ``max(d, 1/B)``. Without an observation: 1.0 (no sharing assumed,
-        today's conservative behavior). Sites over tables the program
-        WRITES never amortize — the runtime refetches them every
-        invocation regardless of what diversity another (read-only)
-        program published for the same table group."""
+        ``max(d, 1/B)``. With no group-level observation, the site's
+        PROVENANCE key (``qprov:`` — table set + the columns the site
+        compares against parameters, an identity that survives rewrites
+        renaming the parameters themselves) is consulted instead, so a
+        context built with per-site fractions prices two
+        differently-diverse sites over the same table separately. Without
+        either observation: 1.0 (no sharing assumed, today's conservative
+        behavior). Sites over tables the program WRITES never amortize —
+        the runtime refetches such sites every invocation regardless of
+        what diversity another (read-only) program published for the same
+        table group."""
         if self.batch_size <= 1:
             return 1.0
         tables = scan_tables(q)
         if self.write_tables and self.write_tables & set(tables):
             return 1.0
         d = self.context.stats.binding_for(param_group_key(tables))
+        if d is None:
+            d = self.context.stats.binding_for(
+                param_prov_key(tables, query_param_cols(q)))
         if d is None:
             return 1.0
         return min(1.0, max(float(d), 1.0 / self.batch_size))
@@ -203,6 +270,19 @@ class CostModel:
     def ndv(self, table: str, col: str) -> float:
         return float(self.db.stats(table).ndv(col))
 
+    def rows_per_key(self, table: str, col: str) -> float:
+        """Expected rows served per key of a per-key cache lookup over
+        ``table.col``. Histogram-grade when the table's stats carry one:
+        the key is bound from the data's own distribution, so the expected
+        group size is Σ f_v·(f_v/N) = ``param_eq_fraction() × N`` — far
+        above N/NDV under skew, and degenerating to it when uniform.
+        Without a histogram: the scalar N/NDV rule."""
+        st = self.db.stats(table)
+        hist = st.hist(col)
+        if hist is not None:
+            return hist.param_eq_fraction() * st.nrows
+        return st.nrows / max(self.ndv(table, col), 1.0)
+
     # ---------------------------------------------------------------- fold
     def fold_source(self, fold: FFoldE) -> Tuple[float, float]:
         """(C_Db(Q), N_Q) for the fold's source."""
@@ -213,9 +293,7 @@ class CostModel:
             q = Select(Cmp("==", Col(src.key_col), Param("k")), Scan(src.table))
             return self.query_cost(q), self.db.estimate(q).n_rows
         if isinstance(src, FCacheLookupAllE):
-            total = self.db.stats(src.table).nrows
-            rows = total / max(self.ndv(src.table, src.key_col), 1.0)
-            return self.cat.c_y, rows
+            return self.cat.c_y, self.rows_per_key(src.table, src.key_col)
         raise TypeError(f"fold source {src!r}")
 
     def slot_row_cost(self, expr: FExpr, n_rows: float) -> float:
@@ -255,8 +333,7 @@ class CostModel:
                 inner_rows = self.db.estimate(q).n_rows
             elif isinstance(src, FCacheLookupAllE):
                 inner_q_cost = c.c_y
-                total = self.db.stats(src.table).nrows
-                inner_rows = total / max(self.ndv(src.table, src.key_col), 1.0)
+                inner_rows = self.rows_per_key(src.table, src.key_col)
             else:
                 inner_q_cost = c.c_y
                 inner_rows = self.cat.loop_iters_default

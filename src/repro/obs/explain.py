@@ -22,14 +22,9 @@ from typing import Dict, List, Optional
 
 from .render import fmt_seconds
 
+from ..stats.qerror import q_error
+
 __all__ = ["explain_plan", "q_error"]
-
-
-def q_error(estimated: float, observed: float) -> float:
-    """The symmetric under/over-estimation factor (max of the two ratios,
-    +1-smoothed so empty results stay finite)."""
-    return max((observed + 1.0) / (estimated + 1.0),
-               (estimated + 1.0) / (observed + 1.0))
 
 
 def _cost_model(exe):
@@ -62,10 +57,12 @@ def explain_plan(exe, *, feedback=None, site_cache=None,
     # observed serving statistics, keyed the way the annotations join them
     obs_sites: Dict[str, Dict[str, float]] = {}
     obs_iters: Dict[str, Dict[str, object]] = {}
+    qerror_sites: Dict[str, Dict[str, float]] = {}
     if feedback is not None:
         fb = feedback.telemetry()
         obs_sites = fb.get("sites", {})
         obs_iters = fb.get("iteration_sites", {})
+        qerror_sites = fb.get("qerror_sites", {})
     site_bindings: Dict[str, Dict[str, float]] = {}
     if site_cache is not None:
         site_bindings = site_cache.site_binding_stats()
@@ -102,6 +99,10 @@ def explain_plan(exe, *, feedback=None, site_cache=None,
             o = seen.get("avg_rows", 0.0)
             parts.append(f"observed {o:.0f} over {int(seen.get('n', 0))} "
                          f"exec(s), q-error {q_error(est, o):.1f}")
+        qe = qerror_sites.get(q.sql())
+        if qe:
+            parts.append(f"tracked q-error last {qe.get('last', 1.0):.1f} "
+                         f"/ worst {qe.get('worst', 1.0):.1f}")
         if binding_site is not None:
             b = site_bindings.get(binding_site)
             if b:
@@ -153,9 +154,20 @@ def explain_plan(exe, *, feedback=None, site_cache=None,
                 tier = (", columnar (compiled tier)"
                         if note.verdict == "columnar"
                         else f", interpreter ({note.reason})")
+            # a loop over a query IS a fetch site: join the feedback
+            # controller's per-site q-error account against it too
+            from .signals import _query_of
+            qerr = ""
+            q = _query_of(r.source)
+            if q is not None:
+                qe = qerror_sites.get(q.sql())
+                if qe:
+                    qerr = (f", tracked q-error last "
+                            f"{qe.get('last', 1.0):.1f} / worst "
+                            f"{qe.get('worst', 1.0):.1f}")
             lines.append(pad + f"for {r.var} : {r.source!r}   "
                          f"[{iter_annotation(site, cm.loop_iters(r.source, r.var))}"
-                         f"{tier}]")
+                         f"{qerr}{tier}]")
             walk(r.body, depth + 1)
             return
         if isinstance(r, WhileRegion):

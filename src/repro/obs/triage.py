@@ -38,6 +38,7 @@ class TriageRow:
     severity: float         # Σ scan_plan signal severities on current plan
     signals: Tuple[str, ...]
     score: float
+    qerror: float = 1.0     # worst tracked per-site q-error on its tables
     # cluster columns (triage_cluster only; single-runtime rows keep the
     # defaults, so render/consumers handle both shapes)
     shard_requests: Tuple[int, ...] = ()  # this program's requests per worker
@@ -51,7 +52,7 @@ class TriageRow:
                if self.shard_requests else "")
         return (f"{self.name}: score {self.score:.3f} "
                 f"(share {self.share:.2f}, drift {self.drift:.1f}x, "
-                f"signals {sig}{hot})")
+                f"q-error {self.qerror:.1f}, signals {sig}{hot})")
 
 
 def triage_fleet(rt) -> List[TriageRow]:
@@ -63,6 +64,8 @@ def triage_fleet(rt) -> List[TriageRow]:
     counts = dict(getattr(rt, "_requests_by_program", {}))
     total = sum(counts.values())
     events = rt.feedback.events if rt.feedback is not None else []
+    qsites = (rt.feedback.qerrors.sites()
+              if rt.feedback is not None else {})
 
     rows: List[TriageRow] = []
     for name in sorted(rt._programs):
@@ -75,13 +78,17 @@ def triage_fleet(rt) -> List[TriageRow]:
         for e in events:
             if tables & set(e.tables):
                 drift = max(drift, float(e.ratio))
+        qerr = 1.0
+        for s in qsites.values():
+            if tables & set(s.tables):
+                qerr = max(qerr, float(s.worst))
         found = scan_plan(exe, feedback=rt.feedback)
         severity = sum(s.severity for s in found)
         rows.append(TriageRow(
             name=name, requests=requests, share=share, drift=drift,
             severity=severity,
             signals=tuple(sorted({s.kind for s in found})),
-            score=share * drift * (1.0 + severity)))
+            score=share * drift * (1.0 + severity), qerror=qerr))
     rows.sort(key=lambda r: (-r.score, r.name))
     return rows
 
@@ -117,10 +124,15 @@ def triage_cluster(cluster) -> List[TriageRow]:
         share = requests / total if total else 0.0
         tables = set(program_tables(program))
         drift = 1.0
+        qerr = 1.0
         for w in workers:
             for e in (w.feedback.events if w.feedback is not None else []):
                 if tables & set(e.tables):
                     drift = max(drift, float(e.ratio))
+            if w.feedback is not None:
+                for s in w.feedback.qerrors.sites().values():
+                    if tables & set(s.tables):
+                        qerr = max(qerr, float(s.worst))
         found = scan_plan(exe, feedback=rt.feedback)
         severity = sum(s.severity for s in found)
         shard_share = counts[hot] / requests if requests else 0.0
@@ -130,6 +142,7 @@ def triage_cluster(cluster) -> List[TriageRow]:
             severity=severity,
             signals=tuple(sorted({s.kind for s in found})),
             score=share * drift * (1.0 + severity) * max(1.0, skew),
+            qerror=qerr,
             shard_requests=tuple(counts), hot_shard=hot,
             shard_share=shard_share, skew=skew))
     rows.sort(key=lambda r: (-r.score, r.name))
@@ -140,16 +153,16 @@ def render_triage(rows: List[TriageRow]) -> str:
     if any(r.shard_requests for r in rows):
         return markdown_table(
             ["program", "requests", "share", "shards", "hot", "skew",
-             "drift", "severity", "signals", "score"],
+             "drift", "q-error", "severity", "signals", "score"],
             [(r.name, r.requests, f"{r.share:.2f}",
               "/".join(str(c) for c in r.shard_requests) or "—",
               r.hot_shard if r.shard_requests else "—", f"{r.skew:.1f}x",
-              f"{r.drift:.1f}x", f"{r.severity:.2f}",
+              f"{r.drift:.1f}x", f"{r.qerror:.1f}", f"{r.severity:.2f}",
               ",".join(r.signals) or "—", f"{r.score:.3f}")
              for r in rows])
     return markdown_table(
-        ["program", "requests", "share", "drift", "severity",
+        ["program", "requests", "share", "drift", "q-error", "severity",
          "signals", "score"],
         [(r.name, r.requests, f"{r.share:.2f}", f"{r.drift:.1f}x",
-          f"{r.severity:.2f}", ",".join(r.signals) or "—",
-          f"{r.score:.3f}") for r in rows])
+          f"{r.qerror:.1f}", f"{r.severity:.2f}",
+          ",".join(r.signals) or "—", f"{r.score:.3f}") for r in rows])

@@ -32,6 +32,7 @@ from .relational.table import Field, Schema, Table
 
 __all__ = [
     "make_orders_customer_db", "make_sales_db", "make_wilos_db",
+    "make_skew_db", "make_skew_probe",
     "make_p0", "make_p1", "make_p2", "make_m0", "make_scan",
     "make_wilos_a", "make_wilos_b", "make_wilos_c", "make_wilos_d",
     "make_wilos_e", "make_wilos_f", "WILOS_PROGRAMS",
@@ -128,6 +129,56 @@ def make_wilos_db(n_big: int, ratio: int = 10, seed: int = 2) -> DatabaseServer:
         t_payload=rng.integers(0, 1 << 20, n_big),
     )
     return DatabaseServer({"roles": small, "tasks": big})
+
+
+def make_skew_db(n: int = 20000, ndv: int = 50, hot: float = 0.9,
+                 seed: int = 7, stats_config=None) -> DatabaseServer:
+    """Zipf-ish single-hot-key relation for the scalar-vs-histogram plan
+    flip (the statistics subsystem's acceptance demo): ``hot`` of the
+    ``events`` rows share key 0, the rest spread uniformly over the other
+    ``ndv - 1`` keys. The scalar 1/NDV rule prices a per-key probe at
+    N/NDV rows; the histogram's ``param_eq_fraction`` (Σ (f_v/N)², the
+    key drawn from the data's own distribution) prices it near
+    ``hot²·N`` — ~40× more under the defaults — which is what flips the
+    per-key-query plan to a prefetch. ``e_units`` is integral so every
+    plan's accumulation is exact and outputs stay bit-identical across
+    the flip. ``stats_config`` selects the arm
+    (``StatsConfig(histograms=False)`` = the scalar control)."""
+    rng = np.random.default_rng(seed)
+    n_hot = int(n * hot)
+    keys = np.concatenate([
+        np.zeros(n_hot, dtype=np.int64),
+        rng.integers(1, max(ndv, 2), n - n_hot).astype(np.int64)])
+    rng.shuffle(keys)
+    events = Table.from_columns(
+        "events",
+        Schema.of(Field("e_id", "int64", 8), Field("e_key", "int64", 8),
+                  Field("e_units", "int32", 4),
+                  Field("e_payload", "int32", 104)),
+        e_id=np.arange(n, dtype=np.int64),
+        e_key=keys,
+        e_units=rng.integers(0, 100, n),
+        e_payload=rng.integers(0, 1 << 20, n),
+    )
+    return DatabaseServer({"events": events}, stats_config=stats_config)
+
+
+def make_skew_probe() -> Program:
+    """Per-key probe over the skewed ``events`` relation (W_E-shaped): for
+    each worklist key, fetch its rows and accumulate the integral
+    ``e_units``. The optimizer's choice — correlated per-key queries vs
+    one prefetch served locally — hinges entirely on the expected rows per
+    key, i.e. on which statistics arm the database was built with."""
+    def W_S(worklist=()):
+        result = []
+        for wid in worklist:
+            per_key = q("events").where(col("e_key")
+                                        .eq(param("kid"))).bind(kid=wid)
+            for y in per_key:
+                result.append(y.e_units)
+        return result
+
+    return lift_program(W_S)
 
 
 # --------------------------------------------------------------------------

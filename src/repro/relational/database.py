@@ -87,9 +87,19 @@ class TableStats:
     row_bytes: int
     distinct: Mapping[str, int]        # per-column NDV
     minmax: Mapping[str, Tuple[float, float]]
+    # per-column histograms (repro.stats.histogram) — empty when the
+    # server was built with StatsConfig(histograms=False); their reprs
+    # carry content digests, so stats_fingerprint() content-addresses
+    # them through repr(TableStats) unchanged
+    hists: Mapping[str, "object"] = dataclasses.field(default_factory=dict)
 
     def ndv(self, col: str) -> int:
         return max(1, int(self.distinct.get(col, max(1, self.nrows // 10))))
+
+    def hist(self, col: str):
+        """The column's :class:`~repro.stats.histogram.ColumnHistogram`,
+        or None (no histogram statistics for it)."""
+        return self.hists.get(col)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,9 +124,13 @@ _INSTANCE_TOKENS = itertools.count(1)
 
 
 class DatabaseServer:
-    def __init__(self, tables: Dict[str, Table], model: ServerModel = ServerModel()):
+    def __init__(self, tables: Dict[str, Table], model: ServerModel = ServerModel(),
+                 stats_config=None):
+        from ..stats.histogram import DEFAULT_STATS_CONFIG
         self.tables = dict(tables)
         self.model = model
+        self.stats_config = stats_config if stats_config is not None \
+            else DEFAULT_STATS_CONFIG
         # process-unique identity: result caches shared across sessions key
         # on it so two servers' identically-named tables never collide
         self.instance_token = next(_INSTANCE_TOKENS)
@@ -124,6 +138,9 @@ class DatabaseServer:
         self._stats_version = 0
         self._table_versions: Dict[str, int] = {}
         self._data_versions: Dict[str, int] = {}
+        # per-column histogram builds since startup — the ANALYZE work
+        # counter targeted re-analyzes are judged by (tests/bench)
+        self.histogram_builds = 0
         self.analyze()
 
     def table(self, name: str) -> Table:
@@ -197,19 +214,31 @@ class DatabaseServer:
             out.append((t, digest))
         return tuple(out)
 
-    def analyze(self, *tables: str) -> int:
+    def analyze(self, *tables: str,
+                columns: Optional[Tuple[str, ...]] = None) -> int:
         """Refresh table statistics. With no arguments every table is
         re-analyzed (the legacy behaviour); naming tables refreshes only
-        those, bumping only their per-table versions."""
+        those, bumping only their per-table versions. ``columns`` makes
+        the refresh *targeted*: scalar statistics (row counts, NDV,
+        min/max) always recompute, but histograms rebuild only for the
+        named columns — the others carry over from the previous stats —
+        which is what the feedback controller's q-error path requests
+        when one site's estimate went bad."""
         names = tables or tuple(self.tables)
         for name in names:
-            self._stats[name] = self._compute_stats(self.tables[name])
+            self._stats[name] = self._compute_stats(
+                self.tables[name], columns=columns,
+                prev=self._stats.get(name) if columns else None)
             self._table_versions[name] = self._table_versions.get(name, 0) + 1
         self._stats_version += 1
         return self._stats_version
 
-    def _compute_stats(self, t: Table) -> TableStats:
-        distinct, minmax = {}, {}
+    def _compute_stats(self, t: Table,
+                       columns: Optional[Tuple[str, ...]] = None,
+                       prev: Optional[TableStats] = None) -> TableStats:
+        from ..stats.histogram import build_histogram
+        distinct, minmax, hists = {}, {}, {}
+        want = None if columns is None else set(columns)
         for f in t.schema.fields:
             arr = np.asarray(t.column(f.name))
             if arr.size:
@@ -218,7 +247,18 @@ class DatabaseServer:
             else:
                 distinct[f.name] = 1
                 minmax[f.name] = (0.0, 0.0)
-        return TableStats(t.nrows, t.row_bytes, distinct, minmax)
+            if not self.stats_config.histograms:
+                continue
+            if want is not None and f.name not in want:
+                # targeted analyze: keep the previous histogram (possibly
+                # stale — exactly the staleness the q-error signal scores)
+                carried = prev.hist(f.name) if prev is not None else None
+                if carried is not None:
+                    hists[f.name] = carried
+                continue
+            hists[f.name] = build_histogram(arr, self.stats_config)
+            self.histogram_builds += 1
+        return TableStats(t.nrows, t.row_bytes, distinct, minmax, hists)
 
     def stats(self, name: str) -> TableStats:
         return self._stats[name]
@@ -340,22 +380,25 @@ class DatabaseServer:
                              first_row_s=min(blocking, total), last_row_s=total)
 
     def _selectivity(self, node: Select) -> float:
-        from .algebra import Cmp, Col, BoolOp
-        p = node.pred
-        if isinstance(p, BoolOp):
-            l = self._selectivity(Select(p.left, node.child))
-            r = self._selectivity(Select(p.right, node.child))
-            return l * r if p.op == "and" else min(1.0, l + r)
-        if isinstance(p, Cmp):
-            col = p.left if isinstance(p.left, Col) else (p.right if isinstance(p.right, Col) else None)
-            if col is not None:
-                ndv = self._ndv_of(node.child, col.name)
-                if p.op == "==":
-                    return 1.0 / ndv
-                if p.op == "!=":
-                    return 1.0 - 1.0 / ndv
-                return 1.0 / 3.0  # range predicate, System-R default
-        return 0.5
+        from ..stats.selectivity import predicate_selectivity
+        sel = predicate_selectivity(
+            node.pred,
+            resolve=lambda col: self._hist_of(node.child, col),
+            ndv_of=lambda col: self._ndv_of(node.child, col))
+        return 0.5 if sel is None else sel
+
+    def _hist_of(self, node: Query, col: str):
+        """The column's histogram at the Select's input, resolved like
+        ``_ndv_of``: walk row-preserving nodes down to the base Scan. Join
+        and post-aggregate inputs return None (their output distribution
+        is not a base column's), falling back to the scalar estimates."""
+        if isinstance(node, Scan):
+            st = self._stats.get(node.table)
+            return st.hist(col) if st is not None else None
+        if isinstance(node, (Select, Project, OrderBy, Limit)):
+            kids = node.children()
+            return self._hist_of(kids[0], col) if kids else None
+        return None
 
     def _ndv_of(self, node: Query, col: str) -> float:
         if isinstance(node, Scan):

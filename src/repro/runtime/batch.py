@@ -41,7 +41,7 @@ import dataclasses
 import itertools
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
-from ..core.context import param_group_key
+from ..core.context import param_group_key, param_prov_key
 from ..core.regions import (BasicBlock, Interpreter, Program, Region,
                             UpdateRow)
 from ..obs.trace import NOOP_TRACER
@@ -131,11 +131,17 @@ class BatchClientEnv(ClientEnv):
 
     def _observe_binding(self, q, tables, pkey) -> None:
         self.site_cache.observe_binding(q, tables, pkey)
-        gkey = param_group_key(tables)
+        from ..core.cost import query_param_cols
         # hash, not payload: diversity needs a distinct COUNT, and frozen
-        # array bindings embed their full tobytes()
-        self.binding_sets.setdefault(gkey, set()).add(hash(pkey))
-        self.binding_totals[gkey] = self.binding_totals.get(gkey, 0) + 1
+        # array bindings embed their full tobytes(). Record under both the
+        # coarse per-table group and the finer provenance key (tables +
+        # param-compared columns) so differently-diverse sites over one
+        # table publish separate diversity fractions.
+        h = hash(pkey)
+        for gkey in (param_group_key(tables),
+                     param_prov_key(tables, query_param_cols(q))):
+            self.binding_sets.setdefault(gkey, set()).add(h)
+            self.binding_totals[gkey] = self.binding_totals.get(gkey, 0) + 1
 
     def execute_query(self, q, params: Optional[Mapping[str, object]] = None):
         tables = scan_tables(q)
@@ -260,9 +266,10 @@ def _input_diversity_fallback(binding_obs, source_program,
     bindings can depend on rows earlier invocations wrote, so the
     sequential branch never applies this fallback. Cache-level
     observations, when present for a group, take precedence."""
-    from ..api.cache import program_param_sites
+    from ..api.cache import program_param_prov_sites, program_param_sites
     groups = [g for g in program_param_sites(source_program)
               if g.startswith("qdiv:")]
+    groups += list(program_param_prov_sites(source_program))
     if not groups or not param_sets:
         return binding_obs
     seen = {g for g, _, _ in binding_obs}

@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..api.cache import query_tables
 from ..core.context import StatsProfile
 from ..obs.metrics import MetricsRegistry, registry_counter
+from ..stats.qerror import QErrorTracker
 
 __all__ = ["DriftEvent", "FeedbackController"]
 
@@ -90,6 +91,8 @@ class FeedbackController:
     swap_checks = registry_counter()
     swaps_accepted = registry_counter()
     swaps_rejected = registry_counter()
+    analyzes_fired = registry_counter()
+    analyzes_deduped = registry_counter()
 
     def __init__(self, session, drift_threshold: float = 3.0,
                  cost_drift_threshold: Optional[float] = 10.0,
@@ -133,6 +136,17 @@ class FeedbackController:
         self.swaps_accepted = 0
         self.swaps_rejected = 0
         self.swap_log: List[Dict[str, object]] = []
+        # per-site q-error accounting (the rows-drift ratio IS the q-error)
+        self.qerrors = QErrorTracker()
+        # table -> predicate columns of the sites whose q-error tripped,
+        # consumed by refresh() as the targeted re-analyze column set
+        self._pending_columns: Dict[str, set] = {}
+        # single-fire guard: table -> data version it was last analyzed at.
+        # The drift and q-error triggers may both request the same table in
+        # one batch; analyze() must run once per (table, data epoch).
+        self._analyzed_data_versions: Dict[str, int] = {}
+        self.analyzes_fired = 0
+        self.analyzes_deduped = 0
 
     # ------------------------------------------------------------- observing
     def _estimated_cost_s(self, q) -> float:
@@ -156,12 +170,22 @@ class FeedbackController:
             agg[1] += n_rows
             agg[2] += wall_s or 0.0
             est = db.estimate(q).n_rows
+            # the per-site q-error: max((obs+1)/(est+1), (est+1)/(obs+1)).
             # +1 smoothing keeps empty results from dividing by zero while
             # still flagging est≈0 vs observed≫0
-            ratio = max((n_rows + 1.0) / (est + 1.0), (est + 1.0) / (n_rows + 1.0))
+            ratio = self.qerrors.observe(sql, est, n_rows,
+                                         tables=query_tables(q))
             if ratio > self.drift_threshold:
                 tables = query_tables(q)
                 drifted.update(tables)
+                # targeted re-analyze: the site's estimate went bad, so
+                # refresh() rebuilds histograms for exactly the columns its
+                # predicates compare (scalars always recompute)
+                from ..core.cost import query_pred_cols
+                cols = query_pred_cols(q)
+                if cols:
+                    for t in tables:
+                        self._pending_columns.setdefault(t, set()).update(cols)
                 self.events.append(DriftEvent(
                     sql=sql, tables=tables, est_rows=est,
                     observed_rows=float(n_rows), ratio=float(ratio)))
@@ -245,7 +269,8 @@ class FeedbackController:
                 for sql, agg in self._sites.items() if agg[2]}
         return StatsProfile.of(iters=dict(self._published_iters),
                                site_wall_s=wall,
-                               bindings=dict(self._published_bindings))
+                               bindings=dict(self._published_bindings),
+                               qerrors=self.qerrors.latest())
 
     # ----------------------------------------------------- plan-swap guarding
     def _replay_cost_s(self, program, bindings) -> float:
@@ -317,11 +342,31 @@ class FeedbackController:
     # -------------------------------------------------------------- reacting
     def refresh(self, tables: Sequence[str]) -> None:
         """Re-analyze the drifted tables only: their stats versions bump, so
-        exactly the plans touching them fall out of the caches."""
+        exactly the plans touching them fall out of the caches.
+
+        Targeted and deduplicated: a table whose drift came through the
+        q-error path re-analyzes only the pending predicate columns'
+        histograms (scalars always recompute), and a table already analyzed
+        at its current DATA version is skipped entirely — the drift and
+        q-error triggers may both name one table in a batch, but analyze()
+        single-fires per (table, data epoch) (``analyzes_deduped`` counts
+        the suppressions)."""
         if not tables:
             return
-        self.session.db.analyze(*tables)
-        self.refreshes += 1
+        db = self.session.db
+        fired = False
+        for t in tables:
+            ver = db.data_version(t)
+            if self._analyzed_data_versions.get(t) == ver:
+                self.analyzes_deduped += 1
+                continue
+            cols = self._pending_columns.pop(t, None)
+            db.analyze(t, columns=tuple(sorted(cols)) if cols else None)
+            self._analyzed_data_versions[t] = ver
+            self.analyzes_fired += 1
+            fired = True
+        if fired:
+            self.refreshes += 1
 
     # ------------------------------------------------------------- telemetry
     def telemetry(self) -> Dict[str, object]:
@@ -332,6 +377,11 @@ class FeedbackController:
             "drift_events_wall_clock": sum(
                 1 for e in self.events if e.kind == "wall_clock"),
             "stats_refreshes": self.refreshes,
+            "analyzes_fired": self.analyzes_fired,
+            "analyzes_deduped": self.analyzes_deduped,
+            "qerror_sites": {sql: {"n": s.n, "mean": s.mean,
+                                   "worst": s.worst, "last": s.last}
+                             for sql, s in self.qerrors.sites().items()},
             "iteration_sites": {site: {"n": int(n), "avg_iters": tot / max(n, 1),
                                        "published": self._published_iters.get(site)}
                                 for site, (n, tot) in self._iter_sites.items()},

@@ -425,14 +425,18 @@ class SiteCache:
         feeds the per-site and per-group distinct-binding fractions."""
         self._site_stats.setdefault(query_site_key(q),
                                     _SiteStats()).observe(pkey)
-        gkey = param_group_key(tables)
-        self._group_tables.setdefault(gkey, tuple(sorted(tables)))
-        self._group_stats.setdefault(gkey, _SiteStats()).observe(pkey)
+        from ..core.context import param_prov_key
+        from ..core.cost import query_param_cols
+        for gkey in (param_group_key(tables),
+                     param_prov_key(tables, query_param_cols(q))):
+            self._group_tables.setdefault(gkey, tuple(sorted(tables)))
+            self._group_stats.setdefault(gkey, _SiteStats()).observe(pkey)
 
     def binding_fractions(self) -> Dict[str, float]:
-        """Distinct-binding fraction per table group (``qdiv:…`` keys) —
-        the publishable granularity (exact query trees change under
-        rewriting; table sets survive it)."""
+        """Distinct-binding fraction per table group (``qdiv:…`` keys) and
+        per provenance group (``qprov:…`` keys) — the publishable
+        granularities (exact query trees change under rewriting; table
+        sets and param-compared columns survive it)."""
         return {g: s.fraction for g, s in self._group_stats.items()}
 
     def site_binding_stats(self) -> Dict[str, Dict[str, float]]:

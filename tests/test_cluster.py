@@ -138,6 +138,17 @@ QUERY_SHAPES = [
     ("agg_global_float",
      Aggregate((), (AggSpec("sum", "t_hours", "h"),
                     AggSpec("avg", "t_hours", "a")), Scan("tasks")), None),
+    ("agg_grouped_int_avg",
+     Aggregate(("t_state",), (AggSpec("avg", "t_role_id", "a"),
+                              AggSpec("count", None, "n")),
+               Scan("tasks")), None),
+    ("agg_global_int_avg",
+     Aggregate((), (AggSpec("avg", "t_id", "a"),
+                    AggSpec("sum", "t_role_id", "s")), Scan("tasks")), None),
+    ("agg_int_avg_empty_input",
+     Aggregate((), (AggSpec("avg", "t_role_id", "a"),),
+               Select(Cmp("==", Col("t_state"), Lit(99)),
+                      Scan("tasks"))), None),
     ("agg_empty_input",
      Aggregate((), (AggSpec("sum", "t_hours", "h"),),
                Select(Cmp("==", Col("t_state"), Lit(99)),
@@ -184,6 +195,35 @@ class TestShardedQueries:
         intnode = Aggregate((), (AggSpec("sum", "t_role_id", "s"),),
                             Scan("tasks"))
         assert sh._combinable(intnode)
+
+    def test_int_avg_partial_combines_float_avg_does_not(self):
+        # avg over an int column ships (sum, count) partials — both add
+        # exactly — and divides once at the coordinator; avg over a float
+        # column would inherit float-sum order sensitivity, so it gathers
+        sh = sharded(4)
+        node = Aggregate(("t_state",),
+                         (AggSpec("avg", "t_role_id", "a"),), Scan("tasks"))
+        assert sh._combinable(node)
+        fnode = Aggregate(("t_state",),
+                          (AggSpec("avg", "t_hours", "a"),), Scan("tasks"))
+        assert not sh._combinable(fnode)
+
+    def test_int_avg_uses_scatter_path_and_stays_bit_exact(self):
+        base = fresh_db()
+        sh = sharded(4)
+        node = Aggregate(("t_state",), (AggSpec("avg", "t_role_id", "a"),
+                                        AggSpec("sum", "t_id", "s")),
+                         Scan("tasks"))
+        before = sh.scattered_queries
+        r0, _, _ = base.run(node)
+        r1, _, _ = sh.run(node)
+        assert sh.scattered_queries == before + 1
+        assert_tables_equal(r0, r1, "grouped int avg")
+        # the (sum, count) partial-state columns never leak to the caller
+        assert all("__av" not in c for c in r1.schema.names)
+        assert dict(zip(r1.schema.names,
+                        (f.dtype for f in r1.schema.fields)))["a"] \
+            == "float32"
 
     def test_estimates_match_unsharded(self):
         base = fresh_db()

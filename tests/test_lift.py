@@ -446,14 +446,15 @@ class TestLiftErrors:
         assert "ProgramBuilder" in str(ei.value)  # escape hatch named
         return ei
 
-    def test_dict_comprehension_rejected_with_location(self):
-        """List comprehensions lift (TestListComprehensions); dict/set/
-        generator comprehensions stay outside the vocabulary."""
+    def test_generator_expression_rejected_with_location(self):
+        """List/set/dict comprehensions lift (TestListComprehensions,
+        TestDictSetComprehensions); generator expressions stay outside the
+        vocabulary."""
         def f():
-            xs = {t.t_id: t.t_hours for t in load_all("tasks")}
+            xs = list(t.t_id for t in load_all("tasks"))
             return xs
 
-        ei = self._raises(f, match="comprehensions")
+        ei = self._raises(f, match="generator expressions")
         assert "test_lift.py" in str(ei.value)
 
     def test_unknown_name(self):
@@ -735,19 +736,108 @@ class TestListComprehensions:
         first = session.db.table("tasks").to_rows()[0]["t_hours"]
         assert out.outputs["total"] == pytest.approx(3 * first)
 
-    def test_setcomp_and_genexp_rejected(self):
-        def f_set():
-            xs = {t.t_id for t in load_all("tasks")}
-            return xs
-
+    def test_genexp_rejected(self):
         def f_gen():
             xs = list(t.t_id for t in load_all("tasks"))
             return xs
 
-        with pytest.raises(LiftError, match="comprehensions"):
-            lift_program(f_set)
-        with pytest.raises(LiftError, match="comprehensions"):
+        with pytest.raises(LiftError, match="generator expressions"):
             lift_program(f_gen)
+
+
+# --------------------------------------------------------------------------
+# Dict/set comprehensions: the same loop-accumulation path via MapPut
+# --------------------------------------------------------------------------
+
+class TestDictSetComprehensions:
+    def _session(self):
+        return CobraSession(make_wilos_db(200, ratio=10),
+                            CostCatalog(FAST_LOCAL))
+
+    def test_dict_comp_ir_byte_identical_to_explicit_loop(self):
+        """``{k: v for ...}`` must lower to EXACTLY the IR of the explicit
+        empty-map + m[k] = v loop (same accumulator name, same regions), so
+        the optimizer sees one program shape for both spellings."""
+        def comp():
+            m = {t.t_id: scale(t.t_hours) for t in load_all("tasks")}
+            return m
+
+        def explicit():
+            _comp0 = {}
+            for t in load_all("tasks"):
+                _comp0[t.t_id] = scale(t.t_hours)
+            m = _comp0
+            return m
+
+        assert lift_program(comp, name="X").key() == \
+            lift_program(explicit, name="X").key()
+
+    def test_set_comp_ir_byte_identical_to_explicit_loop(self):
+        """``{e for ...}`` is the keyed map with the member as its own key —
+        byte-identical to the explicit ``m[e] = e`` loop."""
+        def comp():
+            s = {t.t_state for t in load_all("tasks")}
+            return s
+
+        def explicit():
+            _comp0 = {}
+            for t in load_all("tasks"):
+                _comp0[t.t_state] = t.t_state
+            s = _comp0
+            return s
+
+        assert lift_program(comp, name="X").key() == \
+            lift_program(explicit, name="X").key()
+
+    def test_dict_comp_runs(self):
+        def comp():
+            m = {t.t_id: t.t_hours for t in load_all("tasks")}
+            return m
+
+        session = self._session()
+        out = session.compile(lift_program(comp)).run().outputs["m"]
+        rows = session.db.table("tasks").to_rows()
+        assert out == {r["t_id"]: r["t_hours"] for r in rows}
+
+    def test_set_comp_dedups_and_filters(self):
+        def comp():
+            s = {t.t_state for t in load_all("tasks") if t.t_hours > 10}
+            return s
+
+        session = self._session()
+        out = session.compile(lift_program(comp)).run().outputs["s"]
+        rows = session.db.table("tasks").to_rows()
+        want = {r["t_state"] for r in rows if r["t_hours"] > 10}
+        assert set(out) == want
+        assert all(k == v for k, v in out.items())
+
+    def test_dict_comp_with_filter_matches_explicit(self):
+        def comp():
+            m = {t.t_id: t.t_hours for t in load_all("tasks")
+                 if t.t_state == 2}
+            return m
+
+        def explicit():
+            m = {}
+            for t in load_all("tasks"):
+                if t.t_state == 2:
+                    m[t.t_id] = t.t_hours
+            return m
+
+        session = self._session()
+        got = session.compile(lift_program(comp)).run().outputs["m"]
+        assert got == session.compile(
+            lift_program(explicit)).run().outputs["m"]
+        assert 0 < len(got) < 200
+
+    def test_nested_dict_comp_rejected(self):
+        def f():
+            m = {t.t_id: [r.r_id for r in load_all("roles")]
+                 for t in load_all("tasks")}
+            return m
+
+        with pytest.raises(LiftError, match="nested"):
+            lift_program(f)
 
 
 # --------------------------------------------------------------------------

@@ -124,8 +124,12 @@ class TestSiteCacheUnit:
         (stats,) = cache.site_binding_stats().values()
         assert stats["lookups"] == 4 and stats["distinct"] == 2
         assert stats["fraction"] == pytest.approx(0.5)
-        (frac,) = cache.binding_fractions().values()
-        assert frac == pytest.approx(0.5)
+        # published at BOTH granularities: the coarse per-table group and
+        # the provenance group (tables + param-compared columns)
+        fracs = cache.binding_fractions()
+        assert sorted(g.split(":")[0] for g in fracs) == ["qdiv", "qprov"]
+        for frac in fracs.values():
+            assert frac == pytest.approx(0.5)
 
     def test_stats_and_describe_shape(self):
         cache = SiteCache()
@@ -441,8 +445,12 @@ class TestBindingObservations:
         batch = run_batch(session, make_wilos_e(),
                           [{"worklist": [1]}, {"worklist": [2]},
                            {"worklist": [1]}])
-        ((_site, total, distinct),) = batch.binding_observations
-        assert total == 3 and distinct == 2
+        # one observation per published granularity (qdiv + qprov), each
+        # seeing the same 3 lookups / 2 distinct bindings
+        obs = batch.binding_observations
+        assert sorted(g.split(":")[0] for g, _, _ in obs) == ["qdiv", "qprov"]
+        for _site, total, distinct in obs:
+            assert total == 3 and distinct == 2
 
     def test_input_diversity_fallback_when_plan_has_no_param_sites(self):
         """The compiled (prefetch) W_E executes ZERO parameterized queries;
@@ -454,8 +462,10 @@ class TestBindingObservations:
         exe = session.compile(make_wilos_e())
         assert "prefetch" in repr(exe.program.body)
         batch = exe.run_batch([{"worklist": [1]}] * 4)
-        ((_site, total, distinct),) = batch.binding_observations
-        assert total == 4 and distinct == 1
+        obs = batch.binding_observations
+        assert sorted(g.split(":")[0] for g, _, _ in obs) == ["qdiv", "qprov"]
+        for _site, total, distinct in obs:
+            assert total == 4 and distinct == 1
 
     def test_binding_free_program_reports_nothing(self):
         session = paper_session(make_orders_customer_db(100, 50))

@@ -1,0 +1,421 @@
+"""The statistics subsystem (repro.stats): histograms, selectivity,
+q-error feedback.
+
+Four acceptance properties, per the issue:
+
+  * **merge algebra** — ``merge_histograms`` is associative, commutative
+    and lossless (merged == built directly over the concatenated rows,
+    bucket-for-bucket), so a sharded coordinator's merged statistics are
+    bit-identical to the unsharded build. Property-tested with hypothesis
+    when installed, and with a seeded deterministic generator regardless
+    (the ``combine_snapshots`` pattern from test_metrics_merge.py).
+  * **plan flip** — on the skewed ``events`` relation the histogram's
+    ``param_eq_fraction`` (vs the scalar 1/NDV rule) flips the winning
+    plan from per-key queries to a prefetch, and the outputs are
+    bit-identical either way (integral payload — no float order effects).
+  * **q-error feedback** — a stale histogram produces a large per-site
+    q-error; the controller's targeted re-analyze rebuilds ONLY the
+    drifted predicate column's histogram and the site's q-error drops
+    back to ~1.
+  * **single-fire** — drift + q-error triggers naming one table in a
+    batch analyze once per (table, data epoch); repeats are deduped.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api.session import CobraSession
+from repro.cluster.database import ShardedDatabase
+from repro.core import CostCatalog, LoopRegion, loop_site_key
+from repro.core.context import ExecutionContext, StatsProfile
+from repro.programs import make_skew_db, make_skew_probe, make_wilos_db
+from repro.relational.algebra import Cmp, Col, Param, Scan, Select
+from repro.relational.database import SLOW_REMOTE, DatabaseServer
+from repro.runtime.feedback import FeedbackController
+from repro.stats import (ColumnHistogram, StatsConfig, build_histogram,
+                         merge_all, merge_histograms)
+from repro.stats.qerror import QErrorTracker, q_error
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dev dependency — see pyproject.toml
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------------
+# deterministic column generator: mixed skew so MCV/bucket boundaries are
+# actually exercised, integer-valued so every merge is bit-exact
+# --------------------------------------------------------------------------
+
+CFG = StatsConfig(n_buckets=8, n_mcv=4, sketch_k=64)
+
+
+def random_column(rng, n=None) -> np.ndarray:
+    n = int(rng.integers(0, 400)) if n is None else n
+    if n == 0:
+        return np.asarray([], dtype=np.int64)
+    hot = rng.random()
+    n_hot = int(n * hot)
+    vals = np.concatenate([
+        np.full(n_hot, int(rng.integers(0, 5)), dtype=np.int64),
+        rng.integers(0, int(rng.integers(2, 60)), n - n_hot,
+                     dtype=np.int64)])
+    rng.shuffle(vals)
+    return vals
+
+
+def columns(seed, k=3):
+    rng = np.random.default_rng(seed)
+    return [random_column(rng) for _ in range(k)]
+
+
+def hists_equal(a: ColumnHistogram, b: ColumnHistogram) -> bool:
+    """Full structural equality: backbone, sketch, and every DERIVED
+    summary (MCVs, equi-depth buckets, selectivity) bucket-for-bucket."""
+    if a != b:            # backbone: values + counts + config
+        return False
+    if (a.sketch is None) != (b.sketch is None):
+        return False
+    if a.sketch is not None and not np.array_equal(a.sketch, b.sketch):
+        return False
+    am, bm = a.mcvs, b.mcvs
+    if not (np.array_equal(am[0], bm[0]) and np.array_equal(am[1], bm[1])):
+        return False
+    for x, y in zip(a.buckets, b.buckets):
+        if not np.array_equal(x, y):
+            return False
+    return (a.content_digest() == b.content_digest()
+            and a.param_eq_fraction() == b.param_eq_fraction())
+
+
+class TestMergeSeeded:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+    def test_associative(self, seed):
+        a, b, c = (build_histogram(x, CFG) for x in columns(seed))
+        left = merge_histograms(merge_histograms(a, b), c)
+        right = merge_histograms(a, merge_histograms(b, c))
+        assert hists_equal(left, right)
+        assert hists_equal(merge_all([a, b, c]), left)
+
+    @pytest.mark.parametrize("seed", [10, 11, 12, 13])
+    def test_commutative(self, seed):
+        a, b = (build_histogram(x, CFG) for x in columns(seed, k=2))
+        assert hists_equal(merge_histograms(a, b), merge_histograms(b, a))
+
+    @pytest.mark.parametrize("seed", [20, 21, 22, 23])
+    def test_lossless_vs_direct_build(self, seed):
+        """Merging per-part histograms == building one histogram over the
+        concatenated rows — the property that makes a sharded
+        coordinator's merged statistics trustworthy."""
+        parts = columns(seed, k=4)
+        merged = merge_all([build_histogram(p, CFG) for p in parts])
+        direct = build_histogram(np.concatenate(parts), CFG)
+        assert hists_equal(merged, direct)
+
+    def test_empty_identity(self):
+        (x,) = columns(99, k=1)
+        h = build_histogram(x, CFG)
+        e = build_histogram(np.asarray([], dtype=np.int64), CFG)
+        assert hists_equal(merge_histograms(h, e), h)
+        assert hists_equal(merge_histograms(e, h), h)
+
+    def test_config_mismatch_rejected(self):
+        a = build_histogram(np.asarray([1, 2]), CFG)
+        b = build_histogram(np.asarray([1, 2]), StatsConfig(n_buckets=4))
+        with pytest.raises(ValueError, match="config mismatch"):
+            merge_histograms(a, b)
+
+    def test_param_eq_fraction_uniform_equals_one_over_ndv(self):
+        # exactly-uniform counts: Σ(f/N)² degenerates to 1/NDV, so the
+        # histogram model agrees with the scalar rule on uniform data
+        vals = np.repeat(np.arange(20), 50)
+        h = build_histogram(vals, CFG)
+        assert h.param_eq_fraction() == pytest.approx(1 / 20)
+
+    def test_param_eq_fraction_skew(self):
+        # 90% hot key: the self-join selectivity is dominated by hot²
+        vals = np.concatenate([np.zeros(900, dtype=np.int64),
+                               np.arange(1, 101, dtype=np.int64)])
+        h = build_histogram(vals, CFG)
+        assert h.param_eq_fraction() > 0.8
+        assert h.param_eq_fraction() > 50 * (1.0 / h.ndv)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def hist_columns(draw):
+        n = draw(st.integers(0, 120))
+        vals = draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+        return np.asarray(vals, dtype=np.int64)
+
+    class TestMergeProperties:
+        @settings(max_examples=150, deadline=None)
+        @given(hist_columns(), hist_columns(), hist_columns())
+        def test_associative(self, x, y, z):
+            a, b, c = (build_histogram(v, CFG) for v in (x, y, z))
+            assert hists_equal(merge_histograms(merge_histograms(a, b), c),
+                               merge_histograms(a, merge_histograms(b, c)))
+
+        @settings(max_examples=150, deadline=None)
+        @given(hist_columns(), hist_columns())
+        def test_commutative_and_lossless(self, x, y):
+            a, b = build_histogram(x, CFG), build_histogram(y, CFG)
+            m = merge_histograms(a, b)
+            assert hists_equal(m, merge_histograms(b, a))
+            assert hists_equal(m, build_histogram(np.concatenate([x, y]),
+                                                  CFG))
+else:
+    @pytest.mark.skip(reason="optional dev dependency (pip install "
+                             "hypothesis) — see pyproject.toml")
+    def test_hypothesis_properties():
+        pass
+
+
+# --------------------------------------------------------------------------
+# Sharded coordinator stats == unsharded stats, bucket for bucket
+# --------------------------------------------------------------------------
+
+class TestShardedStats:
+    @pytest.mark.parametrize("n_shards", [2, 4])
+    def test_merged_stats_bit_identical(self, n_shards):
+        base = make_skew_db(n=4000)
+        sh = ShardedDatabase.shard(
+            DatabaseServer(dict(base.tables), base.model), n_shards,
+            keys={"events": "e_key"})
+        assert base.stats_fingerprint(["events"]) == \
+            sh.stats_fingerprint(["events"])
+        for col in ("e_id", "e_key", "e_units"):
+            assert hists_equal(base.stats("events").hist(col),
+                               sh.stats("events").hist(col))
+
+    def test_merged_stats_after_reanalyze(self):
+        base = make_skew_db(n=2000)
+        sh = ShardedDatabase.shard(
+            DatabaseServer(dict(base.tables), base.model), 2,
+            keys={"events": "e_key"})
+        base.analyze("events")
+        sh.analyze("events")
+        assert base.stats_fingerprint(["events"]) == \
+            sh.stats_fingerprint(["events"])
+        assert hists_equal(base.stats("events").hist("e_key"),
+                           sh.stats("events").hist("e_key"))
+
+    def test_wilos_mixed_tables(self):
+        src = make_wilos_db(1000, seed=5)
+        base = DatabaseServer(dict(src.tables), src.model)
+        sh = ShardedDatabase.shard(
+            DatabaseServer(dict(src.tables), src.model), 2,
+            keys={"tasks": "t_role_id"})
+        assert base.stats_fingerprint(["tasks", "roles"]) == \
+            sh.stats_fingerprint(["tasks", "roles"])
+
+
+# --------------------------------------------------------------------------
+# Acceptance: histogram selectivity flips the winning plan; outputs are
+# bit-identical either way
+# --------------------------------------------------------------------------
+
+def _probe_loop_site():
+    prog = make_skew_probe()
+
+    def walk(r):
+        if isinstance(r, LoopRegion):
+            return r
+        for c in r.children():
+            f = walk(c)
+            if f is not None:
+                return f
+    lp = walk(prog.body)
+    return loop_site_key(lp.var, lp.source)
+
+
+def _plan_kind(exe) -> str:
+    body = repr(exe.program.body).lower()
+    return "prefetch" if "prefetch" in body else "query"
+
+
+class TestPlanFlip:
+    @pytest.fixture(scope="class")
+    def arms(self):
+        ctx = ExecutionContext(
+            batch_size=1, stats=StatsProfile.of({_probe_loop_site(): 4.0}))
+        out = {}
+        for name, cfg in [("hist", None),
+                          ("scalar", StatsConfig(histograms=False))]:
+            db = make_skew_db(stats_config=cfg)
+            sess = CobraSession(db, CostCatalog(SLOW_REMOTE))
+            out[name] = sess.compile(make_skew_probe(), context=ctx)
+        return out
+
+    def test_plans_differ(self, arms):
+        # scalar 1/NDV prices a per-key probe at N/NDV = 400 rows, so 4
+        # correlated fetches beat pulling all 20k rows; the histogram
+        # knows the key is drawn from the skewed data itself (~16k rows
+        # expected per probe), so the prefetch wins instead
+        assert _plan_kind(arms["scalar"]) == "query"
+        assert _plan_kind(arms["hist"]) == "prefetch"
+        assert arms["scalar"].program.body.key() != \
+            arms["hist"].program.body.key()
+
+    def test_outputs_bit_identical_across_flip(self, arms):
+        wl = [0, 3, 7, 11]
+        r_scalar = arms["scalar"].run(worklist=wl).outputs["result"]
+        r_hist = arms["hist"].run(worklist=wl).outputs["result"]
+        assert r_scalar == r_hist
+        assert len(r_scalar) > 18000            # hot key dominates
+        assert all(isinstance(v, (int, np.integer)) for v in r_scalar)
+
+
+# --------------------------------------------------------------------------
+# q-error feedback: stale histogram -> targeted re-analyze -> q-error drops
+# --------------------------------------------------------------------------
+
+def _key_query():
+    return Select(Cmp("==", Col("e_key"), Param("kid")), Scan("events"))
+
+
+class TestQErrorFeedback:
+    def _drifted_session(self):
+        """Uniform data analyzed, then silently replaced by the skewed
+        version (a bulk load nobody ran ANALYZE after): estimates for the
+        hot key are ~45x off."""
+        db = make_skew_db(hot=0.0, seed=7)
+        skewed = make_skew_db(hot=0.9, seed=7)
+        db.replace_table(skewed.table("events"))
+        return CobraSession(db, CostCatalog(SLOW_REMOTE))
+
+    def _observe_hot_key(self, session, fb):
+        q = _key_query()
+        result, _, _ = session.db.run(q, {"kid": 0})
+        fb.observe([(q, result.nrows, 0.0)])
+        return q.sql(), result.nrows
+
+    def test_qerror_drops_after_targeted_reanalyze(self):
+        session = self._drifted_session()
+        fb = FeedbackController(session)
+        sql, observed = self._observe_hot_key(session, fb)
+        before = fb.qerrors.site(sql).last
+        assert before > fb.drift_threshold          # stale stats flagged
+        assert len(fb.events) == 1
+
+        hb0 = session.db.histogram_builds
+        fb.refresh(["events"])
+        # targeted: ONLY the drifted predicate column's histogram rebuilt
+        assert session.db.histogram_builds == hb0 + 1
+        assert fb.analyzes_fired == 1
+
+        _, after_rows = self._observe_hot_key(session, fb)
+        after = fb.qerrors.site(sql).last
+        assert after < 2.0 < before
+        assert fb.qerrors.site(sql).worst == before
+
+    def test_untracked_columns_keep_stale_histograms(self):
+        session = self._drifted_session()
+        fb = FeedbackController(session)
+        self._observe_hot_key(session, fb)
+        stale_units = session.db.stats("events").hist("e_units")
+        fb.refresh(["events"])
+        st = session.db.stats("events")
+        # e_key rebuilt; e_units carried over from the stale build
+        assert st.hist("e_units") is stale_units
+        assert st.hist("e_key") is not None
+
+    def test_single_fire_per_table_and_epoch(self):
+        """Drift + q-error triggers both naming a table in one batch must
+        analyze it once; repeats over unchanged data are deduped."""
+        session = self._drifted_session()
+        fb = FeedbackController(session)
+        self._observe_hot_key(session, fb)
+        fb.refresh(["events"])
+        assert (fb.analyzes_fired, fb.analyzes_deduped) == (1, 0)
+        # second trigger, same data epoch -> deduped, no analyze work
+        hb = session.db.histogram_builds
+        ver = session.db.stats_version
+        fb.refresh(["events"])
+        assert (fb.analyzes_fired, fb.analyzes_deduped) == (1, 1)
+        assert session.db.histogram_builds == hb
+        assert session.db.stats_version == ver
+        # data changes -> the guard re-arms
+        session.db.replace_table(make_skew_db(hot=0.5).table("events"))
+        fb.refresh(["events"])
+        assert (fb.analyzes_fired, fb.analyzes_deduped) == (2, 1)
+
+    def test_qerror_in_stats_profile_but_not_fingerprint(self):
+        session = self._drifted_session()
+        fb = FeedbackController(session)
+        sql, _ = self._observe_hot_key(session, fb)
+        prof = fb.stats_profile()
+        assert prof.qerror_for(sql) > fb.drift_threshold
+        # q-error is published for observability, NOT plan identity —
+        # keying plans on a value that moves every observation would
+        # thrash exactly the caches re-analyze exists to protect
+        with_qe = ExecutionContext(
+            batch_size=1, stats=StatsProfile.of(qerrors={sql: 45.0}))
+        bare = ExecutionContext(batch_size=1)
+        assert with_qe.fingerprint() == bare.fingerprint()
+
+    def test_qerror_surfaces_in_telemetry_and_triage(self):
+        session = self._drifted_session()
+        fb = FeedbackController(session)
+        sql, _ = self._observe_hot_key(session, fb)
+        tel = fb.telemetry()
+        assert tel["qerror_sites"][sql]["worst"] > fb.drift_threshold
+        assert tel["qerror_sites"][sql]["n"] == 1
+
+        from repro.obs.triage import triage_fleet
+
+        class _RT:
+            pass
+        rt = _RT()
+        exe = session.compile(
+            make_skew_probe(),
+            context=ExecutionContext(
+                batch_size=1,
+                stats=StatsProfile.of({_probe_loop_site(): 4.0})))
+        rt._programs = {"W_S": exe.source}
+        rt._executables = {"W_S": exe}
+        rt._requests_by_program = {"W_S": 5}
+        rt.feedback = fb
+        (row,) = triage_fleet(rt)
+        assert row.qerror == fb.qerrors.site(sql).worst
+        assert f"q-error {row.qerror:.1f}" in row.describe()
+
+    def test_qerror_surfaces_in_explain(self):
+        session = self._drifted_session()
+        fb = FeedbackController(session)
+        sql, _ = self._observe_hot_key(session, fb)
+        exe = session.compile(
+            make_skew_probe(),
+            context=ExecutionContext(
+                batch_size=1,
+                stats=StatsProfile.of({_probe_loop_site(): 4.0})))
+        from repro.obs.explain import explain_plan
+        text = explain_plan(exe, feedback=fb)
+        assert "tracked q-error" in text
+
+
+# --------------------------------------------------------------------------
+# the q-error metric itself
+# --------------------------------------------------------------------------
+
+class TestQErrorMetric:
+    def test_symmetric_and_smoothed(self):
+        assert q_error(10, 10) == 1.0
+        assert q_error(10, 100) == q_error(100, 10)
+        assert np.isfinite(q_error(0, 1000))
+        assert q_error(0, 0) == 1.0
+
+    def test_tracker_accounting(self):
+        tr = QErrorTracker()
+        tr.observe("s", 10, 10, tables=("events",))
+        tr.observe("s", 10, 109)
+        s = tr.site("s")
+        assert s.n == 2
+        assert s.last == pytest.approx(10.0)
+        assert s.worst == pytest.approx(10.0)
+        assert s.mean == pytest.approx(5.5)
+        assert s.tables == ("events",)
+        assert tr.latest() == {"s": s.last}
+        assert tr.worst_sites()[0][0] == "s"
