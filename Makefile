@@ -2,7 +2,8 @@ PYTHON ?= python
 PYTHONPATH := src
 
 .PHONY: test test-fast lint bench-smoke bench bench-batch bench-serving \
-	bench-compiled bench-obs bench-cluster bench-stats examples
+	bench-compiled bench-obs bench-cluster bench-stats bench-compile \
+	examples
 
 # tier-1: the full suite (slow markers included)
 test:
@@ -73,6 +74,17 @@ bench-cluster:
 # run and the bench-smoke CI pass emit it too)
 bench-stats:
 	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=stats \
+		$(PYTHON) -m benchmarks.run bench_runtime
+
+# optimizer throughput: delta-driven vs exhaustive memo saturation on the
+# synthetic 10x-scale program (>=5x cold-compile saturation speedup with
+# the identical winning plan and bit-identical batch outputs — the bench
+# RAISES on plan divergence), the node-budget greedy fallback, and
+# cross-program MemoPool hits on a serving-fleet cold start; the
+# `compile` section lands in BENCH_runtime.json (the full bench-batch run
+# and the bench-smoke CI pass emit it too)
+bench-compile:
+	PYTHONPATH=$(PYTHONPATH) REPRO_BENCH_ONLY=compile \
 		$(PYTHON) -m benchmarks.run bench_runtime
 
 examples:

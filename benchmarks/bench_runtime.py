@@ -46,6 +46,14 @@ serving plan flips from the per-iteration query to the batch-64 prefetch
 WITHOUT any fixed-size batch config — and skewed vs uniform affinity-key
 routing (hot-shard makespan + triage skew flag).
 
+The ``compile`` section (``make bench-compile``; ``REPRO_BENCH_ONLY=compile``
+runs just it) measures optimizer throughput: delta-driven vs exhaustive
+memo saturation on the synthetic 10×-scale program (identical winning
+plan + bit-identical batch outputs enforced — the bench raises on
+divergence), the node-budget greedy fallback (``budget_exhausted`` in
+``explain()``, plan still valid), and cross-program MemoPool hits on a
+serving-fleet cold start.
+
 The ``stats`` section (``make bench-stats``; ``REPRO_BENCH_ONLY=stats``
 runs just it) exercises the histogram statistics subsystem: the
 histogram-vs-scalar selectivity plan flip on the skewed probe workload
@@ -151,6 +159,169 @@ def _bench_compiled(emit, smoke):
         "speedup_vs_exact": comp_rps / exact_rps if exact_rps else None,
         "speedup_vs_fast": comp_rps / fast_rps if fast_rps else None,
         "bit_identical": identical,
+    }
+
+
+def _bench_compile(emit, smoke):
+    """Delta-driven vs exhaustive memo saturation (``make bench-compile``).
+
+    Cold-compiles the synthetic 10×-scale program (``make_synthetic`` — a
+    handful of rewritable query loops buried in thousands of straight-line
+    skeleton statements, the shape of real ORM business logic) under both
+    schedulers and compares the ``saturate`` phase wall (best-of-N): the
+    exhaustive loop rescans every memo node every round, the applicability
+    index visits only nodes some rule can match. The two arms must agree
+    on the winning plan key and estimated cost — the bench RAISES on
+    divergence — and their compiled executables must produce bit-identical
+    batch outputs. Also exercises (a) the compile budget: a node budget
+    far below the program's memo size trips the greedy best-first
+    fallback, which still yields a valid runnable plan with
+    ``budget_exhausted`` surfaced in ``explain()``; (b) the session-scoped
+    cross-program MemoPool on a serving-fleet cold start: one worker
+    registering the fleet's program set replays pooled loop groups, so
+    ``memo_pool_hits`` > 0 in the runtime's ``metrics_snapshot()``."""
+    import dataclasses
+
+    from repro.api.session import Executable
+    from repro.core.search import run_search
+    from repro.programs import make_scan, make_synthetic, make_wilos_e
+
+    scale = 3 if smoke else 10
+    stmts = 120 if smoke else 700
+    n_tasks = 300 if smoke else 2000
+    reps = 2 if smoke else 3
+    bs = 2 if smoke else 4
+
+    db = make_wilos_db(n_tasks, ratio=10)
+    cat = CostCatalog(SLOW_REMOTE)
+    t0 = time.perf_counter()
+    prog = make_synthetic(scale, stmts)
+    lift_us = (time.perf_counter() - t0) * 1e6
+
+    arms = {}
+    for tag, kw in (("delta", {}), ("exhaustive", {"exhaustive": True})):
+        best_sat = best_total = float("inf")
+        res = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = run_search(prog, db, cat, **kw)
+            total = time.perf_counter() - t0
+            best_total = min(best_total, total)
+            best_sat = min(best_sat, r.phase_times["saturate"])
+            res = r
+        arms[tag] = {"result": res, "saturate_s": best_sat,
+                     "total_s": best_total}
+        emit(f"bench_runtime/compile/{tag}", best_total * 1e6,
+             f"saturate_us={best_sat * 1e6:.0f};"
+             f"nodes={res.memo_stats['and_nodes']};"
+             f"alts={res.alternatives};"
+             f"rounds={res.memo_stats['rounds']}")
+
+    d, x = arms["delta"], arms["exhaustive"]
+    # winning plans MUST agree — a scheduling order must never change the
+    # saturated memo, so divergence here is a correctness bug, not noise
+    if (d["result"].program.key() != x["result"].program.key()
+            or d["result"].est_cost != x["result"].est_cost):
+        raise RuntimeError(
+            "delta and exhaustive saturation diverged: "
+            f"delta={d['result'].program!r} (est {d['result'].est_cost}) "
+            f"exhaustive={x['result'].program!r} "
+            f"(est {x['result'].est_cost})")
+    sat_speedup = x["saturate_s"] / max(d["saturate_s"], 1e-12)
+    total_speedup = x["total_s"] / max(d["total_s"], 1e-12)
+
+    # bit-identical execution of the two arms' winning plans
+    session = CobraSession(db, cat)
+    exe_d = Executable(session, prog, d["result"], from_cache=False)
+    exe_x = Executable(session, prog, x["result"], from_cache=False)
+    bd = exe_d.run_batch([{}] * bs)
+    bx = exe_x.run_batch([{}] * bs)
+    identical = (bd.outputs == bx.outputs
+                 and bd.simulated_s == bx.simulated_s)
+    emit("bench_runtime/compile/saturate_speedup", 0,
+         f"speedup={sat_speedup:.2f}x;total={total_speedup:.2f}x;"
+         f"identical_plan=True;identical_outputs={identical}")
+    if not smoke and sat_speedup < 5.0:
+        raise RuntimeError(
+            f"delta saturation speedup {sat_speedup:.2f}x < 5x on the "
+            f"10x-scale program ({x['saturate_s'] * 1e3:.1f}ms exhaustive "
+            f"vs {d['saturate_s'] * 1e3:.1f}ms delta)")
+
+    # --------------------------- compile budget -> greedy best-first
+    # the greedy plan is a DIFFERENT (costlier) plan, so its float
+    # accumulations may differ from the full plan's in the low bits (the
+    # same reason plan swaps go through the bit guard) — validity here is
+    # "runs, same shape, numerically equal", not bit equality
+    def _approx(a, b, rel=1e-4):
+        if isinstance(a, dict) and isinstance(b, dict):
+            return (a.keys() == b.keys()
+                    and all(_approx(a[k], b[k], rel) for k in a))
+        if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+            return (len(a) == len(b)
+                    and all(_approx(x, y, rel) for x, y in zip(a, b)))
+        if isinstance(a, float) or isinstance(b, float):
+            return abs(a - b) <= rel * max(1.0, abs(a), abs(b))
+        return a == b
+
+    budget_cfg = OptimizerConfig(node_budget=500)
+    sess_b = CobraSession(db, cat, config=budget_cfg)
+    t0 = time.perf_counter()
+    exe_b = sess_b.compile(prog)
+    budget_us = (time.perf_counter() - t0) * 1e6
+    bb = exe_b.run_batch([{}] * bs)
+    budget_valid = _approx(bb.outputs, bd.outputs)
+    budget_ok = (exe_b.report.budget_exhausted
+                 and "EXHAUSTED" in exe_b.explain()
+                 and budget_valid)
+    emit("bench_runtime/compile/budget_greedy", budget_us,
+         f"budget_exhausted={exe_b.report.budget_exhausted};"
+         f"est={exe_b.est_cost_s:.4g}s_vs_full={exe_d.est_cost_s:.4g}s;"
+         f"valid_outputs={budget_valid}")
+
+    # ----------------- memo-pool cross-program hits on a fleet cold start
+    # one serving worker registering the fleet's program set: the two
+    # synthetic variants share loop subtrees, so the second compile
+    # replays pooled groups instead of re-deriving them
+    fleet_session = _paper_session(make_wilos_db(n_tasks, ratio=10),
+                                   SLOW_REMOTE)
+    rt = ServingRuntime(fleet_session, batch_size=8, drift_threshold=1e9)
+    rt.register(make_wilos_e())
+    rt.register(make_scan())
+    rt.register(make_synthetic(2, 25))
+    rt.register(dataclasses.replace(make_synthetic(3, 25), name="SYN_B"))
+    snap = rt.metrics_snapshot()
+    pool_hits = int(snap.get("session_memo_pool_hits", 0))
+    pool = fleet_session.telemetry
+    emit("bench_runtime/compile/memo_pool_fleet", 0,
+         f"hits={pool_hits};misses={pool['memo_pool_misses']};"
+         f"entries={pool['memo_pool_entries']}")
+    if pool_hits <= 0:
+        raise RuntimeError("memo pool saw no cross-program hits on the "
+                           "serving fleet cold start")
+
+    return {
+        "program": {"scale": scale, "stmts_per_loop": stmts,
+                    "lift_us": lift_us,
+                    "memo_nodes": d["result"].memo_stats["and_nodes"],
+                    "alternatives": d["result"].alternatives},
+        "delta": {"saturate_us": d["saturate_s"] * 1e6,
+                  "total_us": d["total_s"] * 1e6,
+                  "phase_rounds": d["result"].memo_stats.get(
+                      "phase_rounds", {})},
+        "exhaustive": {"saturate_us": x["saturate_s"] * 1e6,
+                       "total_us": x["total_s"] * 1e6},
+        "saturate_speedup": sat_speedup,
+        "total_speedup": total_speedup,
+        "identical_plan": True,
+        "bit_identical_outputs": identical,
+        "budget": {"budget_exhausted": exe_b.report.budget_exhausted,
+                   "explained": budget_ok,
+                   "valid_outputs": budget_valid,
+                   "est_cost_s": exe_b.est_cost_s,
+                   "full_est_cost_s": exe_d.est_cost_s},
+        "memo_pool": {"hits": pool_hits,
+                      "misses": pool["memo_pool_misses"],
+                      "entries": pool["memo_pool_entries"]},
     }
 
 
@@ -502,6 +673,12 @@ def main(emit):
     if only in (None, "stats"):
         traj["stats"] = _bench_stats(emit, smoke)
         if only == "stats":
+            return traj
+
+    # ------------------------- delta vs exhaustive saturation, budget, pool
+    if only in (None, "compile"):
+        traj["compile"] = _bench_compile(emit, smoke)
+        if only == "compile":
             return traj
 
     # ------------------------------------------ compiled tier vs interpreter

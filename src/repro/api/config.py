@@ -69,6 +69,13 @@ class OptimizerConfig:
     topk: int = 4                             # plans kept per memo group
     max_combos: int = 4096                    # combination cross-product bound
     max_rounds: int = 64                      # saturation round limit
+    # compile-time saturation budgets (None = unbudgeted). When either
+    # trips mid-saturation the search degrades to greedy best-first over
+    # the partial memo and the plan reports `budget_exhausted` — never an
+    # error. Budgets change which plan can be found, so they are part of
+    # cache_key(); the unbudgeted result is unchanged.
+    node_budget: Optional[int] = None         # cap on memo AND-nodes
+    wall_budget_s: Optional[float] = None     # cap on saturation wall clock
     use_plan_cache: bool = True               # sessions may bypass the cache
     # promote a (program, plan, context) pair to the compiled execution tier
     # after this many interpreted invocations (None = compiled tier off).
@@ -83,6 +90,11 @@ class OptimizerConfig:
         if self.compile_hot_plans is not None and self.compile_hot_plans < 1:
             raise ValueError("compile_hot_plans must be >= 1 (or None: "
                              "compiled tier disabled)")
+        if self.node_budget is not None and self.node_budget < 1:
+            raise ValueError("node_budget must be >= 1 (or None: unbudgeted)")
+        if self.wall_budget_s is not None and self.wall_budget_s <= 0:
+            raise ValueError("wall_budget_s must be > 0 (or None: "
+                             "unbudgeted)")
         if isinstance(self.rules, list):
             object.__setattr__(self, "rules", tuple(self.rules))
         if isinstance(self.exclude_rules, list):
@@ -123,9 +135,10 @@ class OptimizerConfig:
         return tuple(r.name for r in self.resolve_rules())
 
     def _rules_key(self) -> Tuple:
-        """(name, revision) pairs of the selected rules — a user rule's
-        revision is a source hash, so editing its body changes every cache
-        key it participated in.
+        """(name, revision, phase) triples of the selected rules — a user
+        rule's revision is a source hash, so editing its body (or moving it
+        to another saturation phase) changes every cache key it
+        participated in.
 
         Runs on EVERY compile (plan-cache hits included), so it avoids
         materializing rule objects: for the default registry a module-level
@@ -152,10 +165,20 @@ class OptimizerConfig:
         return ("cost-model",
                 f"{cm.__module__}.{getattr(cm, '__qualname__', cm)}", rev)
 
+    def budget(self):
+        """The :class:`~repro.core.dag.Budget` this config implies, or
+        ``None`` when unbudgeted."""
+        if self.node_budget is None and self.wall_budget_s is None:
+            return None
+        from ..core.dag import Budget
+        return Budget(node_budget=self.node_budget,
+                      wall_budget_s=self.wall_budget_s)
+
     def cache_key(self) -> Tuple:
         """Stable identity for plan-cache keying."""
         return ("cfg", self.choice, self._rules_key(), self._cost_model_key(),
-                self.topk, self.max_combos, self.max_rounds)
+                self.topk, self.max_combos, self.max_rounds,
+                self.node_budget, self.wall_budget_s)
 
     # --------------------------------------------------------------- presets
     @classmethod

@@ -40,6 +40,13 @@ Supported constructs (all lower to the same IR the builder emits by hand):
     nested comprehensions stay ``LiftError``;
   * calls to :func:`~repro.core.regions.register_function`-registered pure
     functions by name, plus ``len``/``min``/``max`` builtins;
+  * **small pure helper functions inlined automatically** — an unregistered
+    helper reached through the closure/globals whose body is simple
+    ``name = expr`` assignments plus a single trailing ``return expr`` (no
+    loops, branches, queries, or markers) is inlined by expression
+    substitution, producing IR byte-identical to inlining it by hand; a
+    helper outside that subset raises :class:`LiftError` naming the
+    violated constraint and its location;
   * ORM attribute navigation (``row.customer``) via the ``relations``
     mapping — the Hibernate-style entity relationships that in a real ORM
     live outside the code.
@@ -175,6 +182,10 @@ class _Static:
 
 _SCALARS = (bool, int, float, str)
 
+# sentinel: the call is not even an inlining candidate (fall through to the
+# generic cannot-call error rather than an inliner-specific one)
+_NOT_INLINED = object()
+
 
 # --------------------------------------------------------------------------
 # The lifter
@@ -198,6 +209,7 @@ class _Lifter:
         self.out_names: Tuple[str, ...] = self._scan_outputs(fnode)
         self._comp_depth = 0           # comprehensions never nest
         self._in_while_test = False    # comprehensions can't lower there
+        self._inline_depth = 0         # helper-inlining recursion guard
 
     # ------------------------------------------------------------ diagnostics
     def _err(self, node, msg: str) -> LiftError:
@@ -762,10 +774,136 @@ class _Lifter:
                 return f(*args, **kwargs)
             except Exception as e:
                 raise self._err(node, f"query construction failed: {e!r}")
+        inlined = self._inline_call(node, f, args, kwargs)
+        if inlined is not _NOT_INLINED:
+            return inlined
         fname = getattr(f, "__name__", repr(f))
         raise self._err(node, f"cannot call {fname!r} on traced values — "
                               f"register_function({fname!r}, fn) makes it "
-                              f"traceable as a pure function")
+                              f"traceable as a pure function, or a small "
+                              f"single-return helper is inlined automatically")
+
+    # ---------------------------------------------------------- helper inlining
+    _INLINE_MAX_DEPTH = 8
+
+    def _inline_call(self, node: ast.Call, f, args, kwargs):
+        """Inline a small pure helper called with traced arguments.
+
+        The inlined subset is exactly what manual inlining by expression
+        substitution supports: a body of simple ``name = expr`` assignments
+        followed by a single ``return expr``, no loops/branches/queries and
+        no query markers. Parameters and intermediate names bind in a
+        TEMPORARY scope without emitting ``let`` statements, so the IR is
+        byte-identical to the user substituting the helper's expression by
+        hand (a temp used twice duplicates its expression, exactly as
+        manual substitution would).
+
+        Returns ``_NOT_INLINED`` when ``f`` is not even a candidate (not a
+        plain source-available Python function) — the caller falls through
+        to its generic error. A candidate that VIOLATES the inlinable
+        subset raises a located :class:`LiftError` naming the constraint."""
+        if not inspect.isfunction(f):
+            return _NOT_INLINED
+        shadowed = _FUNCTIONS.get(f.__name__)
+        if shadowed is not None and f is not shadowed:
+            # a local helper sharing a registered function's name is
+            # ambiguous — NEVER resolve it silently, in either direction
+            raise self._err(
+                node, f"local callable {f.__name__!r} shadows the registered "
+                      f"function of the same name — rename the helper, or "
+                      f"register_function({f.__name__!r}, fn) to replace the "
+                      f"registry entry")
+        try:
+            lines, lnum = inspect.getsourcelines(f)
+            fnode, _ = _function_node("".join(lines))
+        except (OSError, TypeError, SyntaxError, LiftError):
+            return _NOT_INLINED
+        fname = f.__name__
+
+        def inline_err(msg: str) -> LiftError:
+            return self._err(node, f"cannot inline helper {fname}(): {msg}")
+
+        if self._inline_depth >= self._INLINE_MAX_DEPTH:
+            raise inline_err(f"inlining recursion deeper than "
+                             f"{self._INLINE_MAX_DEPTH} (is it recursive?)")
+        try:
+            bound = inspect.signature(f).bind(*args, **kwargs)
+            bound.apply_defaults()
+        except TypeError as e:
+            raise inline_err(f"argument mismatch: {e}")
+        # body shape: optional docstring, simple assigns, one trailing return
+        body = list(fnode.body)
+        if body and isinstance(body[0], ast.Expr) \
+                and isinstance(body[0].value, ast.Constant) \
+                and isinstance(body[0].value.value, str):
+            body = body[1:]
+        if not body or not isinstance(body[-1], ast.Return) \
+                or body[-1].value is None:
+            raise inline_err("body must end in a single `return <expr>`")
+        assigns: List[ast.Assign] = []
+        for stmt in body[:-1]:
+            if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                raise inline_err(
+                    f"only `name = expr` assignments and a trailing return "
+                    f"are inlinable, found {type(stmt).__name__!r} at line "
+                    f"{lnum - 1 + getattr(stmt, 'lineno', 0)}")
+            assigns.append(stmt)
+        helper_env = _base_env(getattr(f, "__globals__", {}))
+        if getattr(f, "__closure__", None):
+            for cname, cell in zip(f.__code__.co_freevars, f.__closure__):
+                try:
+                    helper_env[cname] = cell.cell_contents
+                except ValueError:
+                    pass
+        self._check_inlinable_exprs(
+            [a.value for a in assigns] + [body[-1].value],
+            helper_env, inline_err)
+        # evaluate in the helper's own environment: a temp scope holding the
+        # bound parameters (traced Exprs pass through; trace-time values stay
+        # static) — crucially no b.let, so nothing is emitted for the binding
+        scope: Dict[str, object] = {}
+        for pname, v in bound.arguments.items():
+            scope[pname] = v if isinstance(v, Expr) else _Static(v)
+        saved = (self.scope, self.env, self.filename, self.line_offset)
+        self.scope, self.env = scope, helper_env
+        self.filename = f.__code__.co_filename
+        self.line_offset = lnum - 1
+        self._inline_depth += 1
+        try:
+            for stmt in assigns:
+                v = self._expr(stmt.value)
+                scope[stmt.targets[0].id] = \
+                    v if isinstance(v, Expr) else _Static(v)
+            return self._expr(body[-1].value)
+        finally:
+            self._inline_depth -= 1
+            self.scope, self.env, self.filename, self.line_offset = saved
+
+    def _check_inlinable_exprs(self, exprs: Sequence[ast.expr], helper_env,
+                               inline_err) -> None:
+        """Reject constructs manual expression substitution could not
+        produce: anything that emits IR statements (loops via
+        comprehensions) or touches the database (query construction,
+        tracing markers) from inside the helper."""
+        forbidden = (ast.ListComp, ast.SetComp, ast.DictComp,
+                     ast.GeneratorExp, ast.Lambda, ast.IfExp, ast.Await,
+                     ast.Yield, ast.YieldFrom, ast.NamedExpr)
+        for e in exprs:
+            for sub in ast.walk(e):
+                if isinstance(sub, forbidden):
+                    raise inline_err(
+                        f"{type(sub).__name__!r} in the body — inlined "
+                        f"helpers are straight-line scalar expressions")
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Name):
+                    target = helper_env.get(sub.func.id)
+                    if target is _q or self._marker_name(target) is not None:
+                        raise inline_err(
+                            f"{sub.func.id}() in the body — inlined helpers "
+                            f"must not construct queries or use tracing "
+                            f"markers; call the query at the call site and "
+                            f"pass the value in")
 
 
 # --------------------------------------------------------------------------

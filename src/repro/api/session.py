@@ -68,6 +68,9 @@ class PlanReport:
     swap_checked: bool = False
     swap_accepted: Optional[bool] = None
     swap_replayed: int = 0
+    # True when a compile-time budget tripped during saturation and this
+    # plan came from the greedy best-first fallback over a partial memo
+    budget_exhausted: bool = False
 
     @property
     def binding_diversity(self) -> Dict[str, float]:
@@ -87,6 +90,8 @@ class PlanReport:
         if div:
             avg = sum(div.values()) / len(div)
             ctx += f", binding-diversity~{avg:.2f}@{len(div)} site(s)"
+        if self.budget_exhausted:
+            ctx += ", BUDGET EXHAUSTED (greedy fallback)"
         return (f"[{self.domain}] {self.name}: est {self.est_cost_s:.4g}s "
                 f"over {self.alternatives} alternatives "
                 f"({self.opt_time_s*1e3:.1f}ms, {src}{ctx})")
@@ -161,7 +166,9 @@ class Executable:
             tier=self.last_tier,
             swap_checked=bool(swap.get("checked", False)),
             swap_accepted=swap.get("accepted"),
-            swap_replayed=int(swap.get("replayed", 0)))
+            swap_replayed=int(swap.get("replayed", 0)),
+            budget_exhausted=bool(getattr(self.result, "budget_exhausted",
+                                          False)))
 
     def describe(self) -> str:
         body = repr(self.program.body)
@@ -286,6 +293,11 @@ class CobraSession:
         # the session serves batches); per-compile `context=` overrides it
         self.context = context if context is not None else ONE_SHOT
         self.plan_cache = PlanCache(plan_cache_entries)
+        # cross-program memo-group sharing: saturated loop groups replay
+        # into later compiles (other programs, context-driven recompiles);
+        # hit/miss counters land in self.metrics at hit time
+        from ..core.memopool import MemoPool
+        self.memo_pool = MemoPool(metrics=self.metrics)
         # optional disk-backed cross-session store (a PlanStore or a dir path)
         if plan_store is not None:
             from ..runtime.store import PlanStore
@@ -313,7 +325,8 @@ class CobraSession:
             config_key = ("cfg", config.choice,
                           tuple(r.name for r in rules_override),
                           config._cost_model_key(),
-                          config.topk, config.max_combos, config.max_rounds)
+                          config.topk, config.max_combos, config.max_rounds,
+                          config.node_budget, config.wall_budget_s)
         else:
             config_key = config.cache_key()
         # per-table stats versions of exactly the tables the program touches:
@@ -373,7 +386,8 @@ class CobraSession:
                                 max_combos=cfg.max_combos,
                                 max_rounds=cfg.max_rounds,
                                 context=ctx, cost_model=cfg.cost_model,
-                                tracer=self.tracer)
+                                tracer=self.tracer, budget=cfg.budget(),
+                                memo_pool=self.memo_pool)
             if self.tracer.enabled:
                 sp.attrs["est_cost_s"] = result.est_cost
                 sp.attrs["alternatives"] = result.alternatives
@@ -550,7 +564,11 @@ class CobraSession:
              "compiled_executions": self.compiled_executions,
              "plan_swaps_accepted": self.plan_swaps_accepted,
              "plan_swaps_rejected": self.plan_swaps_rejected,
+             "memo_pool_hits": self.memo_pool.hits,
+             "memo_pool_misses": self.memo_pool.misses,
+             "memo_pool_entries": len(self.memo_pool),
              "stats_version": self.db.stats_version}
+        self.metrics.gauge("memo_pool_entries", len(self.memo_pool))
         self.metrics.gauge("stats_version", self.db.stats_version)
         cache_stats = {f"cache_{k}": v
                        for k, v in self.plan_cache.stats().items()}

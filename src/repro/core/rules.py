@@ -688,7 +688,10 @@ def rule_T3(memo: Memo, and_id: int, ctx: RuleContext) -> int:
 
 def default_rules() -> List[Rule]:
     return [
-        Rule("toFIR", "loop", rule_fir_convert),
+        # toFIR is a NORMALIZATION: it rewrites imperative loops into the
+        # F-IR form every other rule matches on, so it saturates first —
+        # the explore phase then starts from a fully-normalized frontier
+        Rule("toFIR", "loop", rule_fir_convert, phase="normalize"),
         Rule("T1", "slot-project", rule_T1),
         Rule("T2", "slot-project", rule_T2_plain),
         Rule("T2c", "slot-project", rule_T2_correlated),

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..relational.algebra import Query, Scan, scan_tables
 from .cost import CostCatalog, CostModel, query_has_params
-from .dag import AndNode, Memo, expand
+from .dag import AndNode, Budget, Memo, expand, expand_exhaustive
 from .fir import FExpr, FPrefetchE, NameGen, fold_to_loop
 from .regions import (Assign, BasicBlock, CondRegion, IBin, IQuery,
                       IQueryValues, IScalarQuery, IVar, LoopRegion, Program,
@@ -473,6 +473,13 @@ class OptimizationResult:
     phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
     rule_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
     rules_fired: Tuple[str, ...] = ()
+    # saturation budget outcome: True when a node/wall budget tripped and
+    # the plan came from the greedy best-first fallback over a partial memo
+    budget_exhausted: bool = False
+    # per-phase per-rule saturation accounting:
+    # phase -> rule -> {"matched", "fired", "missed"}
+    rule_stats: Dict[str, Dict[str, Dict[str, int]]] = \
+        dataclasses.field(default_factory=dict)
 
 
 def _plan_rules(plan: Plan, memo: Memo) -> Tuple[str, ...]:
@@ -508,7 +515,9 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
                choice: str = "cost", rules: Optional[Sequence] = None,
                topk: int = _TOPK, max_combos: int = _MAX_COMBOS,
                max_rounds: int = 64, context=None,
-               cost_model=None, tracer=None) -> OptimizationResult:
+               cost_model=None, tracer=None,
+               budget: Optional[Budget] = None, memo_pool=None,
+               exhaustive: bool = False) -> OptimizationResult:
     """One full memo pass: build → saturate rules → search → codegen.
 
     ``context`` is an :class:`~repro.core.context.ExecutionContext` (batch
@@ -517,6 +526,16 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
     constructed as ``cost_model(db, catalog, context)``. ``tracer`` (an
     :class:`repro.obs.trace.Tracer`) records one span per phase and per
     saturation round.
+
+    ``budget`` (a :class:`~repro.core.dag.Budget`) bounds saturation: when
+    it trips, the search degrades to GREEDY best-first (top-1 per group,
+    best-child-only combination) over the partial memo and the result
+    reports ``budget_exhausted`` — never an error. ``memo_pool`` (a
+    :class:`~repro.core.memopool.MemoPool`) replays saturated groups
+    shared with earlier compiles and harvests new ones. ``exhaustive``
+    switches to the reference rescan-everything saturation loop
+    (:func:`~repro.core.dag.expand_exhaustive`) — used by the parity tests
+    and ``make bench-compile``; the winning plan must be identical.
 
     This is the uncached engine; callers wanting compile-once/execute-many
     semantics should go through ``repro.api.CobraSession``, which fronts
@@ -535,10 +554,30 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
         memo, root = build_memo(program, ctx)
     t1 = time.perf_counter()
     phases["build_memo"] = t1 - t0
+    rule_list = list(rules) if rules is not None else default_rules()
+    prefired: set = set()
+    replayed = 0
+    if memo_pool is not None and not exhaustive:
+        with _span("memo-pool-seed"):
+            replayed, prefired = memo_pool.seed(memo, ctx, rule_list)
     with _span("saturate"):
-        stats = expand(memo,
-                       list(rules) if rules is not None else default_rules(),
-                       ctx, max_rounds=max_rounds, tracer=tracer)
+        if exhaustive:
+            stats = expand_exhaustive(memo, rule_list, ctx,
+                                      max_rounds=max_rounds, tracer=tracer)
+        else:
+            stats = expand(memo, rule_list, ctx, max_rounds=max_rounds,
+                           tracer=tracer, budget=budget, prefired=prefired)
+    exhausted = bool(stats.get("budget_exhausted"))
+    if memo_pool is not None and not exhaustive and not exhausted:
+        # a partial (budgeted) memo must never be harvested — later
+        # compiles would replay it as if saturated
+        memo_pool.harvest(memo, ctx, rule_list, prefired)
+    if replayed:
+        # pooled alternatives are part of the searched space: report them
+        # like a cold compile would so plan reports stay comparable
+        stats["alternatives_added"] = \
+            stats.get("alternatives_added", 0) + replayed
+        stats["pool_replayed"] = replayed
     t2 = time.perf_counter()
     phases["saturate"] = t2 - t1
     cm = (cost_model or CostModel)(db, catalog, context)
@@ -546,6 +585,10 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
     # (the serving cache refuses them), so the model must not amortize them
     from .regions import write_tables
     cm.write_tables = frozenset(write_tables(program))
+    if exhausted:
+        # greedy best-first fallback: keep only the best plan per group and
+        # never enumerate combination cross-products
+        topk, max_combos = 1, 1
     searcher = Searcher(memo, cm, ctx, choice=choice, topk=topk,
                         max_combos=max_combos)
     with _span("search"):
@@ -566,7 +609,10 @@ def run_search(program: Program, db, catalog: CostCatalog, *,
                               stats.get("alternatives_added", 0),
                               phase_times=phases,
                               rule_hits=dict(memo.rule_hits),
-                              rules_fired=_plan_rules(best, memo))
+                              rules_fired=_plan_rules(best, memo),
+                              budget_exhausted=exhausted,
+                              rule_stats={p: {r: dict(c) for r, c in rs.items()}
+                                          for p, rs in memo.rule_stats.items()})
 
 
 def optimize(program: Program, db, catalog: CostCatalog,

@@ -89,6 +89,20 @@ def explain_plan(exe, *, feedback=None, site_cache=None,
     if phases:
         lines.append("  optimizer phases: " + ", ".join(
             f"{k}={fmt_seconds(v)}" for k, v in phases.items()))
+    rule_stats = dict(getattr(result, "rule_stats", {}) or {})
+    for phase in sorted(rule_stats):
+        per_rule = rule_stats[phase]
+        if not per_rule:
+            continue
+        body = ", ".join(
+            f"{name} fired {st.get('fired', 0)}/{st.get('matched', 0)} "
+            f"(missed {st.get('missed', 0)})"
+            for name, st in sorted(per_rule.items()))
+        lines.append(f"    saturation phase {phase}: {body}")
+    if getattr(report, "budget_exhausted", False):
+        lines.append("  budget: EXHAUSTED -> greedy best-first fallback "
+                     "(plan valid; raise node_budget/wall_budget_s for the "
+                     "full search)")
     lines.append("  plan:")
 
     def fetch_annotation(q, binding_site: Optional[str] = None) -> str:

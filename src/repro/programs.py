@@ -36,6 +36,7 @@ __all__ = [
     "make_p0", "make_p1", "make_p2", "make_m0", "make_scan",
     "make_wilos_a", "make_wilos_b", "make_wilos_c", "make_wilos_d",
     "make_wilos_e", "make_wilos_f", "WILOS_PROGRAMS",
+    "make_synthetic", "synthetic_source",
 ]
 
 # make the programs' pure functions available to relational computed columns
@@ -339,6 +340,77 @@ WILOS_PROGRAMS = {
     "A": make_wilos_a, "B": make_wilos_b, "C": make_wilos_c,
     "D": make_wilos_d, "E": make_wilos_e, "F": make_wilos_f,
 }
+
+
+# --------------------------------------------------------------------------
+# SYN — synthetic compile-throughput stress program (scale knob)
+# --------------------------------------------------------------------------
+
+def synthetic_source(scale: int = 10, stmts_per_loop: int = 700) -> str:
+    """Source text of a batch-application-sized program: ``scale + 2``
+    query loops (rotating the T5 scalar-sum / T1 collection / guarded-sum
+    shapes, plus one fixed correlated nested join) buried in
+    ``stmts_per_loop`` straight-line scalar statements per loop — the shape
+    of real ORM business logic, where rewritable query sites are a sliver
+    of the region tree. Scaling ``scale`` scales program size ~linearly
+    while the rewrite surface stays a handful of loops, which is exactly
+    the regime where delta-driven rule scheduling beats rescan-everything
+    saturation: the exhaustive loop re-visits every block/cond skeleton
+    node every round, the applicability index never enqueues them at all.
+
+    Deterministic text (no randomness), so the lifted IR — and therefore
+    the memo fingerprint and execution outputs — are reproducible."""
+    lines = ["def SYN():", "    z0 = 0.0"]
+    rets: list = []
+    zc = 0
+    n_loops = scale + 2
+    for i in range(n_loops):
+        for j in range(stmts_per_loop):
+            zc += 1
+            k = i * stmts_per_loop + j
+            if j % 7 == 3:
+                lines.append(f"    if z{zc - 1} > {k}:")
+                lines.append(f"        z{zc} = z{zc - 1} + {2 * k + 1}")
+                lines.append("    else:")
+                lines.append(f"        z{zc} = z{zc - 1} - {k + 1}")
+            else:
+                lines.append(f"    z{zc} = z{zc - 1} + {k + 1}")
+        acc = f"acc{i}"
+        rets.append(acc)
+        lines.append(f"    {acc} = 0.0")
+        kind = i % 3
+        if kind == 0:  # scalar aggregation -> T5
+            lines.append(f"    for t{i} in load_all('tasks'):")
+            lines.append(f"        {acc} = {acc} + t{i}.t_hours")
+        elif kind == 1:  # whole-row collection -> T1
+            lines.append(f"    res{i} = []")
+            lines.append(f"    for t{i} in load_all('roles'):")
+            lines.append(f"        res{i}.append(t{i}.r_rank)")
+            lines.append(f"    {acc} = {acc} + len(res{i})")
+        else:  # guarded aggregation -> T2/T5
+            lines.append(f"    for t{i} in load_all('tasks'):")
+            lines.append(f"        if t{i}.t_state == {i % 5}:")
+            lines.append(f"            {acc} = {acc} + t{i}.t_hours")
+    # one fixed (unscaled) correlated nested join for rule-chain depth
+    lines.append("    deep0 = 0.0")
+    lines.append("    for ra in load_all('roles'):")
+    lines.append("        for tb in load_all('tasks'):")
+    lines.append("            if tb.t_role_id == ra.r_id:")
+    lines.append("                deep0 = deep0 + tb.t_hours")
+    rets.append("deep0")
+    lines.append("    return " + ", ".join(rets + [f"z{zc}"]))
+    return "\n".join(lines)
+
+
+def make_synthetic(scale: int = 10, stmts_per_loop: int = 700) -> Program:
+    """Lift :func:`synthetic_source` (runs against :func:`make_wilos_db`
+    tables). The program returns every accumulator plus the final scalar
+    chain value, so batch outputs expose any plan-divergence bit-for-bit."""
+    from .api.lift import lift_source
+    return lift_source(
+        synthetic_source(scale, stmts_per_loop),
+        env={"load_all": load_all, "q": q, "col": col, "param": param,
+             "len": len})
 
 
 # --------------------------------------------------------------------------

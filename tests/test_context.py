@@ -390,7 +390,7 @@ class TestRuleSet:
         base = OptimizerConfig.preset("paper-exp1-3")
         custom = dataclasses.replace(base, rule_set=rules)
         assert base.cache_key() != custom.cache_key()
-        assert ("user-limit" in [n for n, _ in custom._rules_key()])
+        assert ("user-limit" in [fp[0] for fp in custom._rules_key()])
 
     def test_ruleset_registry_operations(self):
         rs = RuleSet.default()
@@ -482,8 +482,9 @@ class TestRuleOrdering:
         """OptimizerConfig.resolve_rules goes through the topological sort:
         a user rule declaring after="T5" fires after T5 even though
         with_rule appends it... and one declaring before="toFIR" jumps the
-        whole built-in pipeline."""
-        first = self._noop("user-first", before=("toFIR",))
+        whole built-in pipeline (it must sit in the `normalize` phase to do
+        so — ordering never crosses phase boundaries)."""
+        first = self._noop("user-first", before=("toFIR",), phase="normalize")
         rules = RuleSet.default().with_rule(first)
         cfg = OptimizerConfig(rule_set=rules)
         names = [r.name for r in cfg.resolve_rules()]
